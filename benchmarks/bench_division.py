@@ -1,0 +1,34 @@
+"""Fig. 4 — model performance vs division number m.
+
+Paper claim: test AUC improves markedly from m=6 to m=12, then gently for
+m=24, 36 (capacity saturates); training cost grows with m.
+"""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import emit, eval_auc, fit_lsplm, load_split
+
+MS = (1, 6, 12, 24)
+
+
+def run():
+    train_cf, test_cf = load_split(day=0)
+    rows = []
+    for m in MS:
+        t0 = time.perf_counter()
+        theta, trace = fit_lsplm(train_cf, m=m, lam=1.0, beta=1.0)
+        wall = time.perf_counter() - t0
+        train_auc = eval_auc(theta, train_cf)
+        test_auc = eval_auc(theta, test_cf)
+        rows.append((
+            f"fig4_division_m{m}",
+            f"{wall * 1e6:.0f}",
+            f"train_auc={train_auc:.4f};test_auc={test_auc:.4f};iters={len(trace)}",
+        ))
+    emit(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,50 @@
+"""Fig. 5 — LS-PLM vs LR across 7 sequential datasets ('days').
+
+Paper claim: LS-PLM consistently beats LR on every dataset (avg +1.4% AUC
+absolute on production data; larger here because the synthetic truth is
+exactly piecewise-linear).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from benchmarks.common import emit, eval_auc, fit_lsplm, load_split
+from repro.core import predict_proba
+from repro.core.lsplm import params_from_theta
+from repro.data import to_dense_batch
+from repro.eval import normalized_entropy, calibration_ratio
+
+DAYS = 7
+
+
+def run():
+    rows = []
+    gaps = []
+    for day in range(DAYS):
+        train_cf, test_cf = load_split(day=day)
+        theta_lr, _ = fit_lsplm(train_cf, m=1, lam=0.0, beta=1.0, iters=30)
+        theta_plm, _ = fit_lsplm(train_cf, m=12, lam=1.0, beta=1.0, iters=70)
+        a_lr = eval_auc(theta_lr, test_cf)
+        a_plm = eval_auc(theta_plm, test_cf)
+        test = to_dense_batch(test_cf)
+        p_plm = np.asarray(predict_proba(params_from_theta(theta_plm),
+                                         jnp.asarray(test.x)))
+        ne = normalized_entropy(test.y, p_plm)
+        cal = calibration_ratio(test.y, p_plm)
+        gaps.append(a_plm - a_lr)
+        rows.append((
+            f"fig5_day{day + 1}", "0",
+            f"auc_lr={a_lr:.4f};auc_lsplm={a_plm:.4f};gap={a_plm - a_lr:+.4f};"
+            f"ne_lsplm={ne:.4f};calibration={cal:.3f}",
+        ))
+    rows.append(("fig5_mean_gap", "0",
+                 f"mean_auc_improvement={float(np.mean(gaps)):+.4f};"
+                 f"consistent={all(g > 0 for g in gaps)}"))
+    emit(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

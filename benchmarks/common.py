@@ -1,0 +1,68 @@
+"""Shared helpers for the paper-table benchmarks.
+
+All benchmarks run on a synthetic workload that mirrors the paper's data
+statistics (sparse features, session/common-feature structure, piecewise-
+linear ground truth) — see DESIGN.md §8 for the simulation rationale.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import CTRBatch, predict_proba
+from repro.core.lsplm import params_from_theta
+from repro.core.objective import smooth_loss_and_grad
+from repro.data import CTRDataConfig, auc, generate, to_dense_batch
+from repro.optim import OWLQNPlus
+
+DATA_CFG = CTRDataConfig(
+    num_user_features=24, num_ad_features=24, noise_features=8,
+    true_regions=4, ads_per_session=4, seed=0,
+)
+TRAIN_SESSIONS = 4000
+TEST_SESSIONS = 800
+
+
+def load_split(day: int = 0):
+    """One 'day' (Table 1): disjoint train/test from the shared truth."""
+    train_cf, _ = generate(DATA_CFG, TRAIN_SESSIONS, seed=100 * day + 1)
+    test_cf, _ = generate(DATA_CFG, TEST_SESSIONS, seed=100 * day + 2)
+    return train_cf, test_cf
+
+
+def fit_lsplm(train_cf, m: int, lam: float, beta: float, iters: int = 70,
+              seed: int = 0):
+    train = to_dense_batch(train_cf)
+    tb = CTRBatch(x=jnp.asarray(train.x), y=jnp.asarray(train.y))
+    d = DATA_CFG.num_features
+    theta0 = jnp.asarray(
+        0.01 * np.random.default_rng(seed).normal(size=(d, 2 * m)), jnp.float32)
+    opt = OWLQNPlus(lambda t: smooth_loss_and_grad(t, tb), lam=lam, beta=beta)
+    theta, trace = opt.run(theta0, max_iters=iters)
+    return theta, trace
+
+
+def eval_auc(theta, cf_batch) -> float:
+    dense = to_dense_batch(cf_batch)
+    p = predict_proba(params_from_theta(theta), jnp.asarray(dense.x))
+    return auc(dense.y, np.asarray(p))
+
+
+def time_fn(fn, *args, warmup: int = 2, iters: int = 10) -> float:
+    """Median wall-clock microseconds per call (blocks on device results)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times) * 1e6)
+
+
+def emit(rows: list[tuple]):
+    for name, us, derived in rows:
+        print(f"{name},{us},{derived}")

@@ -1,0 +1,74 @@
+"""Render EXPERIMENTS.md §Roofline tables from the dry-run artifacts.
+
+  PYTHONPATH=src:. python -m benchmarks.export_roofline_md > benchmarks/ROOFLINE.md
+"""
+from __future__ import annotations
+
+from benchmarks.roofline_report import load
+
+ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def lever(r) -> str:
+    """One sentence: what would move the dominant term down (validated
+    for the hillclimbed pairs in EXPERIMENTS.md §Perf)."""
+    b = r["roofline"]["bottleneck"]
+    shape, arch = r["shape"], r["arch"]
+    moe = arch.startswith(("dbrx", "granite"))
+    if shape == "train_4k" and b == "memory":
+        return ("seq-parallel inter-block activations (validated on qwen: "
+                "-83% mem) + chunked CE over the vocab logits")
+    if shape == "prefill_32k" and b == "memory":
+        return ("flash-attention kernel keeps score blocks in VMEM "
+                "(kernels/flash_attention); larger attn chunks cut "
+                "softmax re-reads")
+    if b == "collective" and shape in ("decode_32k", "long_500k"):
+        base = ("align cache layout with attention sharding "
+                "(attn_shard=head_dim: validated -54% on dbrx)")
+        if moe:
+            base += " + token-gather MoE serving"
+        return base
+    if b == "memory" and shape in ("decode_32k", "long_500k"):
+        return ("int8 KV cache (validated 3.3x on qwen) and batch growth "
+                "to amortise weight reads")
+    if b == "collective":
+        return ("reduce-scatter/all-gather overlap with compute via "
+                "latency-hiding scheduler; fewer resharding boundaries")
+    if b == "compute":
+        return "MXU-aligned kernel tiling; already near compute roofline"
+    return "see §Perf"
+
+
+def fmt(mesh: str, title: str) -> str:
+    recs = load(mesh)
+    recs.sort(key=lambda r: (r["arch"], ORDER.index(r["shape"])))
+    lines = [f"### {title}", ""]
+    lines.append("| arch | shape | mem/chip GiB | t_comp s | t_mem s | "
+                 "t_coll s | bound | useful | MFU bound | lever on dominant term |")
+    lines.append("|---|---|---|---|---|---|---|---|---|---|")
+    for r in recs:
+        rl = r["roofline"]
+        mem = r["memory"]["total_bytes_per_chip"] / 2**30
+        sw = " (SW)" if r.get("sliding_window") else ""
+        lines.append(
+            f"| {r['arch']} | {r['shape']}{sw} | {mem:.2f} | "
+            f"{rl['t_compute_s']:.2e} | {rl['t_memory_s']:.2e} | "
+            f"{rl['t_collective_s']:.2e} | {rl['bottleneck']} | "
+            f"{rl['useful_flops_ratio']:.2f} | {rl['mfu_bound']:.3f} | "
+            f"{lever(r)} |")
+    lines.append("")
+    return "\n".join(lines)
+
+
+def main():
+    print("# Roofline tables (generated from benchmarks/dryrun_*.json)\n")
+    print("(SW) = sliding-window decode variant for attention archs at "
+          "long_500k. Multi-pod rows prove the 512-chip lowering; their "
+          "cost columns are body-once HLO numbers (no probes), see "
+          "EXPERIMENTS.md accounting notes.\n")
+    print(fmt("single", "Single pod — (data=16, model=16), 256 chips"))
+    print(fmt("multi", "Multi-pod — (pod=2, data=16, model=16), 512 chips"))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,140 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import (dry-run device stand-ins).
+
+"""§Perf hillclimb driver: lowers baseline + optimised variants of the
+three chosen (arch x shape) pairs and reports the roofline-term deltas.
+
+  PYTHONPATH=src:. python -m benchmarks.perf_hillclimb --pair dbrx_decode
+  PYTHONPATH=src:. python -m benchmarks.perf_hillclimb --pair qwen_train
+  PYTHONPATH=src:. python -m benchmarks.perf_hillclimb --pair lsplm
+
+Each variant is recorded separately (paper-faithful baseline vs
+beyond-paper optimisation) in benchmarks/perf_results.json.
+"""
+import argparse
+import dataclasses
+import json
+import time
+
+import jax
+
+from repro.configs import get_config
+from repro.launch.dryrun import _costs, analyse, lower_combo
+from repro.launch.mesh import make_production_mesh
+from repro.utils.roofline import Roofline, model_flops_per_chip
+
+OUT = os.path.join(os.path.dirname(__file__), "perf_results.json")
+
+
+def measure(name, cfg, shape, mesh, **lower_kwargs):
+    t0 = time.time()
+    _, compiled, meta = lower_combo(cfg, shape, mesh, **lower_kwargs)
+    rec = analyse(cfg.name, shape, "single", compiled, cfg, meta, mesh,
+                  probes=True, lower_kwargs=lower_kwargs)
+    rec["variant"] = name
+    rec["compile_seconds"] = round(time.time() - t0, 1)
+    r = rec["roofline"]
+    mem = rec["memory"]["total_bytes_per_chip"] / 2**30
+    print(f"[{name}] mem/chip={mem:7.2f}GiB "
+          f"t_comp={r['t_compute_s']:.3e} t_mem={r['t_memory_s']:.3e} "
+          f"t_coll={r['t_collective_s']:.3e} bound={r['bottleneck']}",
+          flush=True)
+    return rec
+
+
+def save(recs):
+    old = []
+    if os.path.exists(OUT):
+        with open(OUT) as f:
+            old = json.load(f)
+    with open(OUT, "w") as f:
+        json.dump(old + recs, f, indent=1)
+
+
+def pair_dbrx_decode():
+    """Most collective-bound: dbrx-132b x decode_32k.
+
+    Iter 1 hypothesis (napkin): baseline all-gathers the FSDP-sharded
+    expert weights at every layer (~40 x 396 MB/chip -> t_coll ~2.6 s
+    measured). token_gather moves the 128 token activations instead ->
+    predicted t_coll collapse.
+    MEASURED: 2.58 -> 1.95 s only — PARTIALLY REFUTED. The compiled HLO
+    warnings show the true dominator: the KV cache (hd-sharded storage)
+    is RESHARDED to heads-over-model at every layer's attention
+    (replicate-then-partition of a 2.7 GB cache slice).
+    Iter 2 hypothesis: attention sharded on head_dim matches the cache
+    layout — removes the cache resharding entirely at the price of a
+    50 MB fp32 scores psum per layer (~2 GB total ≈ 0.04 s)."""
+    mesh = make_production_mesh()
+    cfg = get_config("dbrx-132b")
+    recs = [
+        measure("dbrx_decode/baseline_weight_gather", cfg, "decode_32k", mesh),
+        measure("dbrx_decode/opt1_token_gather", cfg, "decode_32k", mesh,
+                moe_serving_mode="token_gather"),
+    ]
+    save(recs)
+
+
+def pair_dbrx_decode_round2():
+    mesh = make_production_mesh()
+    cfg = get_config("dbrx-132b")
+    recs = [
+        measure("dbrx_decode/opt2_tg+hd_shard",
+                dataclasses.replace(cfg, attn_shard="head_dim"),
+                "decode_32k", mesh, moe_serving_mode="token_gather"),
+    ]
+    save(recs)
+
+
+def pair_qwen_train():
+    """Worst roofline fraction: qwen1.5-32b x train_4k (124.8 GiB/chip).
+
+    Iteration 1 hypothesis: the dominant saved tensor is the per-layer
+    scan carry h (B,S,d) — 64 x 16x4096x5120 x 2B = 42.9 GiB/chip — plus
+    SPMD resharding copies from the H=40-vs-16-shards conflict.
+    (a) sequence parallelism: shard the inter-block h on S over `model`
+        -> saved carries /16 (predict -40 GiB).
+    (b) attention sharded on head_dim (128 % 16 == 0) instead of padded
+        heads -> removes the involuntary-full-remat copies."""
+    mesh = make_production_mesh()
+    cfg = get_config("qwen1.5-32b")
+    recs = [measure("qwen_train/baseline", cfg, "train_4k", mesh)]
+    recs.append(measure(
+        "qwen_train/opt1_seq_parallel",
+        dataclasses.replace(cfg, seq_parallel=True), "train_4k", mesh))
+    recs.append(measure(
+        "qwen_train/opt2_seqpar+hd_shard",
+        dataclasses.replace(cfg, seq_parallel=True, attn_shard="head_dim"),
+        "train_4k", mesh))
+    save(recs)
+
+
+def pair_lsplm():
+    """The paper's own job — see repro.launch.dryrun_lsplm variants."""
+    from repro.launch import dryrun_lsplm as dl
+    recs = []
+    for variant in ("baseline", "bf16_features", "bf16+m5_history",
+                    "cf8_sessions"):
+        rec = dl.run("single", variant=variant)
+        rec["variant"] = f"lsplm/{variant}"
+        r = rec["roofline"]
+        recs.append(rec)
+    save(recs)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--pair", choices=["dbrx_decode", "dbrx_decode2",
+                                       "qwen_train", "lsplm"],
+                    required=True)
+    args = ap.parse_args()
+    {"dbrx_decode": pair_dbrx_decode,
+     "dbrx_decode2": pair_dbrx_decode_round2,
+     "qwen_train": pair_qwen_train,
+     "lsplm": pair_lsplm}[args.pair]()
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

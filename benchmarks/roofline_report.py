@@ -1,0 +1,55 @@
+"""§Roofline table from the dry-run artifacts (benchmarks/dryrun_*.json).
+
+One row per (arch x shape x mesh): the three roofline terms, the dominant
+bottleneck, useful-FLOPs ratio and per-chip memory. Reads the JSON written
+by `repro.launch.dryrun`; does NOT compile anything itself.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+HERE = os.path.dirname(__file__)
+
+
+def load(mesh: str = "single"):
+    path = os.path.join(HERE, f"dryrun_{mesh}.json")
+    if not os.path.exists(path):
+        return []
+    with open(path) as f:
+        recs = json.load(f)
+    # dedupe: keep the LAST successful record per combo (reruns supersede)
+    by_key = {}
+    for r in recs:
+        if "roofline" in r:
+            by_key[(r["arch"], r["shape"], r["mesh"])] = r
+    return list(by_key.values())
+
+
+def rows(mesh: str = "single"):
+    out = []
+    for r in load(mesh):
+        rl = r["roofline"]
+        mem_gib = r["memory"]["total_bytes_per_chip"] / 2**30
+        out.append((
+            f"roofline_{r['arch']}_{r['shape']}_{r['mesh']}",
+            f"{rl['t_bound_s'] * 1e6:.1f}" if "t_bound_s" in rl else
+            f"{max(rl['t_compute_s'], rl['t_memory_s'], rl['t_collective_s']) * 1e6:.1f}",
+            f"t_comp={rl['t_compute_s']:.3e};t_mem={rl['t_memory_s']:.3e};"
+            f"t_coll={rl['t_collective_s']:.3e};bound={rl['bottleneck']};"
+            f"useful={rl['useful_flops_ratio']:.2f};mem_gib={mem_gib:.2f}",
+        ))
+    return out
+
+
+def run():
+    all_rows = rows("single") + rows("multi")
+    for name, us, derived in all_rows:
+        print(f"{name},{us},{derived}")
+    if not all_rows:
+        print("roofline_missing,0,run repro.launch.dryrun first")
+    return all_rows
+
+
+if __name__ == "__main__":
+    run()

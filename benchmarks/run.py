@@ -1,0 +1,40 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows:
+  * bench_division        — Fig. 4 (division number m sweep)
+  * bench_regularization  — Table 2 (L1 / L2,1 sparsity + AUC)
+  * bench_common_feature  — Table 3 (common-feature trick cost)
+  * bench_lr_vs_lsplm     — Fig. 5 (LS-PLM vs LR over 7 datasets)
+  * roofline_report       — §Roofline rows from the dry-run artifacts
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (
+        bench_common_feature,
+        bench_division,
+        bench_lr_vs_lsplm,
+        bench_regularization,
+        bench_router_balance,
+        roofline_report,
+    )
+
+    ok = True
+    for mod in (bench_division, bench_regularization, bench_common_feature,
+                bench_lr_vs_lsplm, bench_router_balance, roofline_report):
+        try:
+            mod.run()
+        except Exception:  # noqa: BLE001
+            ok = False
+            print(f"{mod.__name__},0,ERROR", file=sys.stderr)
+            traceback.print_exc()
+    if not ok:
+        raise SystemExit(1)
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,72 @@
+"""Beyond-paper integration: LS-PLM as a CTR head on a transformer
+backbone, trained with the paper's OWLQN+ for structured sparsity.
+
+    PYTHONPATH=src python examples/lsplm_head_on_backbone.py
+
+A reduced llama-family backbone embeds 'ad text' token sequences; the
+LS-PLM head (repro.core.head) predicts clicks from the pooled embedding.
+OWLQN+ applies L1+L2,1 over the head's (embed_dim x 2m) parameters —
+feature selection now prunes BACKBONE CHANNELS (each embedding channel is
+a group), the transformer-era analogue of the paper's feature selection.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.head import init_head
+from repro.core.lsplm import LSPLMParams, predict_logits_stable
+from repro.data import auc
+from repro.models import forward, init_model
+from repro.optim import OWLQNPlus
+
+
+def main():
+    cfg = get_config("llama3.2-1b").reduced()
+    backbone = init_model(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+
+    # synthetic 'ad text' + clicks whose truth depends nonlinearly on a
+    # subset of embedding channels
+    B, S = 512, 16
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32)
+
+    @jax.jit
+    def features(tokens):
+        logits, _ = forward(backbone, cfg, tokens=tokens, remat=False)
+        # take last-position logits' top slice as a fixed random projection
+        return jnp.tanh(logits[:, -1, : cfg.d_model] * 0.1)
+
+    h = features(tokens)  # (B, d_model)
+    d = h.shape[-1]
+    w_true = rng.normal(size=(16,))
+    sel = rng.choice(d, size=16, replace=False)
+    logit_true = np.tanh(np.asarray(h)[:, sel] @ w_true) * 3.0
+    y = jnp.asarray((rng.random(B) < 1 / (1 + np.exp(-logit_true))).astype(np.float32))
+
+    m = 6
+    head0 = init_head(jax.random.PRNGKey(1), d, num_regions=m)
+    theta0 = jnp.concatenate([head0.u, head0.w], axis=1)
+
+    def loss_and_grad(theta):
+        def nll(theta):
+            params = LSPLMParams(u=theta[:, :m], w=theta[:, m:])
+            lp1, lp0 = predict_logits_stable(params, h)
+            return -jnp.sum(y * lp1 + (1 - y) * lp0)
+        return jax.value_and_grad(nll)(theta)
+
+    opt = OWLQNPlus(loss_and_grad, lam=0.3, beta=0.05)
+    theta, trace = opt.run(theta0, max_iters=60)
+
+    params = LSPLMParams(u=theta[:, :m], w=theta[:, m:])
+    lp1, _ = predict_logits_stable(params, h)
+    a = auc(np.asarray(y), np.exp(np.asarray(lp1)))
+    rows_kept = int((np.abs(np.asarray(theta)).sum(1) > 0).sum())
+    print(f"train AUC = {a:.4f}")
+    print(f"backbone channels kept by L2,1: {rows_kept}/{d} "
+          f"(truth uses 16 channels)")
+    print(f"iterations: {len(trace)}, final nnz = {int(trace[-1].nnz)}")
+
+
+if __name__ == "__main__":
+    main()

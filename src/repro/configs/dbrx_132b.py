@@ -1,0 +1,9 @@
+"""dbrx-132b [moe] — 16 experts top-4, fine-grained [hf:databricks/dbrx-base]."""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="dbrx-132b", family="moe", source="hf:databricks/dbrx-base",
+    num_layers=40, d_model=6144, num_heads=48, num_kv_heads=8,
+    d_ff=10752, vocab_size=100352, head_dim=128,
+    num_experts=16, top_k=4, mlp_type="swiglu", rope_theta=500000.0,
+)

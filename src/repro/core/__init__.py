@@ -1,0 +1,24 @@
+"""LS-PLM core: the paper's primary contribution in JAX."""
+from repro.core.lsplm import (  # noqa: F401
+    LSPLMConfig,
+    LSPLMParams,
+    foe_mixture_proba,
+    init_params,
+    params_from_theta,
+    predict_logits_stable,
+    predict_proba,
+)
+from repro.core.objective import (  # noqa: F401
+    CommonFeatureBatch,
+    CTRBatch,
+    nll,
+    nll_common_feature,
+    objective,
+    smooth_loss_and_grad,
+)
+from repro.core.direction import (  # noqa: F401
+    choose_orthant,
+    descent_direction,
+    directional_derivative,
+    project_orthant,
+)

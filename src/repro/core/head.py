@@ -1,0 +1,33 @@
+"""LS-PLM as a composable prediction head (beyond-paper integration).
+
+``LSPLMHead`` attaches the paper's piecewise-linear mixture (Eq. 2) as a
+classification / CTR head on top of ANY backbone embedding (e.g. the pooled
+hidden state of one of the assigned transformer architectures). This is how
+the paper's contribution is exposed as a first-class framework feature rather
+than a standalone script.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.lsplm import LSPLMParams, predict_logits_stable, predict_proba
+
+
+def init_head(key: jax.Array, embed_dim: int, num_regions: int = 12, scale: float = 2e-2) -> LSPLMParams:
+    ku, kw = jax.random.split(key)
+    return LSPLMParams(
+        u=scale * jax.random.normal(ku, (embed_dim, num_regions)),
+        w=scale * jax.random.normal(kw, (embed_dim, num_regions)),
+    )
+
+
+def head_proba(params: LSPLMParams, h: jax.Array) -> jax.Array:
+    """p(y=1 | h) for backbone features h (..., embed_dim)."""
+    return predict_proba(params, h)
+
+
+def head_nll(params: LSPLMParams, h: jax.Array, y: jax.Array) -> jax.Array:
+    log_p1, log_p0 = predict_logits_stable(params, h)
+    y = y.astype(log_p1.dtype)
+    return -jnp.mean(y * log_p1 + (1.0 - y) * log_p0)

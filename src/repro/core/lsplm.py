@@ -1,0 +1,128 @@
+"""LS-PLM model (Gai et al. 2017, Eq. 1/2).
+
+p(y=1|x) = g( sum_j  sigma(u_j^T x) * eta(w_j^T x) )
+
+The common special case (Eq. 2) uses softmax dividing, sigmoid fitting and
+g = identity; that is the production formulation and the default here.
+
+Parameters are kept as a pytree ``LSPLMParams(u, w)`` with
+
+    u : (d, m)  dividing ("router") weights
+    w : (d, m)  fitting  ("expert") weights
+
+i.e. Theta = concat([u, w], axis=1) in R^{d x 2m}: each *feature row* owns 2m
+parameters, which is exactly the L2,1 group used by the paper's regulariser.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class LSPLMParams(NamedTuple):
+    """Model parameters. Both leaves have shape (d, m)."""
+
+    u: jax.Array
+    w: jax.Array
+
+    @property
+    def theta(self) -> jax.Array:
+        """The paper's Theta in R^{d x 2m} (feature-row major)."""
+        return jnp.concatenate([self.u, self.w], axis=-1)
+
+
+def params_from_theta(theta: jax.Array) -> LSPLMParams:
+    m2 = theta.shape[-1]
+    assert m2 % 2 == 0, "Theta last dim must be 2m"
+    m = m2 // 2
+    return LSPLMParams(u=theta[..., :m], w=theta[..., m:])
+
+
+@dataclasses.dataclass(frozen=True)
+class LSPLMConfig:
+    num_features: int  # d
+    num_regions: int = 12  # m, the paper's division number (Fig. 4: best 12)
+    # generalised form hooks (Eq. 1). "softmax"/"sigmoid"/"identity".
+    dividing: str = "softmax"
+    fitting: str = "sigmoid"
+    link: str = "identity"
+    dtype: jnp.dtype = jnp.float32
+
+
+def init_params(cfg: LSPLMConfig, key: jax.Array, scale: float = 1e-2) -> LSPLMParams:
+    ku, kw = jax.random.split(key)
+    shape = (cfg.num_features, cfg.num_regions)
+    return LSPLMParams(
+        u=(scale * jax.random.normal(ku, shape)).astype(cfg.dtype),
+        w=(scale * jax.random.normal(kw, shape)).astype(cfg.dtype),
+    )
+
+
+def _dividing_fn(name: str) -> Callable[[jax.Array], jax.Array]:
+    if name == "softmax":
+        return partial(jax.nn.softmax, axis=-1)
+    if name == "identity":
+        return lambda z: z
+    raise ValueError(f"unknown dividing fn {name!r}")
+
+
+def _fitting_fn(name: str) -> Callable[[jax.Array], jax.Array]:
+    if name == "sigmoid":
+        return jax.nn.sigmoid
+    if name == "identity":
+        return lambda z: z
+    raise ValueError(f"unknown fitting fn {name!r}")
+
+
+def region_logits(params: LSPLMParams, x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Return (x @ u, x @ w), each (..., m). The §3.2 hot spot."""
+    return x @ params.u, x @ params.w
+
+
+def predict_proba(
+    params: LSPLMParams, x: jax.Array, cfg: LSPLMConfig | None = None
+) -> jax.Array:
+    """p(y=1|x) per Eq. 2 (or the generalised Eq. 1 via cfg). x: (..., d)."""
+    zu, zw = region_logits(params, x)
+    if cfg is None:
+        gate = jax.nn.softmax(zu, axis=-1)
+        fit = jax.nn.sigmoid(zw)
+    else:
+        gate = _dividing_fn(cfg.dividing)(zu)
+        fit = _fitting_fn(cfg.fitting)(zw)
+    p = jnp.sum(gate * fit, axis=-1)
+    if cfg is not None and cfg.link != "identity":
+        raise ValueError(f"unknown link {cfg.link!r}")
+    return p
+
+
+def predict_logits_stable(params: LSPLMParams, x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Numerically-stable pieces for the NLL (Eq. 5).
+
+    Returns (log_p1, log_p0) computed fully in log space:
+        log p1 = logsumexp_i( log_softmax_i(zu) + log_sigmoid(zw_i) )
+        log p0 = logsumexp_i( log_softmax_i(zu) + log_sigmoid(-zw_i) )
+    This avoids log(0) for saturated sigmoids — essential with L1-driven
+    large weights and for the optimizer's line search.
+    """
+    zu, zw = region_logits(params, x)
+    log_gate = jax.nn.log_softmax(zu, axis=-1)
+    log_p1 = jax.nn.logsumexp(log_gate + jax.nn.log_sigmoid(zw), axis=-1)
+    log_p0 = jax.nn.logsumexp(log_gate + jax.nn.log_sigmoid(-zw), axis=-1)
+    return log_p1, log_p0
+
+
+def foe_mixture_proba(params: LSPLMParams, x: jax.Array) -> jax.Array:
+    """Eq. 3 (FOE / mixed-LR view): sum_i p(z=i|x) p(y=1|z=i,x).
+
+    Identical to ``predict_proba`` by construction; kept as an explicit
+    equivalence witness for tests.
+    """
+    zu, zw = region_logits(params, x)
+    p_z = jax.nn.softmax(zu, axis=-1)  # p(z=i|x)
+    p_y = jax.nn.sigmoid(zw)  # p(y=1|z=i,x)
+    return jnp.einsum("...m,...m->...", p_z, p_y)

@@ -1,0 +1,90 @@
+"""Objective Eq. 4/5: f(Theta) = NLL + lambda*||Theta||_{2,1} + beta*||Theta||_1.
+
+All functions operate on Theta as a single (d, 2m) array (the paper's
+parameter layout; feature rows are L2,1 groups). The smooth part (NLL) is
+differentiable everywhere; the regularisers are handled by the optimizer via
+directional derivatives (Eq. 9), so ``smooth_loss_and_grad`` is what the
+optimizer consumes.
+
+Supports the common-feature trick (§3.2): when a batch carries
+(x_common [G,d_c], session_id [B]) alongside x_noncommon [B,d_nc], the
+common part of the dot products is computed once per session group and
+gathered per sample (Eq. 13).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import regularizers
+from repro.core.lsplm import LSPLMParams, params_from_theta, predict_logits_stable
+
+
+class CTRBatch(NamedTuple):
+    """A plain (uncompressed) batch."""
+
+    x: jax.Array  # (B, d) dense or pre-embedded sparse features
+    y: jax.Array  # (B,) in {0, 1}
+    weight: jax.Array | None = None  # (B,) optional sample weights
+
+
+class CommonFeatureBatch(NamedTuple):
+    """Compressed batch per §3.2 (Eq. 13).
+
+    Feature space is split: the first ``d_c`` feature columns are "common"
+    (user features shared within one page-view session), the remaining
+    ``d_nc`` are per-sample (ad features). x = [x_common ; x_noncommon].
+    """
+
+    x_common: jax.Array  # (G, d_c)   one row per session group
+    x_noncommon: jax.Array  # (B, d_nc)
+    session_id: jax.Array  # (B,) int in [0, G)
+    y: jax.Array  # (B,)
+    weight: jax.Array | None = None
+
+
+def _nll_from_logps(log_p1, log_p0, y, weight):
+    per = -(y * log_p1 + (1.0 - y) * log_p0)
+    if weight is not None:
+        per = per * weight
+    return jnp.sum(per)
+
+
+def nll(theta: jax.Array, batch: CTRBatch) -> jax.Array:
+    """Eq. 5 — total (summed) negative log-likelihood."""
+    params = params_from_theta(theta)
+    log_p1, log_p0 = predict_logits_stable(params, batch.x)
+    return _nll_from_logps(log_p1, log_p0, batch.y.astype(log_p1.dtype), batch.weight)
+
+
+def nll_common_feature(theta: jax.Array, batch: CommonFeatureBatch) -> jax.Array:
+    """Eq. 5 evaluated with the common-feature decomposition (Eq. 13).
+
+    z = x @ Theta = x_c @ Theta_c  (once per group, gathered) + x_nc @ Theta_nc
+    """
+    d_c = batch.x_common.shape[-1]
+    theta_c, theta_nc = theta[:d_c], theta[d_c:]
+    z_c = batch.x_common @ theta_c  # (G, 2m) — computed ONCE per session
+    z = z_c[batch.session_id] + batch.x_noncommon @ theta_nc  # (B, 2m)
+    m = theta.shape[-1] // 2
+    zu, zw = z[..., :m], z[..., m:]
+    log_gate = jax.nn.log_softmax(zu, axis=-1)
+    log_p1 = jax.nn.logsumexp(log_gate + jax.nn.log_sigmoid(zw), axis=-1)
+    log_p0 = jax.nn.logsumexp(log_gate + jax.nn.log_sigmoid(-zw), axis=-1)
+    return _nll_from_logps(log_p1, log_p0, batch.y.astype(log_p1.dtype), batch.weight)
+
+
+def objective(
+    theta: jax.Array, batch, lam: float, beta: float, *, common_feature: bool = False
+) -> jax.Array:
+    """f(Theta), Eq. 4. Used by tests and the line search."""
+    loss = nll_common_feature(theta, batch) if common_feature else nll(theta, batch)
+    return loss + lam * regularizers.l21_norm(theta) + beta * regularizers.l1_norm(theta)
+
+
+def smooth_loss_and_grad(theta: jax.Array, batch, *, common_feature: bool = False):
+    """(loss(Theta), grad loss(Theta)) for the smooth NLL part only."""
+    fn = nll_common_feature if common_feature else nll
+    return jax.value_and_grad(fn)(theta, batch)

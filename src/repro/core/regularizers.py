@@ -1,0 +1,31 @@
+"""Regularisers from Eq. 4: elementwise L1 and row-group L2,1.
+
+The L2,1 group is a *feature row* of Theta (all 2m parameters owned by one
+input feature): ||Theta||_{2,1} = sum_i sqrt(sum_j Theta_ij^2).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def l1_norm(theta: jax.Array) -> jax.Array:
+    return jnp.sum(jnp.abs(theta))
+
+
+def row_norms(theta: jax.Array) -> jax.Array:
+    """(d,) row L2 norms; rows are the feature-group axis 0."""
+    return jnp.sqrt(jnp.sum(theta * theta, axis=tuple(range(1, theta.ndim))))
+
+
+def l21_norm(theta: jax.Array) -> jax.Array:
+    return jnp.sum(row_norms(theta))
+
+
+def nonzero_count(theta: jax.Array, tol: float = 0.0) -> jax.Array:
+    return jnp.sum(jnp.abs(theta) > tol)
+
+
+def nonzero_feature_count(theta: jax.Array, tol: float = 0.0) -> jax.Array:
+    """#features with any surviving parameter (Table 2's '#features')."""
+    return jnp.sum(row_norms(theta) > tol)

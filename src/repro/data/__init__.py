@@ -1,0 +1,21 @@
+from repro.data.synthetic_ctr import (  # noqa: F401
+    CTRDataConfig,
+    auc,
+    generate,
+    to_dense_batch,
+    train_val_test,
+)
+from repro.data.common_feature import (  # noqa: F401
+    flops_per_eval,
+    memory_bytes,
+    pad_to_multiple,
+    shard_sessions,
+)
+from repro.data.sparse import (  # noqa: F401
+    SparseCTRBatch,
+    generate_sparse,
+    sparse_loss_and_grad,
+    sparse_nll,
+    sparse_predict,
+)
+from repro.data.tokens import TokenStream, host_sharded_stream  # noqa: F401

@@ -1,0 +1,80 @@
+"""Common-feature trick (§3.2) batch utilities.
+
+The trick has three production aspects (paper list, §3.2):
+  1. group samples of one session on the same worker,
+  2. store common features once,
+  3. compute the common part of Theta^T x once per session.
+
+``shard_sessions`` implements (1) for the data-parallel mesh axis: sessions
+are assigned to workers as whole units so the per-worker gather stays local.
+(2)/(3) live in the ``CommonFeatureBatch`` format + ``nll_common_feature``.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.objective import CommonFeatureBatch
+
+
+def memory_bytes(batch: CommonFeatureBatch, compressed: bool) -> int:
+    """Storage cost of the two formats (Table 3 'Memory cost/node')."""
+    xc = np.asarray(batch.x_common)
+    xnc = np.asarray(batch.x_noncommon)
+    sid = np.asarray(batch.session_id)
+    if compressed:
+        return xc.nbytes + xnc.nbytes + sid.nbytes
+    # decompressed: user block replicated per sample
+    return xc.dtype.itemsize * xnc.shape[0] * xc.shape[1] + xnc.nbytes
+
+
+def flops_per_eval(batch: CommonFeatureBatch, m: int, compressed: bool) -> int:
+    """Dot-product FLOPs of one loss/grad evaluation (Table 3 'Time/iter').
+
+    Common part: 2 * G * d_c * 2m (once per session) vs 2 * B * d_c * 2m.
+    """
+    G, d_c = np.asarray(batch.x_common).shape
+    B, d_nc = np.asarray(batch.x_noncommon).shape
+    common_rows = G if compressed else B
+    return 2 * (common_rows * d_c + B * d_nc) * 2 * m
+
+
+def shard_sessions(batch: CommonFeatureBatch, num_shards: int) -> list[CommonFeatureBatch]:
+    """Partition a compressed batch into per-worker batches, keeping
+    sessions whole (aspect 1). Sessions are dealt round-robin by size
+    balance; session_ids are re-indexed locally."""
+    sid = np.asarray(batch.session_id)
+    G = int(sid.max()) + 1 if sid.size else 0
+    assignment = np.arange(G) % num_shards
+    shards = []
+    for s in range(num_shards):
+        sessions = np.nonzero(assignment == s)[0]
+        remap = -np.ones(G, dtype=np.int64)
+        remap[sessions] = np.arange(len(sessions))
+        mask = np.isin(sid, sessions)
+        shards.append(
+            CommonFeatureBatch(
+                x_common=np.asarray(batch.x_common)[sessions],
+                x_noncommon=np.asarray(batch.x_noncommon)[mask],
+                session_id=remap[sid[mask]].astype(np.int32),
+                y=np.asarray(batch.y)[mask],
+            )
+        )
+    return shards
+
+
+def pad_to_multiple(batch: CommonFeatureBatch, multiple: int) -> CommonFeatureBatch:
+    """Pad samples (weight-0) so B divides the data axis — SPMD needs equal
+    shards; padding carries zero weight so the loss is unchanged."""
+    B = np.asarray(batch.y).shape[0]
+    pad = (-B) % multiple
+    w = np.ones(B, dtype=np.float32)
+    if pad == 0 and batch.weight is None:
+        return CommonFeatureBatch(*batch[:4], weight=w)
+    xnc = np.asarray(batch.x_noncommon)
+    return CommonFeatureBatch(
+        x_common=np.asarray(batch.x_common),
+        x_noncommon=np.concatenate([xnc, np.zeros((pad, xnc.shape[1]), xnc.dtype)]),
+        session_id=np.concatenate([np.asarray(batch.session_id), np.zeros(pad, np.int32)]),
+        y=np.concatenate([np.asarray(batch.y), np.zeros(pad, np.float32)]),
+        weight=np.concatenate([w, np.zeros(pad, np.float32)]),
+    )

@@ -1,0 +1,164 @@
+"""Sparse feature substrate — the paper's actual input format.
+
+Production CTR features are one-hot/multi-hot IDs: each sample has a
+small set of active feature ids (tens) out of millions of columns. Dense
+(B, d) matrices waste d/active memory and FLOPs. We store padded COO per
+sample:
+
+    ids  (B, K) int32   active column ids (pad with id = d, weight 0)
+    vals (B, K) float32 feature values
+
+and compute z = x @ Theta as a gather + weighted segment-sum:
+    z[b] = sum_k vals[b,k] * Theta[ids[b,k], :]
+
+This is TPU-native (dense gather + reductions — no hash maps, DESIGN.md
+§3), exactly how embedding lookups work in production CTR systems. The
+gradient wrt Theta is the transposed scatter-add, which JAX derives
+automatically from `take`/`segment_sum`.
+
+The common-feature trick composes: user ids are stored once per session
+(G, Ku) and gathered per sample, ad ids per sample (B, Ka).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class SparseCTRBatch(NamedTuple):
+    """Sparse analogue of CommonFeatureBatch (padded COO)."""
+
+    user_ids: jax.Array  # (G, Ku) int32, pad = num_features
+    user_vals: jax.Array  # (G, Ku)
+    ad_ids: jax.Array  # (B, Ka)
+    ad_vals: jax.Array  # (B, Ka)
+    session_id: jax.Array  # (B,)
+    y: jax.Array  # (B,)
+    num_features: int = 0  # d (static)
+
+
+def sparse_matmul(ids: jax.Array, vals: jax.Array, theta: jax.Array) -> jax.Array:
+    """(N, K) ids/vals  x  Theta (d+1, 2m) -> (N, 2m).
+
+    Theta must carry ONE trailing pad row (all zeros) so pad ids hit it.
+    """
+    rows = jnp.take(theta, ids, axis=0)  # (N, K, 2m)
+    return jnp.einsum("nk,nkm->nm", vals.astype(rows.dtype), rows)
+
+
+def pad_theta(theta: jax.Array) -> jax.Array:
+    """Append the zero pad row (id == d)."""
+    return jnp.concatenate([theta, jnp.zeros((1, theta.shape[1]), theta.dtype)])
+
+
+def sparse_nll(theta: jax.Array, batch: SparseCTRBatch) -> jax.Array:
+    """Eq. 5 on sparse features with the common-feature trick (Eq. 13):
+    user dot-products computed ONCE per session, gathered per sample."""
+    tp = pad_theta(theta)
+    z_user = sparse_matmul(batch.user_ids, batch.user_vals, tp)  # (G, 2m)
+    z_ad = sparse_matmul(batch.ad_ids, batch.ad_vals, tp)  # (B, 2m)
+    z = z_user[batch.session_id] + z_ad
+    m = theta.shape[-1] // 2
+    zu, zw = z[..., :m], z[..., m:]
+    log_gate = jax.nn.log_softmax(zu, axis=-1)
+    log_p1 = jax.nn.logsumexp(log_gate + jax.nn.log_sigmoid(zw), axis=-1)
+    log_p0 = jax.nn.logsumexp(log_gate + jax.nn.log_sigmoid(-zw), axis=-1)
+    y = batch.y.astype(log_p1.dtype)
+    return -jnp.sum(y * log_p1 + (1.0 - y) * log_p0)
+
+
+def sparse_loss_and_grad(theta: jax.Array, batch: SparseCTRBatch):
+    return jax.value_and_grad(sparse_nll)(theta, batch)
+
+
+def sparse_predict(theta: jax.Array, batch: SparseCTRBatch) -> jax.Array:
+    tp = pad_theta(theta)
+    z = (sparse_matmul(batch.user_ids, batch.user_vals, tp)[batch.session_id]
+         + sparse_matmul(batch.ad_ids, batch.ad_vals, tp))
+    m = theta.shape[-1] // 2
+    gate = jax.nn.softmax(z[..., :m], axis=-1)
+    fit = jax.nn.sigmoid(z[..., m:])
+    return jnp.sum(gate * fit, axis=-1)
+
+
+# ----------------------------------------------------------------- generator
+def generate_sparse(
+    num_features: int = 1_000_000,
+    num_user_features_range: tuple[int, int] = (600_000, 1_000_000),
+    sessions: int = 512,
+    ads_per_session: int = 4,
+    active_user: int = 24,
+    active_ad: int = 12,
+    seed: int = 0,
+) -> SparseCTRBatch:
+    """Million-column sparse CTR batch with session structure. Ground
+    truth: piecewise-linear over a planted low-dim projection of the
+    active ids (so LS-PLM has signal without densifying anything)."""
+    rng = np.random.default_rng(seed)
+    d = num_features
+    G, A = sessions, ads_per_session
+    B = G * A
+    user_lo = num_user_features_range[0]
+
+    def zipf_ids(lo, hi, shape):
+        """Power-law id draws: hot ids recur across splits (real CTR
+        feature traffic is Zipf — uniform draws over millions of columns
+        would make train/test supports disjoint and learning impossible)."""
+        u = rng.random(shape)
+        r = (hi - lo) * (u ** 10.0)  # very hot head at lo (CTR id traffic)
+        return (lo + r).astype(np.int64)
+
+    user_ids = zipf_ids(user_lo, d, (G, active_user))
+    ad_ids = zipf_ids(0, user_lo, (B, active_ad))
+    user_vals = rng.normal(size=(G, active_user)).astype(np.float32) / np.sqrt(active_user)
+    ad_vals = rng.normal(size=(B, active_ad)).astype(np.float32) / np.sqrt(active_ad)
+    session_id = np.repeat(np.arange(G, dtype=np.int32), A)
+
+    # planted truth: every id carries a latent weight (deterministic hash
+    # of the id, so hot ids have stable semantics across splits); the
+    # USER side selects one of `regions` latent regions which modulates
+    # the ad-side weights — exactly the piecewise-linear family (Eq. 2).
+    regions = 4
+
+    def id_weight(ids, salt):
+        h = (ids.astype(np.uint64) * np.uint64(2654435761) + np.uint64(salt))
+        return (((h % np.uint64(10007)).astype(np.float64) / 10007.0) * 4.0
+                - 2.0).astype(np.float32)
+
+    region_score = np.stack([
+        (user_vals * id_weight(user_ids, 31 * (r + 1))).sum(-1)
+        for r in range(regions)], axis=-1)  # (G, regions)
+    region = np.argmax(region_score, axis=-1)[session_id]  # (B,)
+    gains = np.asarray([2.5, -2.5, 1.0, -1.0], np.float32)[region]
+    base = (ad_vals * id_weight(ad_ids, 7)).sum(-1) \
+        + 0.5 * (user_vals * id_weight(user_ids, 13)).sum(-1)[session_id]
+    logits = gains * base
+    p = 1 / (1 + np.exp(-logits))
+    y = (rng.random(B) < p).astype(np.float32)
+
+    return SparseCTRBatch(
+        user_ids=jnp.asarray(user_ids, jnp.int32),
+        user_vals=jnp.asarray(user_vals),
+        ad_ids=jnp.asarray(ad_ids, jnp.int32),
+        ad_vals=jnp.asarray(ad_vals),
+        session_id=jnp.asarray(session_id),
+        y=jnp.asarray(y),
+        num_features=d,
+    )
+
+
+def to_dense(batch: SparseCTRBatch) -> np.ndarray:
+    """Densify (tests only — production never does this)."""
+    d = batch.num_features
+    G = np.asarray(batch.user_ids).shape[0]
+    B = np.asarray(batch.ad_ids).shape[0]
+    x = np.zeros((B, d), np.float32)
+    uid = np.asarray(batch.user_ids)[np.asarray(batch.session_id)]
+    uval = np.asarray(batch.user_vals)[np.asarray(batch.session_id)]
+    np.add.at(x, (np.arange(B)[:, None], uid), uval)
+    np.add.at(x, (np.arange(B)[:, None], np.asarray(batch.ad_ids)),
+              np.asarray(batch.ad_vals))
+    return x

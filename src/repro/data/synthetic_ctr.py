@@ -1,0 +1,144 @@
+"""Synthetic sparse CTR data with the paper's session / common-feature
+structure (simulating the Alibaba production gate — DESIGN.md §8).
+
+Generative story (mirrors §3.2 / Fig. 3):
+  * A *session* = one user page-view showing ``ads_per_session`` ads.
+  * User features (profile + behaviour) are COMMON across the session's
+    samples; ad features are per-sample.
+  * Ground-truth click probability is PIECEWISE-LINEAR: the user vector
+    selects one of ``true_regions`` latent regions (argmax of a linear
+    gating), and each region has its own linear logit over the full
+    feature vector — i.e. exactly the function class LS-PLM (but not LR)
+    can represent. A fraction of features is pure noise so that L1/L2,1
+    feature selection has signal to find.
+
+Features are one-hot/multi-hot sparse in production; we emit dense float
+arrays whose columns are sparse Bernoulli activations scaled to unit
+variance — same statistics, JAX-friendly.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.objective import CommonFeatureBatch, CTRBatch
+
+
+@dataclasses.dataclass(frozen=True)
+class CTRDataConfig:
+    num_user_features: int = 48  # common block d_c
+    num_ad_features: int = 48  # per-sample block d_nc
+    density: float = 0.15  # fraction of active features per sample
+    true_regions: int = 4  # ground-truth piecewise regions
+    noise_features: int = 16  # appended pure-noise columns (in ad block)
+    ads_per_session: int = 4
+    label_noise: float = 0.02
+    seed: int = 0
+
+    @property
+    def num_features(self) -> int:
+        return self.num_user_features + self.num_ad_features + self.noise_features
+
+
+def _sparse_block(rng: np.random.Generator, n: int, d: int, density: float) -> np.ndarray:
+    mask = rng.random((n, d)) < density
+    vals = rng.normal(size=(n, d)) / np.sqrt(max(density * d, 1.0))
+    return (mask * vals).astype(np.float32)
+
+
+class PiecewiseLinearTruth:
+    """The planted ground-truth model."""
+
+    def __init__(self, cfg: CTRDataConfig, rng: np.random.Generator):
+        d = cfg.num_features
+        du = cfg.num_user_features
+        self.gate = rng.normal(size=(du, cfg.true_regions)).astype(np.float32)
+        w = rng.normal(size=(d, cfg.true_regions)).astype(np.float32) * 2.0
+        # noise features carry no signal
+        if cfg.noise_features:
+            w[-cfg.noise_features:, :] = 0.0
+        self.w = w
+        self.bias = rng.normal(size=(cfg.true_regions,)).astype(np.float32) * 0.5
+        self.du = du
+
+    def proba(self, x: np.ndarray) -> np.ndarray:
+        region = np.argmax(x[:, : self.du] @ self.gate, axis=-1)
+        logits = np.einsum("nd,dn->n", x, self.w[:, region]) + self.bias[region]
+        return 1.0 / (1.0 + np.exp(-logits))
+
+
+def generate(
+    cfg: CTRDataConfig, num_sessions: int, seed: int | None = None
+) -> tuple[CommonFeatureBatch, np.ndarray]:
+    """Returns (compressed common-feature batch, dense x for reference).
+
+    The compressed batch stores user features once per session (G rows);
+    the dense x materialises them per sample (B = G * ads_per_session rows)
+    — exactly the two storage formats of Table 3.
+    """
+    rng = np.random.default_rng(cfg.seed if seed is None else seed)
+    # The planted truth depends ONLY on cfg.seed so that different splits
+    # ("days", Table 1) share one ground-truth model.
+    truth = PiecewiseLinearTruth(cfg, np.random.default_rng(cfg.seed + 7919))
+    G, A = num_sessions, cfg.ads_per_session
+    B = G * A
+    x_user = _sparse_block(rng, G, cfg.num_user_features, cfg.density)
+    x_ad = _sparse_block(rng, B, cfg.num_ad_features, cfg.density)
+    x_noise = _sparse_block(rng, B, cfg.noise_features, cfg.density)
+    x_nc = np.concatenate([x_ad, x_noise], axis=1)
+    session_id = np.repeat(np.arange(G, dtype=np.int32), A)
+
+    x_dense = np.concatenate([x_user[session_id], x_nc], axis=1)
+    p = truth.proba(x_dense)
+    p = (1 - cfg.label_noise) * p + cfg.label_noise * 0.5
+    y = (rng.random(B) < p).astype(np.float32)
+
+    batch = CommonFeatureBatch(
+        x_common=x_user, x_noncommon=x_nc, session_id=session_id, y=y
+    )
+    return batch, x_dense
+
+
+def to_dense_batch(batch: CommonFeatureBatch) -> CTRBatch:
+    """Decompress (the 'Without CF' storage format of Table 3)."""
+    x = np.concatenate(
+        [np.asarray(batch.x_common)[np.asarray(batch.session_id)],
+         np.asarray(batch.x_noncommon)], axis=1
+    )
+    return CTRBatch(x=x, y=np.asarray(batch.y))
+
+
+def train_val_test(
+    cfg: CTRDataConfig, sessions: tuple[int, int, int], seed: int = 0
+):
+    """Disjoint 'days' as in Table 1 (7:1:1 style splits are the caller's
+    choice of session counts)."""
+    out = []
+    for i, n in enumerate(sessions):
+        out.append(generate(cfg, n, seed=seed * 1000 + i))
+    return out
+
+
+def auc(y_true: np.ndarray, scores: np.ndarray) -> float:
+    """Rank-based AUC (Fawcett 2006), ties handled by midrank."""
+    y_true = np.asarray(y_true).ravel()
+    scores = np.asarray(scores).ravel()
+    order = np.argsort(scores, kind="mergesort")
+    ranks = np.empty_like(order, dtype=np.float64)
+    sorted_scores = scores[order]
+    n = len(scores)
+    i = 0
+    r = 1.0
+    while i < n:
+        j = i
+        while j + 1 < n and sorted_scores[j + 1] == sorted_scores[i]:
+            j += 1
+        ranks[order[i : j + 1]] = 0.5 * (r + r + (j - i))
+        r += j - i + 1
+        i = j + 1
+    n_pos = y_true.sum()
+    n_neg = n - n_pos
+    if n_pos == 0 or n_neg == 0:
+        return 0.5
+    return float((ranks[y_true == 1].sum() - n_pos * (n_pos + 1) / 2) / (n_pos * n_neg))

@@ -1,0 +1,1 @@
+from repro.eval.metrics import calibration_ratio, log_loss, normalized_entropy, report  # noqa: F401

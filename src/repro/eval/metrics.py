@@ -1,0 +1,45 @@
+"""CTR evaluation metrics beyond AUC (industry standard set).
+
+* log-loss (per-sample NLL) — the paper's training objective, reported
+  per sample so datasets of different size compare;
+* calibration ratio — sum(predicted CTR) / sum(clicks); online ad systems
+  require this near 1.0 (bids are priced off predicted CTR);
+* normalised entropy (He et al. 2014, the Facebook baseline the paper
+  cites) — log-loss normalised by the entropy of the base rate.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def log_loss(y: np.ndarray, p: np.ndarray, eps: float = 1e-7) -> float:
+    y = np.asarray(y, np.float64).ravel()
+    p = np.clip(np.asarray(p, np.float64).ravel(), eps, 1 - eps)
+    return float(-(y * np.log(p) + (1 - y) * np.log(1 - p)).mean())
+
+
+def calibration_ratio(y: np.ndarray, p: np.ndarray) -> float:
+    y = np.asarray(y, np.float64).ravel()
+    p = np.asarray(p, np.float64).ravel()
+    clicks = y.sum()
+    return float(p.sum() / clicks) if clicks else float("inf")
+
+
+def normalized_entropy(y: np.ndarray, p: np.ndarray) -> float:
+    y = np.asarray(y, np.float64).ravel()
+    base = y.mean()
+    if base in (0.0, 1.0):
+        return float("inf")
+    h_base = -(base * np.log(base) + (1 - base) * np.log(1 - base))
+    return log_loss(y, p) / h_base
+
+
+def report(y: np.ndarray, p: np.ndarray) -> dict:
+    from repro.data.synthetic_ctr import auc
+
+    return {
+        "auc": auc(np.asarray(y), np.asarray(p)),
+        "log_loss": log_loss(y, p),
+        "calibration": calibration_ratio(y, p),
+        "normalized_entropy": normalized_entropy(y, p),
+    }

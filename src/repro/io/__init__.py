@@ -1,0 +1,1 @@
+from repro.io.checkpoint import load, save  # noqa: F401

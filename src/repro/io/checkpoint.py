@@ -1,0 +1,52 @@
+"""Checkpointing substrate: flat-npz pytree save/restore.
+
+Works for LS-PLM Theta, OWLQN state (incl. LBFGS history) and transformer
+param trees. Arrays are gathered to host (production note: on a real pod
+each host writes its addressable shards; the npz format is the CPU-sim
+stand-in for that)."""
+from __future__ import annotations
+
+import os
+
+import jax
+import numpy as np
+
+
+def _flatten(tree, prefix=""):
+    out = {}
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out.update(_flatten(v, f"{prefix}{k}/"))
+    elif isinstance(tree, (list, tuple)) and not hasattr(tree, "_fields"):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}{i}/"))
+    elif hasattr(tree, "_fields"):  # NamedTuple
+        for k in tree._fields:
+            out.update(_flatten(getattr(tree, k), f"{prefix}{k}/"))
+    else:
+        out[prefix.rstrip("/")] = np.asarray(jax.device_get(tree))
+    return out
+
+
+def save(path: str, tree) -> None:
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    np.savez(path, **_flatten(tree))
+
+
+def load(path: str, like):
+    """Restore into the structure of `like` (same treedef)."""
+    data = np.load(path)
+    flat = dict(data.items())
+
+    def rebuild(tree, prefix=""):
+        if isinstance(tree, dict):
+            return {k: rebuild(v, f"{prefix}{k}/") for k, v in tree.items()}
+        if hasattr(tree, "_fields"):
+            return type(tree)(*(rebuild(getattr(tree, k), f"{prefix}{k}/")
+                                for k in tree._fields))
+        if isinstance(tree, (list, tuple)):
+            return type(tree)(rebuild(v, f"{prefix}{i}/")
+                              for i, v in enumerate(tree))
+        return flat[prefix.rstrip("/")]
+
+    return rebuild(like)

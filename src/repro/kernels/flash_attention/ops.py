@@ -1,0 +1,17 @@
+"""Jit'd public wrapper with backend dispatch (TPU kernel / jnp chunked)."""
+import jax
+
+from repro.kernels.flash_attention.flash_attention import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+def causal_attention(q, k, v, *, use_kernel: bool | None = None,
+                     interpret: bool = False, block_q: int = 512,
+                     block_k: int = 512):
+    if use_kernel is None:
+        use_kernel = jax.default_backend() == "tpu"
+    if use_kernel or interpret:
+        return flash_attention(q, k, v, causal=True, block_q=block_q,
+                               block_k=block_k, interpret=interpret)
+    from repro.models.layers import chunked_causal_attention
+    return chunked_causal_attention(q, k, v)

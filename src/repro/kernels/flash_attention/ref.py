@@ -1,0 +1,16 @@
+"""Pure-jnp oracle: materialised-scores attention."""
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal: bool = True):
+    """q/k/v (B,S,H,hd) -> (B,S,H,hd), fp32 softmax."""
+    B, S, H, hd = q.shape
+    s = jnp.einsum("bqhd,bshd->bhqs", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * hd ** -0.5
+    if causal:
+        mask = jnp.tril(jnp.ones((S, S), bool))
+        s = jnp.where(mask[None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqs,bshd->bqhd", p, v.astype(jnp.float32))
+    return o.astype(q.dtype)

@@ -1,0 +1,83 @@
+"""Fused LS-PLM forward kernel (Eq. 2) — pl.pallas_call + BlockSpec.
+
+The paper's §3.2 hot spot is the pair of products u_i^T x and w_i^T x.
+A naive implementation runs two matmuls (two HBM sweeps over x) and three
+elementwise passes over the (B, m) intermediates. This kernel:
+
+  * reads each x tile from HBM ONCE and contracts it against BOTH U and W
+    (the dividing and fitting weights) in VMEM,
+  * accumulates zu/zw in fp32 VMEM scratch across the d-tile grid axis,
+  * applies softmax-dot-sigmoid fusion at the last d tile, writing only
+    the (Bt,) probabilities back to HBM.
+
+Grid: (B/BT, d/DT); d is the contraction axis (sequential, accumulating).
+Tiles: x (BT, DT), u/w (DT, m), out p (BT, 1). m (regions) <= 128 assumed
+(paper uses 12), so a (BT, m) accumulator tile is MXU/VPU friendly.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, u_ref, w_ref, p_ref, zu_acc, zw_acc, *, n_dtiles: int):
+    j = pl.program_id(1)  # d-tile index (sequential accumulation axis)
+
+    @pl.when(j == 0)
+    def _init():
+        zu_acc[...] = jnp.zeros_like(zu_acc)
+        zw_acc[...] = jnp.zeros_like(zw_acc)
+
+    x = x_ref[...]
+    zu_acc[...] += jnp.dot(x, u_ref[...], preferred_element_type=jnp.float32)
+    zw_acc[...] += jnp.dot(x, w_ref[...], preferred_element_type=jnp.float32)
+
+    @pl.when(j == n_dtiles - 1)
+    def _finalize():
+        zu = zu_acc[...]
+        zw = zw_acc[...]
+        gate = jax.nn.softmax(zu, axis=-1)
+        fit = jax.nn.sigmoid(zw)
+        p_ref[...] = jnp.sum(gate * fit, axis=-1, keepdims=True).astype(p_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "block_d", "interpret"))
+def lsplm_fused_forward(
+    x: jax.Array,  # (B, d)
+    u: jax.Array,  # (d, m)
+    w: jax.Array,  # (d, m)
+    *,
+    block_b: int = 256,
+    block_d: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    """p(y=1|x) per Eq. 2, fused. Returns (B,)."""
+    B, d = x.shape
+    m = u.shape[1]
+    block_b = min(block_b, B)
+    block_d = min(block_d, d)
+    assert B % block_b == 0 and d % block_d == 0, (B, d, block_b, block_d)
+    n_dtiles = d // block_d
+    grid = (B // block_b, n_dtiles)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, n_dtiles=n_dtiles),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, block_d), lambda i, j: (i, j)),
+            pl.BlockSpec((block_d, m), lambda i, j: (j, 0)),
+            pl.BlockSpec((block_d, m), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_b, 1), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, 1), x.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_b, m), jnp.float32),
+            pltpu.VMEM((block_b, m), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, u, w)
+    return out[:, 0]

@@ -1,0 +1,17 @@
+"""Jit'd public wrapper: TPU Pallas kernel with jnp fallback."""
+import jax
+
+from repro.kernels.lsplm_fused.lsplm_fused import lsplm_fused_forward
+from repro.kernels.lsplm_fused.ref import lsplm_forward_ref
+
+
+def lsplm_forward(x, u, w, *, block_b: int = 256, block_d: int = 512,
+                  use_kernel: bool | None = None, interpret: bool = False):
+    """p(y=1|x) (B,). Uses the Pallas kernel on TPU (or interpret mode),
+    jnp reference elsewhere."""
+    if use_kernel is None:
+        use_kernel = jax.default_backend() == "tpu"
+    if use_kernel or interpret:
+        return lsplm_fused_forward(x, u, w, block_b=block_b, block_d=block_d,
+                                   interpret=interpret)
+    return lsplm_forward_ref(x, u, w)

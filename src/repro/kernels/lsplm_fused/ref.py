@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for the fused LS-PLM forward kernel."""
+import jax
+import jax.numpy as jnp
+
+
+def lsplm_forward_ref(x: jax.Array, u: jax.Array, w: jax.Array) -> jax.Array:
+    """Eq. 2: sum_i softmax_i(xU) sigmoid(xW_i). x (B,d) -> (B,)."""
+    zu = jnp.dot(x, u, preferred_element_type=jnp.float32)
+    zw = jnp.dot(x, w, preferred_element_type=jnp.float32)
+    gate = jax.nn.softmax(zu, axis=-1)
+    fit = jax.nn.sigmoid(zw)
+    return jnp.sum(gate * fit, axis=-1).astype(x.dtype)

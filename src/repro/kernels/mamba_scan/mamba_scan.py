@@ -1,0 +1,101 @@
+"""Mamba1 selective-scan kernel — pl.pallas_call + BlockSpec.
+
+TPU adaptation of the CUDA selective-scan (DESIGN.md §4): the recurrent
+state h (BLOCK_D, N) lives in VMEM scratch for the whole sequence; inputs
+stream HBM->VMEM once per (batch, channel-tile) and outputs stream back
+once. This is the streaming model used for the roofline's analytic SSM
+correction — the kernel realises it.
+
+  h_t = exp(dt_t * A) * h_{t-1} + (dt_t * x_t) B_t
+  y_t = h_t . C_t + D * x_t
+
+Grid: (B, d_inner / BLOCK_D); each program scans S timesteps with a
+fori_loop over rows of its VMEM-resident tiles.
+Tiles: dt/x/y (S, BLOCK_D), Bc/Cc (S, N) (shared across channel tiles),
+A (BLOCK_D, N), D (1, BLOCK_D).
+
+VMEM budget (production S=4096, BLOCK_D=256, N=16, fp32):
+  dt+x+y: 3 * 4096*256*4 = 12.6 MB -> choose BLOCK_D/S so this fits; for
+  longer S the caller splits the sequence and chains the carried state
+  (init_h input), exactly like decode.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(dt_ref, x_ref, b_ref, c_ref, a_ref, d_ref, h0_ref,
+            y_ref, hT_ref, h_scr, *, seq_len: int):
+    A = a_ref[0]  # (BLOCK_D, N)
+    Dp = d_ref[0]  # (1, BLOCK_D)
+    h_scr[...] = h0_ref[0]  # (BLOCK_D, N)
+
+    def step(t, _):
+        dt = dt_ref[0, t][:, None]  # (BLOCK_D, 1)
+        x = x_ref[0, t][:, None]
+        Bv = b_ref[0, t][None, :]  # (1, N)
+        Cv = c_ref[0, t][None, :]
+        da = jnp.exp(dt * A)  # (BLOCK_D, N)
+        h = da * h_scr[...] + (dt * x) * Bv
+        h_scr[...] = h
+        y = jnp.sum(h * Cv, axis=-1) + Dp[0] * x[:, 0]
+        y_ref[0, t] = y.astype(y_ref.dtype)
+        return 0
+
+    jax.lax.fori_loop(0, seq_len, step, 0)
+    hT_ref[0] = h_scr[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
+def mamba1_scan(
+    dt: jax.Array,  # (B, S, di) fp32 (post-softplus)
+    x: jax.Array,  # (B, S, di)  (post-conv, post-silu)
+    B_in: jax.Array,  # (B, S, N)
+    C_in: jax.Array,  # (B, S, N)
+    A: jax.Array,  # (di, N)  (negative)
+    D: jax.Array,  # (di,)
+    h0: jax.Array | None = None,  # (B, di, N) carried state
+    *,
+    block_d: int = 256,
+    interpret: bool = False,
+):
+    """Returns (y (B,S,di), h_final (B,di,N))."""
+    Bb, S, di = x.shape
+    N = B_in.shape[-1]
+    block_d = min(block_d, di)
+    assert di % block_d == 0
+    nd = di // block_d
+    if h0 is None:
+        h0 = jnp.zeros((Bb, di, N), jnp.float32)
+
+    f32 = lambda t: t.astype(jnp.float32)
+    y, hT = pl.pallas_call(
+        functools.partial(_kernel, seq_len=S),
+        grid=(Bb, nd),
+        in_specs=[
+            pl.BlockSpec((1, S, block_d), lambda b, i: (b, 0, i)),  # dt
+            pl.BlockSpec((1, S, block_d), lambda b, i: (b, 0, i)),  # x
+            pl.BlockSpec((1, S, N), lambda b, i: (b, 0, 0)),  # B
+            pl.BlockSpec((1, S, N), lambda b, i: (b, 0, 0)),  # C
+            pl.BlockSpec((1, block_d, N), lambda b, i: (0, i, 0)),  # A
+            pl.BlockSpec((1, 1, block_d), lambda b, i: (0, 0, i)),  # D
+            pl.BlockSpec((1, block_d, N), lambda b, i: (b, i, 0)),  # h0
+        ],
+        out_specs=[
+            pl.BlockSpec((1, S, block_d), lambda b, i: (b, 0, i)),
+            pl.BlockSpec((1, block_d, N), lambda b, i: (b, i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Bb, S, di), x.dtype),
+            jax.ShapeDtypeStruct((Bb, di, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((block_d, N), jnp.float32)],
+        interpret=interpret,
+    )(f32(dt), f32(x), f32(B_in), f32(C_in), f32(A)[None], f32(D)[None, None],
+      f32(h0))
+    return y, hT

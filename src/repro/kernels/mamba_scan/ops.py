@@ -1,0 +1,16 @@
+"""Jit'd public wrapper with backend dispatch."""
+import jax
+
+from repro.kernels.mamba_scan.mamba_scan import mamba1_scan
+from repro.kernels.mamba_scan.ref import mamba1_scan_ref
+
+
+def selective_scan(dt, x, B_in, C_in, A, D, h0=None, *,
+                   use_kernel: bool | None = None, interpret: bool = False,
+                   block_d: int = 256):
+    if use_kernel is None:
+        use_kernel = jax.default_backend() == "tpu"
+    if use_kernel or interpret:
+        return mamba1_scan(dt, x, B_in, C_in, A, D, h0,
+                           block_d=block_d, interpret=interpret)
+    return mamba1_scan_ref(dt, x, B_in, C_in, A, D, h0)

@@ -1,0 +1,31 @@
+"""Pure-jnp oracle: sequential selective scan (lax.scan over time)."""
+import jax
+import jax.numpy as jnp
+
+
+def mamba1_scan_ref(dt, x, B_in, C_in, A, D, h0=None):
+    """Same contract as the kernel: returns (y (B,S,di), h_final (B,di,N))."""
+    Bb, S, di = x.shape
+    N = B_in.shape[-1]
+    dt = dt.astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+    Bf = B_in.astype(jnp.float32)
+    Cf = C_in.astype(jnp.float32)
+    Af = A.astype(jnp.float32)
+    if h0 is None:
+        h0 = jnp.zeros((Bb, di, N), jnp.float32)
+
+    def step(h, inp):
+        dt_t, x_t, b_t, c_t = inp
+        da = jnp.exp(dt_t[..., None] * Af[None])
+        h = da * h + (dt_t * x_t)[..., None] * b_t[:, None, :]
+        y = jnp.einsum("bdn,bn->bd", h, c_t)
+        return h, y
+
+    hT, ys = jax.lax.scan(
+        step, h0,
+        (dt.transpose(1, 0, 2), xf.transpose(1, 0, 2),
+         Bf.transpose(1, 0, 2), Cf.transpose(1, 0, 2)),
+    )
+    y = ys.transpose(1, 0, 2) + D.astype(jnp.float32)[None, None] * xf
+    return y.astype(x.dtype), hT

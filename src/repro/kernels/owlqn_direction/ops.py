@@ -1,0 +1,15 @@
+"""Jit'd public wrapper with backend dispatch."""
+import jax
+
+from repro.kernels.owlqn_direction.owlqn_direction import owlqn_direction
+from repro.kernels.owlqn_direction.ref import owlqn_direction_ref
+
+
+def direction(theta, grad, lam, beta, *, use_kernel: bool | None = None,
+              interpret: bool = False, block_rows: int = 1024):
+    if use_kernel is None:
+        use_kernel = jax.default_backend() == "tpu"
+    if use_kernel or interpret:
+        return owlqn_direction(theta, grad, float(lam), float(beta),
+                               block_rows=block_rows, interpret=interpret)
+    return owlqn_direction_ref(theta, grad, lam, beta)

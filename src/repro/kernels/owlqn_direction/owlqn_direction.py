@@ -1,0 +1,67 @@
+"""Eq. 9 descent-direction kernel — pl.pallas_call + BlockSpec.
+
+One fused VMEM pass computes, per feature-row tile:
+  * the row L2 norms (the L2,1 group reduction),
+  * the three-case Eq. 9 select (nonzero / elem-zero / row-zero),
+so Theta and grad stream from HBM exactly once and the direction streams
+out once — vs 5+ elementwise passes in the naive jnp composition. Rows
+(feature groups) are the tiled axis; the 2m columns stay whole inside a
+tile, keeping the group reduction VMEM-local (this mirrors the paper's
+server-shard locality: a feature row never crosses a tile).
+
+Grid: (d / BLOCK_ROWS,). Tiles: theta/grad/out (BLOCK_ROWS, 2m).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(theta_ref, grad_ref, out_ref, *, lam: float, beta: float):
+    theta = theta_ref[...].astype(jnp.float32)
+    g = -grad_ref[...].astype(jnp.float32)
+
+    rn = jnp.sqrt(jnp.sum(theta * theta, axis=-1, keepdims=True))
+    row_nonzero = rn > 0.0
+    safe_rn = jnp.where(row_nonzero, rn, 1.0)
+
+    s = g - lam * theta / safe_rn
+    d_a = s - beta * jnp.sign(theta)
+    d_b = jnp.maximum(jnp.abs(s) - beta, 0.0) * jnp.sign(s)
+    v = jnp.maximum(jnp.abs(g) - beta, 0.0) * jnp.sign(g)
+    vn = jnp.sqrt(jnp.sum(v * v, axis=-1, keepdims=True))
+    safe_vn = jnp.where(vn > 0.0, vn, 1.0)
+    d_c = jnp.maximum(vn - lam, 0.0) / safe_vn * v
+
+    elem_nonzero = theta != 0.0
+    d = jnp.where(row_nonzero, jnp.where(elem_nonzero, d_a, d_b), d_c)
+    out_ref[...] = d.astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("lam", "beta", "block_rows", "interpret"))
+def owlqn_direction(
+    theta: jax.Array,  # (d, 2m)
+    grad: jax.Array,  # (d, 2m)
+    lam: float,
+    beta: float,
+    *,
+    block_rows: int = 1024,
+    interpret: bool = False,
+) -> jax.Array:
+    d, m2 = theta.shape
+    block_rows = min(block_rows, d)
+    assert d % block_rows == 0, (d, block_rows)
+    return pl.pallas_call(
+        functools.partial(_kernel, lam=float(lam), beta=float(beta)),
+        grid=(d // block_rows,),
+        in_specs=[
+            pl.BlockSpec((block_rows, m2), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, m2), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, m2), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((d, m2), theta.dtype),
+        interpret=interpret,
+    )(theta, grad)

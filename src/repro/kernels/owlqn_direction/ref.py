@@ -1,0 +1,3 @@
+"""Oracle: the library implementation of Eq. 9 (itself tested against
+numeric directional derivatives in tests/test_direction.py)."""
+from repro.core.direction import descent_direction as owlqn_direction_ref  # noqa: F401

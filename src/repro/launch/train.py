@@ -1,0 +1,107 @@
+"""End-to-end LS-PLM training driver (the paper's production job).
+
+Trains LS-PLM with Algorithm 1 on the synthetic CTR workload using the
+paper's distribution plan (DESIGN.md §3): batch over the data axis
+(workers), Theta feature-rows over the model axis (servers), the
+common-feature trick enabled.
+
+Run (CPU simulation of the cluster with 8 host devices):
+  PYTHONPATH=src REPRO_DEVICES=8 python -m repro.launch.train \
+      --sessions 4000 --regions 12 --lam 1.0 --beta 1.0 --iters 60 \
+      --mesh-data 4 --mesh-model 2 --ckpt /tmp/lsplm.npz
+"""
+import os
+if "REPRO_DEVICES" in os.environ:  # must precede jax import
+    os.environ["XLA_FLAGS"] = (
+        f"--xla_force_host_platform_device_count={os.environ['REPRO_DEVICES']}"
+    )
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import predict_proba
+from repro.core.lsplm import params_from_theta
+from repro.core.objective import smooth_loss_and_grad
+from repro.data import CTRDataConfig, auc, generate, pad_to_multiple, to_dense_batch
+from repro.dist import make_distributed_step, shard_batch, shard_state
+from repro.io import checkpoint
+from repro.launch.mesh import make_debug_mesh
+from repro.optim import OWLQNPlus
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--sessions", type=int, default=4000)
+    ap.add_argument("--user-features", type=int, default=64)
+    ap.add_argument("--ad-features", type=int, default=48)
+    ap.add_argument("--noise-features", type=int, default=16)
+    ap.add_argument("--regions", type=int, default=12, help="m (Fig. 4)")
+    ap.add_argument("--lam", type=float, default=1.0, help="L2,1 weight")
+    ap.add_argument("--beta", type=float, default=1.0, help="L1 weight")
+    ap.add_argument("--iters", type=int, default=60)
+    ap.add_argument("--mesh-data", type=int, default=0, help="0 = single device")
+    ap.add_argument("--mesh-model", type=int, default=0)
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = CTRDataConfig(
+        num_user_features=args.user_features, num_ad_features=args.ad_features,
+        noise_features=args.noise_features, seed=args.seed,
+    )
+    train_cf, _ = generate(cfg, args.sessions, seed=1)
+    test_cf, _ = generate(cfg, max(args.sessions // 5, 64), seed=2)
+    d, m = cfg.num_features, args.regions
+    theta0 = jnp.asarray(
+        0.01 * np.random.default_rng(args.seed).normal(size=(d, 2 * m)),
+        jnp.float32)
+
+    distributed = args.mesh_data > 0 and args.mesh_model > 0
+    if distributed:
+        assert jax.device_count() >= args.mesh_data * args.mesh_model, (
+            f"need {args.mesh_data * args.mesh_model} devices, "
+            f"have {jax.device_count()} (set REPRO_DEVICES)")
+        mesh = make_debug_mesh(data=args.mesh_data, model=args.mesh_model)
+        batch = pad_to_multiple(train_cf, args.mesh_data)
+        batch = shard_batch(mesh, jax.tree.map(jnp.asarray, batch),
+                            common_feature=True)
+        opt = OWLQNPlus(
+            lambda t: smooth_loss_and_grad(t, batch, common_feature=True),
+            lam=args.lam, beta=args.beta)
+        state = shard_state(opt.init(theta0), mesh)
+        step = make_distributed_step(opt, mesh)
+        print(f"mesh: data={args.mesh_data} x model={args.mesh_model} "
+              f"(PS mapping: workers x servers)")
+    else:
+        batch = jax.tree.map(jnp.asarray, pad_to_multiple(train_cf, 1))
+        opt = OWLQNPlus(
+            lambda t: smooth_loss_and_grad(t, batch, common_feature=True),
+            lam=args.lam, beta=args.beta)
+        state = opt.init(theta0)
+        step = jax.jit(opt.step)
+
+    test_dense = to_dense_batch(test_cf)
+    xs_test = jnp.asarray(test_dense.x)
+    for k in range(args.iters):
+        t0 = time.perf_counter()
+        state, stats = step(state)
+        dt = time.perf_counter() - t0
+        if k % 5 == 0 or k == args.iters - 1:
+            theta_host = jax.device_get(state.theta)
+            p = predict_proba(params_from_theta(jnp.asarray(theta_host)), xs_test)
+            a = auc(test_dense.y, np.asarray(p))
+            print(f"iter {k:3d}  f={float(stats.f_new):12.2f} "
+                  f"alpha={float(stats.alpha):.3g} nnz={int(stats.nnz):7d} "
+                  f"test_auc={a:.4f}  ({dt * 1e3:.0f} ms/iter)")
+    if args.ckpt:
+        checkpoint.save(args.ckpt, {"theta": state.theta})
+        print(f"checkpoint -> {args.ckpt}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

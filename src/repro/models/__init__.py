@@ -1,0 +1,12 @@
+from repro.models.transformer import (  # noqa: F401
+    cross_entropy,
+    decode_step,
+    forward,
+    init_caches,
+    init_model,
+    loss_fn,
+    make_serve_step,
+    make_train_step,
+    param_specs,
+    prefill,
+)

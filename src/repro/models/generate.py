@@ -1,0 +1,74 @@
+"""Autoregressive generation driver over ``decode_step``.
+
+Production serving loop for the model zoo: prefill the prompt, then
+sample tokens with temperature / top-k under a jit'd step. Works for
+every family (KV caches, SSM states, hybrid, sliding window).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.transformer import decode_step, init_caches, prefill
+
+
+def sample_logits(logits: jax.Array, key: jax.Array, temperature: float = 1.0,
+                  top_k: int = 0) -> jax.Array:
+    """logits (B, V) -> tokens (B,)."""
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    logits = logits.astype(jnp.float32) / temperature
+    if top_k:
+        kth = jax.lax.top_k(logits, top_k)[0][..., -1:]
+        logits = jnp.where(logits < kth, -jnp.inf, logits)
+    return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)
+
+
+def generate(
+    params: Any,
+    cfg: ArchConfig,
+    prompt: jax.Array,  # (B, S_prompt) int32
+    max_new_tokens: int,
+    key: jax.Array,
+    temperature: float = 1.0,
+    top_k: int = 0,
+    window: bool = False,
+    mesh=None,
+) -> jax.Array:
+    """Returns (B, max_new_tokens) sampled continuations."""
+    B, S_p = prompt.shape
+    cache_len = (min(cfg.sliding_window, S_p + max_new_tokens)
+                 if window else S_p + max_new_tokens)
+
+    logits, caches0 = prefill(params, cfg, tokens=prompt, mesh=mesh)
+    caches = init_caches(cfg, B, cache_len)
+    # copy prefill caches into the (larger) decode buffers
+    caches = jax.tree.map(
+        lambda big, small: jax.lax.dynamic_update_slice_in_dim(
+            big, small.astype(big.dtype), 0, axis=2)
+        if big.ndim >= 3 and big.shape[2] >= small.shape[2] else
+        small.astype(big.dtype),
+        caches, caches0,
+    )
+
+    step_fn = jax.jit(
+        lambda c, tok, pos: decode_step(params, cfg, c, token=tok, pos=pos,
+                                        window=window, mesh=mesh))
+
+    def body(carry, i):
+        caches, tok, key = carry
+        key, sub = jax.random.split(key)
+        logits, caches = step_fn(caches, tok, S_p + i)
+        nxt = sample_logits(logits, sub, temperature, top_k)
+        return (caches, nxt, key), nxt
+
+    tok0 = sample_logits(logits, key, temperature, top_k)
+    outs = [tok0]
+    carry = (caches, tok0, key)
+    for i in range(max_new_tokens - 1):
+        carry, nxt = body(carry, jnp.asarray(i, jnp.int32))
+        outs.append(nxt)
+    return jnp.stack(outs, axis=1)

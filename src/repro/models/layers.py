@@ -1,0 +1,199 @@
+"""Transformer building blocks (pure functions over param dicts).
+
+Conventions:
+  * activations default bf16, params fp32 (cast at use).
+  * attention is GQA with `rep = H // KVH`; q shape (B, S, KVH, rep, hd).
+  * prefill uses query-chunked attention (no S x S materialisation) so
+    32k-token prefill fits; decode attends 1 token against the cache.
+  * sliding-window decode uses a ring-buffer cache of window size (the
+    long_500k path for attention architectures).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+
+
+# --------------------------------------------------------------------- norms
+def rmsnorm(x: jax.Array, scale: jax.Array | None, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    if scale is not None:
+        x = x * scale.astype(jnp.float32)
+    return x.astype(dt)
+
+
+def nonparametric_layernorm(x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    """OLMo's LN: no learnable scale/bias (arXiv:2402.00838)."""
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    return ((x - mu) * jax.lax.rsqrt(var + eps)).astype(dt)
+
+
+def apply_norm(x: jax.Array, scale: jax.Array | None, cfg: ArchConfig) -> jax.Array:
+    if cfg.norm_type == "nonparametric":
+        return nonparametric_layernorm(x)
+    return rmsnorm(x, scale)
+
+
+# ---------------------------------------------------------------------- rope
+def rope_cos_sin(positions: jax.Array, head_dim: int, theta: float):
+    """positions (...,) -> cos/sin (..., head_dim/2), fp32."""
+    inv = 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+    ang = positions.astype(jnp.float32)[..., None] * inv  # (..., hd/2)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x (..., S, *, hd); cos/sin broadcastable (..., S, 1, hd/2)."""
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1).astype(dt)
+
+
+# ----------------------------------------------------------------- attention
+NEG_INF = -1e30
+
+
+def repeat_kv(kv: jax.Array, rep: int) -> jax.Array:
+    """(B,S,KVH,hd) -> (B,S,KVH*rep,hd). GQA repeat at use-site so caches
+    stay KVH-sized while ALL attention tensors share one uniform
+    heads-over-model sharding (avoids SPMD resharding conflicts)."""
+    if rep == 1:
+        return kv
+    B, S, KVH, hd = kv.shape
+    return jnp.broadcast_to(kv[:, :, :, None], (B, S, KVH, rep, hd)).reshape(
+        B, S, KVH * rep, hd)
+
+
+def chunked_causal_attention(
+    q: jax.Array,  # (B, S, H, hd)
+    k: jax.Array,  # (B, S, H, hd)  (already GQA-repeated)
+    v: jax.Array,
+    *,
+    chunk: int = 512,
+    scale: float | None = None,
+    unroll: bool = False,
+) -> jax.Array:
+    """Causal self-attention scanned over query chunks.
+
+    Peak score memory is (B, H, chunk, S) instead of (B, H, S, S) —
+    required at 32k. Returns (B, S, H, hd) in q.dtype.
+    """
+    B, S, H, hd = q.shape
+    scale = scale if scale is not None else hd ** -0.5
+    chunk = min(chunk, S)
+    assert S % chunk == 0, (S, chunk)
+    nchunk = S // chunk
+    qs = q.reshape(B, nchunk, chunk, H, hd).transpose(1, 0, 2, 3, 4)
+    kpos = jnp.arange(S)
+
+    def body(carry, inp):
+        ci, qc = inp  # qc (B, chunk, H, hd)
+        qpos = ci * chunk + jnp.arange(chunk)
+        s = jnp.einsum("bqhd,bshd->bhqs", qc, k,
+                       preferred_element_type=jnp.float32) * scale
+        mask = qpos[:, None] >= kpos[None, :]
+        s = jnp.where(mask[None, None], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhqs,bshd->bqhd", p, v.astype(p.dtype))
+        return carry, o.astype(q.dtype)
+
+    _, out = jax.lax.scan(body, None, (jnp.arange(nchunk), qs), unroll=unroll)
+    return out.transpose(1, 0, 2, 3, 4).reshape(B, S, H, hd)
+
+
+def decode_attention(
+    q: jax.Array,  # (B, 1, H, hd)
+    k_cache: jax.Array,  # (B, S_cache, H, hd)  (already GQA-repeated)
+    v_cache: jax.Array,
+    valid_len: jax.Array,  # scalar or (B,) number of valid cache slots
+    *,
+    scale: float | None = None,
+) -> jax.Array:
+    hd = q.shape[-1]
+    scale = scale if scale is not None else hd ** -0.5
+    s = jnp.einsum("bqhd,bshd->bhqs", q, k_cache,
+                   preferred_element_type=jnp.float32) * scale
+    pos = jnp.arange(k_cache.shape[1])
+    mask = pos[None] < jnp.reshape(valid_len, (-1, 1))  # (B,S)
+    s = jnp.where(mask[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqs,bshd->bqhd", p, v_cache.astype(p.dtype))
+    return o.astype(q.dtype)
+
+
+# --------------------------------------------------------------------- mlps
+def swiglu(x: jax.Array, w1: jax.Array, w3: jax.Array, w2: jax.Array) -> jax.Array:
+    h = jax.nn.silu(x @ w1.astype(x.dtype)) * (x @ w3.astype(x.dtype))
+    return h @ w2.astype(x.dtype)
+
+
+def gelu_mlp(x: jax.Array, w1: jax.Array, w2: jax.Array) -> jax.Array:
+    return jax.nn.gelu(x @ w1.astype(x.dtype)) @ w2.astype(x.dtype)
+
+
+# ------------------------------------------------------------- attn params
+def init_attention(key, cfg: ArchConfig, dtype):
+    d, H, KVH, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    sc = d ** -0.5
+    p = {
+        "wq": sc * jax.random.normal(ks[0], (d, H * hd), dtype),
+        "wk": sc * jax.random.normal(ks[1], (d, KVH * hd), dtype),
+        "wv": sc * jax.random.normal(ks[2], (d, KVH * hd), dtype),
+        "wo": (H * hd) ** -0.5 * jax.random.normal(ks[3], (H * hd, d), dtype),
+    }
+    if cfg.qkv_bias:  # qwen1.5
+        p["bq"] = jnp.zeros((H * hd,), dtype)
+        p["bk"] = jnp.zeros((KVH * hd,), dtype)
+        p["bv"] = jnp.zeros((KVH * hd,), dtype)
+    return p
+
+
+def qkv_proj(x: jax.Array, p: dict, cfg: ArchConfig):
+    """x (B,S,d) -> q (B,S,H,hd), k/v (B,S,KVH,hd)."""
+    B, S, _ = x.shape
+    H, KVH, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    q = x @ p["wq"].astype(x.dtype)
+    k = x @ p["wk"].astype(x.dtype)
+    v = x @ p["wv"].astype(x.dtype)
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    return (
+        q.reshape(B, S, H, hd),
+        k.reshape(B, S, KVH, hd),
+        v.reshape(B, S, KVH, hd),
+    )
+
+
+def init_mlp(key, cfg: ArchConfig, dtype):
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    if cfg.mlp_type == "swiglu":
+        return {
+            "w1": d ** -0.5 * jax.random.normal(ks[0], (d, f), dtype),
+            "w3": d ** -0.5 * jax.random.normal(ks[1], (d, f), dtype),
+            "w2": f ** -0.5 * jax.random.normal(ks[2], (f, d), dtype),
+        }
+    return {
+        "w1": d ** -0.5 * jax.random.normal(ks[0], (d, f), dtype),
+        "w2": f ** -0.5 * jax.random.normal(ks[1], (f, d), dtype),
+    }
+
+
+def mlp_apply(x: jax.Array, p: dict, cfg: ArchConfig) -> jax.Array:
+    if cfg.mlp_type == "swiglu":
+        return swiglu(x, p["w1"], p["w3"], p["w2"])
+    return gelu_mlp(x, p["w1"], p["w2"])

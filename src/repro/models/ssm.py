@@ -1,0 +1,273 @@
+"""State-space blocks: Mamba1 (falcon-mamba) and Mamba2/SSD (zamba2).
+
+TPU adaptation notes (DESIGN.md §4): Mamba2's scalar-per-head A admits the
+chunked SSD matmul formulation — MXU-friendly (intra-chunk blocks are plain
+masked matmuls, inter-chunk is a short scan over S/chunk states). Mamba1's
+per-(channel,state) decay does NOT admit that factorisation, so its train
+path is a `lax.scan` over time (the Pallas kernel tiles it over VMEM).
+
+Shapes:
+  mamba1: d_inner = expand*d, state N, conv K, dt_rank R.
+  mamba2: heads nh = d_inner / headdim, scalar A per head, ngroups=1.
+Decode carries: conv_state (B, K-1, conv_width), ssm_state
+  (B, d_inner, N) for mamba1 / (B, nh, headdim, N) for mamba2.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+
+
+# ------------------------------------------------------------------ helpers
+def causal_conv1d(x: jax.Array, w: jax.Array, bias: jax.Array | None = None) -> jax.Array:
+    """Depthwise causal conv. x (B,S,C), w (K,C) -> (B,S,C)."""
+    K = w.shape[0]
+    w = w.astype(x.dtype)
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(xp[:, i : i + x.shape[1], :] * w[i][None, None, :] for i in range(K))
+    if bias is not None:
+        out = out + bias.astype(x.dtype)[None, None, :]
+    return out
+
+
+def conv_step(conv_state: jax.Array, x_t: jax.Array, w: jax.Array, bias=None):
+    """Single decode step. conv_state (B,K-1,C), x_t (B,C)."""
+    window = jnp.concatenate([conv_state.astype(x_t.dtype), x_t[:, None, :]], axis=1)
+    out = jnp.einsum("bkc,kc->bc", window, w.astype(window.dtype))
+    if bias is not None:
+        out = out + bias.astype(out.dtype)[None, :]
+    return window[:, 1:], out
+
+
+# =============================================================== Mamba 1 ====
+def init_mamba1(key, cfg: ArchConfig, dtype):
+    d, di, N, K, R = (cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_conv,
+                      cfg.resolved_dt_rank)
+    ks = jax.random.split(key, 6)
+    return {
+        "in_proj": d ** -0.5 * jax.random.normal(ks[0], (d, 2 * di), dtype),
+        "conv_w": 0.5 * jax.random.normal(ks[1], (K, di), dtype) / K,
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": di ** -0.5 * jax.random.normal(ks[2], (di, R + 2 * N), dtype),
+        "dt_proj": R ** -0.5 * jax.random.normal(ks[3], (R, di), dtype),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.exp(jax.random.uniform(ks[4], (di,), jnp.float32,
+                                       jnp.log(1e-3), jnp.log(1e-1))))).astype(dtype),
+        "A_log": jnp.log(jnp.tile(jnp.arange(1, N + 1, dtype=jnp.float32), (di, 1))).astype(dtype),
+        "D": jnp.ones((di,), dtype),
+        "out_proj": di ** -0.5 * jax.random.normal(ks[5], (di, d), dtype),
+    }
+
+
+def _mamba1_inner(params, cfg, x_conv, z, return_state: bool = False):
+    """Shared SSM math after conv. x_conv/z (B,S,di) -> y (B,S,di)."""
+    N, R = cfg.ssm_state, cfg.resolved_dt_rank
+    xdb = x_conv @ params["x_proj"].astype(x_conv.dtype)  # (B,S,R+2N)
+    dt_in, B_ssm, C_ssm = jnp.split(xdb, [R, R + N], axis=-1)
+    dt = jax.nn.softplus(
+        (dt_in @ params["dt_proj"].astype(dt_in.dtype)).astype(jnp.float32)
+        + params["dt_bias"].astype(jnp.float32)
+    )  # (B,S,di) fp32
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))  # (di,N)
+    B_f = B_ssm.astype(jnp.float32)
+    C_f = C_ssm.astype(jnp.float32)
+    xf = x_conv.astype(jnp.float32)
+
+    def step(h, inp):
+        dt_t, x_t, b_t, c_t = inp  # (B,di),(B,di),(B,N),(B,N)
+        da = jnp.exp(dt_t[..., None] * A[None])  # (B,di,N)
+        h = da * h + (dt_t * x_t)[..., None] * b_t[:, None, :]
+        y = jnp.einsum("bdn,bn->bd", h, c_t)
+        return h, y
+
+    Bsz, S, di = x_conv.shape
+    h0 = jnp.zeros((Bsz, di, N), jnp.float32)
+    h_final, ys = jax.lax.scan(
+        step, h0,
+        (dt.transpose(1, 0, 2), xf.transpose(1, 0, 2),
+         B_f.transpose(1, 0, 2), C_f.transpose(1, 0, 2)),
+    )
+    y = ys.transpose(1, 0, 2) + params["D"].astype(jnp.float32)[None, None] * xf
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x_conv.dtype)
+    return (y, h_final) if return_state else y
+
+
+def mamba1_forward(x: jax.Array, params: dict, cfg: ArchConfig,
+                   return_state: bool = False):
+    """Full-sequence selective scan. x (B,S,d) -> (B,S,d) [+ decode state]."""
+    di, K = cfg.d_inner, cfg.ssm_conv
+    xz = x @ params["in_proj"].astype(x.dtype)
+    x_in, z = jnp.split(xz, [di], axis=-1)
+    x_conv = jax.nn.silu(causal_conv1d(x_in, params["conv_w"], params["conv_b"]))
+    if not return_state:
+        y = _mamba1_inner(params, cfg, x_conv, z)
+        return y @ params["out_proj"].astype(y.dtype)
+    y, h_final = _mamba1_inner(params, cfg, x_conv, z, return_state=True)
+    pad = jnp.zeros((x.shape[0], max(K - 1 - x.shape[1], 0), di), x_in.dtype)
+    conv_state = jnp.concatenate([pad, x_in[:, -(K - 1):]], axis=1)
+    return y @ params["out_proj"].astype(y.dtype), \
+        {"conv": conv_state, "ssm": h_final}
+
+
+def mamba1_decode(x_t: jax.Array, state: dict, params: dict, cfg: ArchConfig):
+    """Single-token step. x_t (B,d); state {conv (B,K-1,di), ssm (B,di,N)}."""
+    di, N, R = cfg.d_inner, cfg.ssm_state, cfg.resolved_dt_rank
+    xz = x_t @ params["in_proj"].astype(x_t.dtype)
+    x_in, z = jnp.split(xz, [di], axis=-1)
+    conv_state, x_c = conv_step(state["conv"], x_in, params["conv_w"], params["conv_b"])
+    x_c = jax.nn.silu(x_c)
+    xdb = x_c @ params["x_proj"].astype(x_c.dtype)
+    dt_in, B_ssm, C_ssm = jnp.split(xdb, [R, R + N], axis=-1)
+    dt = jax.nn.softplus(
+        (dt_in @ params["dt_proj"].astype(dt_in.dtype)).astype(jnp.float32)
+        + params["dt_bias"].astype(jnp.float32)
+    )
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    da = jnp.exp(dt[..., None] * A[None])
+    h = da * state["ssm"] + (dt * x_c.astype(jnp.float32))[..., None] * B_ssm.astype(jnp.float32)[:, None, :]
+    y = jnp.einsum("bdn,bn->bd", h, C_ssm.astype(jnp.float32))
+    y = y + params["D"].astype(jnp.float32)[None] * x_c.astype(jnp.float32)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x_t.dtype)
+    return y @ params["out_proj"].astype(y.dtype), {"conv": conv_state, "ssm": h}
+
+
+# =============================================================== Mamba 2 ====
+def init_mamba2(key, cfg: ArchConfig, dtype):
+    d, di, N, K = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_conv
+    nh = di // cfg.ssm_headdim
+    conv_width = di + 2 * N  # conv over (x, B, C)
+    ks = jax.random.split(key, 5)
+    return {
+        "in_proj": d ** -0.5 * jax.random.normal(ks[0], (d, 2 * di + 2 * N + nh), dtype),
+        "conv_w": 0.5 * jax.random.normal(ks[1], (K, conv_width), dtype) / K,
+        "conv_b": jnp.zeros((conv_width,), dtype),
+        "dt_bias": jnp.zeros((nh,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh)).astype(dtype),
+        "D": jnp.ones((nh,), dtype),
+        "norm_scale": jnp.ones((di,), dtype),  # gated RMSNorm pre out-proj
+        "out_proj": di ** -0.5 * jax.random.normal(ks[4], (di, d), dtype),
+    }
+
+
+def _ssd_chunked(xh, dt, A, B, C, chunk: int):
+    """Chunked SSD (Mamba2). xh (b,s,nh,p), dt (b,s,nh) fp32, A (nh,),
+    B/C (b,s,N). Returns (y (b,s,nh,p), final_state (b,nh,p,N))."""
+    b, s, nh, p = xh.shape
+    N = B.shape[-1]
+    chunk = min(chunk, s)
+    assert s % chunk == 0
+    nc = s // chunk
+    xc = xh.reshape(b, nc, chunk, nh, p).astype(jnp.float32)
+    dtc = dt.reshape(b, nc, chunk, nh)
+    Bc = B.reshape(b, nc, chunk, N).astype(jnp.float32)
+    Cc = C.reshape(b, nc, chunk, N).astype(jnp.float32)
+
+    a = dtc * A[None, None, None, :]  # (b,nc,l,h) negative
+    a_cum = jnp.cumsum(a, axis=2)
+    # intra-chunk: L_ij = exp(a_cum_i - a_cum_j) for j <= i
+    diff = a_cum[:, :, :, None, :] - a_cum[:, :, None, :, :]  # (b,nc,i,j,h)
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))[None, None, :, :, None]
+    # mask BEFORE exp: exp of the (positive, unbounded) upper-triangular
+    # entries would overflow and poison gradients through the where.
+    L = jnp.exp(jnp.where(mask, diff, -jnp.inf))
+    cb = jnp.einsum("bcin,bcjn->bcij", Cc, Bc)  # (b,nc,i,j)
+    dtx = dtc[..., None] * xc  # (b,nc,l,h,p)
+    y_diag = jnp.einsum("bcij,bcijh,bcjhp->bcihp", cb, L, dtx)
+
+    # chunk states: S_c = sum_j exp(a_cum_last - a_cum_j) dtx_j ⊗ B_j
+    decay_to_end = jnp.exp(a_cum[:, :, -1:, :] - a_cum)  # (b,nc,l,h)
+    states = jnp.einsum("bclh,bclhp,bcln->bchpn", decay_to_end, dtx, Bc)
+    chunk_decay = jnp.exp(a_cum[:, :, -1, :])  # (b,nc,h)
+
+    def scan_fn(h, inp):
+        st, dec = inp  # (b,h,p,n), (b,h)
+        h_new = dec[..., None, None] * h + st
+        return h_new, h  # emit PREVIOUS state for the chunk
+
+    h0 = jnp.zeros((b, nh, p, N), jnp.float32)
+    h_final, prev_states = jax.lax.scan(
+        scan_fn, h0,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)),
+    )
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)  # (b,nc,h,p,n)
+    state_decay = jnp.exp(a_cum)  # (b,nc,l,h)
+    y_off = jnp.einsum("bcln,bchpn,bclh->bclhp", Cc, prev_states, state_decay)
+    y = (y_diag + y_off).reshape(b, s, nh, p)
+    return y, h_final
+
+
+def mamba2_forward(x: jax.Array, params: dict, cfg: ArchConfig, chunk: int = 64,
+                   return_state: bool = False):
+    """Full-sequence SSD. x (B,S,d) -> (B,S,d) [+ decode state]."""
+    di, N, K = cfg.d_inner, cfg.ssm_state, cfg.ssm_conv
+    nh = di // cfg.ssm_headdim
+    p = cfg.ssm_headdim
+    zxbcdt = x @ params["in_proj"].astype(x.dtype)
+    z, xbc_raw, dt_in = jnp.split(zxbcdt, [di, 2 * di + 2 * N], axis=-1)
+    xbc = jax.nn.silu(causal_conv1d(xbc_raw, params["conv_w"], params["conv_b"]))
+    xs, B_ssm, C_ssm = jnp.split(xbc, [di, di + N], axis=-1)
+    dt = jax.nn.softplus(dt_in.astype(jnp.float32) + params["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    xh = xs.reshape(*xs.shape[:-1], nh, p)
+    y, h_final = _ssd_chunked(xh, dt, A, B_ssm, C_ssm, chunk)
+    y = y + params["D"].astype(jnp.float32)[None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(*x.shape[:-1], di)
+    # gated RMSNorm (mamba2)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    y = y * jax.lax.rsqrt(jnp.mean(y * y, axis=-1, keepdims=True) + 1e-6)
+    y = (y * params["norm_scale"].astype(jnp.float32)).astype(x.dtype)
+    out = y @ params["out_proj"].astype(y.dtype)
+    if not return_state:
+        return out
+    pad = jnp.zeros((x.shape[0], max(K - 1 - x.shape[1], 0), xbc_raw.shape[-1]),
+                    xbc_raw.dtype)
+    conv_state = jnp.concatenate([pad, xbc_raw[:, -(K - 1):]], axis=1)
+    return out, {"conv": conv_state, "ssm": h_final}
+
+
+def mamba2_decode(x_t: jax.Array, state: dict, params: dict, cfg: ArchConfig):
+    """Single-token step. state {conv (B,K-1,di+2N), ssm (B,nh,p,N)}."""
+    di, N = cfg.d_inner, cfg.ssm_state
+    nh, p = di // cfg.ssm_headdim, cfg.ssm_headdim
+    zxbcdt = x_t @ params["in_proj"].astype(x_t.dtype)
+    z, xbc, dt_in = jnp.split(zxbcdt, [di, 2 * di + 2 * N], axis=-1)
+    conv_state, xbc = conv_step(state["conv"], xbc, params["conv_w"], params["conv_b"])
+    xbc = jax.nn.silu(xbc)
+    xs, B_ssm, C_ssm = jnp.split(xbc, [di, di + N], axis=-1)
+    dt = jax.nn.softplus(dt_in.astype(jnp.float32) + params["dt_bias"].astype(jnp.float32))  # (B,nh)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    xh = xs.reshape(-1, nh, p).astype(jnp.float32)
+    da = jnp.exp(dt * A[None])  # (B,nh)
+    h = da[..., None, None] * state["ssm"] + \
+        (dt[..., None] * xh)[..., None] * B_ssm.astype(jnp.float32)[:, None, None, :]
+    y = jnp.einsum("bhpn,bn->bhp", h, C_ssm.astype(jnp.float32))
+    y = y + params["D"].astype(jnp.float32)[None, :, None] * xh
+    y = y.reshape(-1, di)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    y = y * jax.lax.rsqrt(jnp.mean(y * y, axis=-1, keepdims=True) + 1e-6)
+    y = (y * params["norm_scale"].astype(jnp.float32)).astype(x_t.dtype)
+    return y @ params["out_proj"].astype(y.dtype), {"conv": conv_state, "ssm": h}
+
+
+def mamba_ref_sequential(x, params, cfg):
+    """Step-by-step decode-path oracle for tests: running mamba1_decode over
+    the sequence must equal mamba1_forward (and mamba2 likewise)."""
+    B, S, d = x.shape
+    if cfg.ssm_version == 1:
+        di, N, K = cfg.d_inner, cfg.ssm_state, cfg.ssm_conv
+        state = {"conv": jnp.zeros((B, K - 1, di), x.dtype),
+                 "ssm": jnp.zeros((B, di, N), jnp.float32)}
+        step = lambda s, xt: mamba1_decode(xt, s, params, cfg)[::-1]
+    else:
+        di, N, K = cfg.d_inner, cfg.ssm_state, cfg.ssm_conv
+        nh, p = di // cfg.ssm_headdim, cfg.ssm_headdim
+        state = {"conv": jnp.zeros((B, K - 1, di + 2 * N), x.dtype),
+                 "ssm": jnp.zeros((B, nh, p, N), jnp.float32)}
+        step = lambda s, xt: mamba2_decode(xt, s, params, cfg)[::-1]
+    ys = []
+    for t in range(S):
+        state, y = step(state, x[:, t])
+        ys.append(y)
+    return jnp.stack(ys, axis=1)

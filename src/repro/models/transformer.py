@@ -1,0 +1,773 @@
+"""Composable decoder-only model zoo covering all assigned families.
+
+Families and block layout:
+  dense / vlm / audio : [norm->attn->res, norm->(swiglu|gelu)->res] x L
+  moe                 : [norm->attn->res, norm->moe_ffn->res] x L
+  ssm (mamba1)        : [norm->mamba1->res] x L
+  hybrid (zamba2)     : groups of k mamba2 layers followed by ONE SHARED
+                        transformer block (same params every group)
+
+Entry points:
+  init_model / param_specs          parameters + production shardings
+  forward                            full-sequence logits (train path)
+  prefill                            logits for last token + filled caches
+  decode_step                        1 token with KV / SSM / window caches
+  make_train_step / make_serve_step  jit-able step builders
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+from repro.models import moe as M
+from repro.models import ssm as S
+
+Params = dict
+
+
+def _dt(cfg: ArchConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def _pdt(cfg: ArchConfig):
+    return jnp.dtype(cfg.param_dtype)
+
+
+# ===================================================================== init
+def _init_block(key, cfg: ArchConfig, dtype) -> Params:
+    """One layer's params (unstacked)."""
+    ks = jax.random.split(key, 4)
+    if cfg.family == "ssm":
+        p = {"mamba": S.init_mamba1(ks[0], cfg, dtype)}
+        if cfg.norm_type == "rmsnorm":
+            p["norm"] = jnp.ones((cfg.d_model,), dtype)
+        return p
+    if cfg.family == "hybrid":
+        p = {"mamba": S.init_mamba2(ks[0], cfg, dtype)}
+        if cfg.norm_type == "rmsnorm":
+            p["norm"] = jnp.ones((cfg.d_model,), dtype)
+        return p
+    p = {"attn": L.init_attention(ks[0], cfg, dtype)}
+    if cfg.num_experts:
+        p["ffn"] = M.init_moe(ks[1], cfg, dtype)
+    else:
+        p["ffn"] = L.init_mlp(ks[1], cfg, dtype)
+    if cfg.norm_type == "rmsnorm":
+        p["norm1"] = jnp.ones((cfg.d_model,), dtype)
+        p["norm2"] = jnp.ones((cfg.d_model,), dtype)
+    return p
+
+
+def _init_shared_block(key, cfg: ArchConfig, dtype) -> Params:
+    ks = jax.random.split(key, 2)
+    p = {"attn": L.init_attention(ks[0], cfg, dtype),
+         "ffn": L.init_mlp(ks[1], cfg, dtype)}
+    if cfg.norm_type == "rmsnorm":
+        p["norm1"] = jnp.ones((cfg.d_model,), dtype)
+        p["norm2"] = jnp.ones((cfg.d_model,), dtype)
+    return p
+
+
+def init_model(cfg: ArchConfig, key: jax.Array) -> Params:
+    dtype = _pdt(cfg)
+    k_emb, k_layers, k_head, k_shared = jax.random.split(key, 4)
+    layer_keys = jax.random.split(k_layers, cfg.num_layers)
+    stacked = jax.vmap(lambda k: _init_block(k, cfg, dtype))(layer_keys)
+    params: Params = {"layers": stacked}
+    params["embed"] = (
+        cfg.d_model ** -0.5
+        * jax.random.normal(k_emb, (cfg.vocab_size, cfg.d_model), dtype)
+    )
+    if cfg.norm_type == "rmsnorm":
+        params["final_norm"] = jnp.ones((cfg.d_model,), dtype)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = (
+            cfg.d_model ** -0.5
+            * jax.random.normal(k_head, (cfg.d_model, cfg.vocab_size), dtype)
+        )
+    if cfg.shared_attn_every:
+        params["shared"] = _init_shared_block(k_shared, cfg, dtype)
+    return params
+
+
+# ============================================================ param specs
+def _block_specs(cfg: ArchConfig, stacked: bool) -> Params:
+    """PartitionSpecs mirroring _init_block; prepend None for the L axis."""
+    pre = (None,) if stacked else ()
+
+    def s(*axes):
+        return P(*(pre + axes))
+
+    if cfg.family in ("ssm", "hybrid"):
+        if cfg.ssm_version == 1 or cfg.family == "ssm":
+            mamba = {
+                "in_proj": s("data", "model"),
+                "conv_w": s(None, "model"),
+                "conv_b": s("model"),
+                "x_proj": s("model", None),
+                "dt_proj": s(None, "model"),
+                "dt_bias": s("model"),
+                "A_log": s("model", None),
+                "D": s("model"),
+                "out_proj": s("model", "data"),
+            }
+        else:
+            mamba = {
+                "in_proj": s("data", "model"),
+                "conv_w": s(None, "model"),
+                "conv_b": s("model"),
+                "dt_bias": s(None),
+                "A_log": s(None),
+                "D": s(None),
+                "norm_scale": s("model"),
+                "out_proj": s("model", "data"),
+            }
+        p = {"mamba": mamba}
+        if cfg.norm_type == "rmsnorm":
+            p["norm"] = s(None)
+        return p
+
+    attn = {
+        "wq": s("data", "model"),
+        "wk": s("data", "model"),
+        "wv": s("data", "model"),
+        "wo": s("model", "data"),
+    }
+    if cfg.qkv_bias:
+        attn.update({"bq": s("model"), "bk": s("model"), "bv": s("model")})
+    p = {"attn": attn}
+    if cfg.num_experts:
+        p["ffn"] = {
+            "router": s(None, None),
+            "w1": s("model", None, "data"),
+            "w3": s("model", None, "data"),
+            "w2": s("model", "data", None),
+        }
+    elif cfg.mlp_type == "swiglu":
+        p["ffn"] = {"w1": s("data", "model"), "w3": s("data", "model"),
+                    "w2": s("model", "data")}
+    else:
+        p["ffn"] = {"w1": s("data", "model"), "w2": s("model", "data")}
+    if cfg.norm_type == "rmsnorm":
+        p["norm1"] = s(None)
+        p["norm2"] = s(None)
+    return p
+
+
+def _shared_block_specs(cfg: ArchConfig) -> Params:
+    """The hybrid shared block is a TRANSFORMER block (attn + mlp)."""
+    attn = {"wq": P("data", "model"), "wk": P("data", "model"),
+            "wv": P("data", "model"), "wo": P("model", "data")}
+    if cfg.qkv_bias:
+        attn.update({"bq": P("model"), "bk": P("model"), "bv": P("model")})
+    if cfg.mlp_type == "swiglu":
+        ffn = {"w1": P("data", "model"), "w3": P("data", "model"),
+               "w2": P("model", "data")}
+    else:
+        ffn = {"w1": P("data", "model"), "w2": P("model", "data")}
+    p = {"attn": attn, "ffn": ffn}
+    if cfg.norm_type == "rmsnorm":
+        p["norm1"] = P(None)
+        p["norm2"] = P(None)
+    return p
+
+
+def param_specs(cfg: ArchConfig, model_size: int = 16) -> Params:
+    """Production shardings. Explicit pjit arg shardings must divide
+    evenly, so odd vocab sizes (granite 49155, internvl2 92553) keep the
+    vocab axis unsharded and rely on the d axis only."""
+    specs: Params = {"layers": _block_specs(cfg, stacked=True)}
+    vocab_ok = cfg.vocab_size % model_size == 0
+    specs["embed"] = P("model", "data") if vocab_ok else P(None, "data")
+    if cfg.norm_type == "rmsnorm":
+        specs["final_norm"] = P(None)
+    if not cfg.tie_embeddings:
+        specs["lm_head"] = P("data", "model") if vocab_ok else P("data", None)
+    if cfg.shared_attn_every:
+        specs["shared"] = _shared_block_specs(cfg)
+    return specs
+
+
+# ============================================================ block forward
+def _dp(mesh) -> tuple[str, ...]:
+    if mesh is None:
+        return ()
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _constrain(x, mesh, spec):
+    if mesh is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, jax.sharding.NamedSharding(mesh, spec)
+    )
+
+
+def _attn_full(h, p, cfg: ArchConfig, positions, mesh, dp):
+    """Full-sequence causal attention sub-block (pre-norm, residual)."""
+    x = L.apply_norm(h, p.get("norm1"), cfg)
+    # NOTE §Perf qwen_train/opt3: an explicit pre-QKV all-gather constraint
+    # here was tried and REFUTED (t_coll 27->35 s, t_mem 24->41 s): GSPMD's
+    # own placement of the S->replicated reshard beats the hand-placed one.
+    q, k, v = L.qkv_proj(x, p["attn"], cfg)
+    cos, sin = L.rope_cos_sin(positions, cfg.resolved_head_dim, cfg.rope_theta)
+    cos_b, sin_b = cos[None, :, None, :], sin[None, :, None, :]
+    q = L.apply_rope(q, cos_b, sin_b)
+    k = L.apply_rope(k, cos_b, sin_b)
+    rep = cfg.num_heads // cfg.num_kv_heads
+    kr = L.repeat_kv(k, rep)
+    vr = L.repeat_kv(v, rep)
+    if cfg.attn_shard == "head_dim":
+        hspec = P(dp, None, None, "model")
+    else:
+        hspec = P(dp, None, "model", None)
+    q = _constrain(q, mesh, hspec)
+    kr = _constrain(kr, mesh, hspec)
+    vr = _constrain(vr, mesh, hspec)
+    o = L.chunked_causal_attention(q, kr, vr, chunk=cfg.attn_chunk,
+                                   unroll=cfg.unroll_layers)
+    B, Sq = h.shape[:2]
+    o = o.reshape(B, Sq, -1)
+    return h + o @ p["attn"]["wo"].astype(o.dtype), (k, v)
+
+
+def _ffn_full(h, p, cfg: ArchConfig, mesh, dp, batch_sharded=True):
+    x = L.apply_norm(h, p.get("norm2"), cfg)
+    if cfg.num_experts:
+        moe_mesh = mesh if (mesh is not None and batch_sharded) else None
+        out, aux = M.moe_ffn(x, p["ffn"], cfg, mesh=moe_mesh)
+    else:
+        out, aux = L.mlp_apply(x, p["ffn"], cfg), jnp.zeros((), jnp.float32)
+    return h + out, aux
+
+
+def _hspec(cfg, dp):
+    """Inter-block activation sharding: baseline replicates S; the
+    seq_parallel variant shards S over 'model' (Megatron-SP), dividing the
+    saved scan carries by the model-axis size."""
+    return P(dp, "model", None) if cfg.seq_parallel else P(dp, None, None)
+
+
+def _transformer_block(h, p, cfg, positions, mesh, dp, batch_sharded=True):
+    h, kv = _attn_full(h, p, cfg, positions, mesh, dp)
+    h, aux = _ffn_full(h, p, cfg, mesh, dp, batch_sharded)
+    h = _constrain(h, mesh, _hspec(cfg, dp))
+    return h, kv, aux
+
+
+def _ssm_block(h, p, cfg, mesh, dp):
+    x = L.apply_norm(h, p.get("norm"), cfg)
+    if cfg.family == "ssm":
+        y = S.mamba1_forward(x, p["mamba"], cfg)
+    else:
+        y = S.mamba2_forward(x, p["mamba"], cfg, chunk=cfg.ssd_chunk)
+    h = h + y
+    return _constrain(h, mesh, _hspec(cfg, dp))
+
+
+# ============================================================ full forward
+def embed_tokens(params, cfg: ArchConfig, tokens):
+    e = params["embed"]
+    h = jnp.take(e, tokens, axis=0).astype(_dt(cfg))
+    return h
+
+
+def lm_logits(params, cfg: ArchConfig, h):
+    if cfg.tie_embeddings:
+        w = params["embed"].astype(h.dtype).T
+    else:
+        w = params["lm_head"].astype(h.dtype)
+    return h @ w
+
+
+def _final_norm(params, cfg, h):
+    return L.apply_norm(h, params.get("final_norm"), cfg)
+
+
+def forward(
+    params: Params,
+    cfg: ArchConfig,
+    tokens: jax.Array | None = None,  # (B, S_text)
+    embeds: jax.Array | None = None,  # (B, S, d) modality-stub input
+    prefix_embeds: jax.Array | None = None,  # (B, P, d) e.g. vision patches
+    mesh=None,
+    batch_sharded: bool = True,
+    remat: bool = True,
+    return_hidden: bool = False,
+):
+    """Full-sequence forward. Returns (logits (B,S,V), aux_loss) — or
+    (final-norm hidden states (B,S,d), aux_loss) with return_hidden."""
+    dp = _dp(mesh)
+    if embeds is not None:
+        h = embeds.astype(_dt(cfg))
+    else:
+        h = embed_tokens(params, cfg, tokens)
+    if prefix_embeds is not None:
+        h = jnp.concatenate([prefix_embeds.astype(h.dtype), h], axis=1)
+    B, Stot, _ = h.shape
+    h = _constrain(h, mesh, P(dp, None, None))
+    positions = jnp.arange(Stot)
+
+    if cfg.family in ("ssm",):
+        def body(hc, lp):
+            return _ssm_block(hc, lp, cfg, mesh, dp), None
+
+        body = jax.checkpoint(body) if remat else body
+        h, _ = jax.lax.scan(body, h, params["layers"], unroll=cfg.unroll_layers)
+        aux = jnp.zeros((), jnp.float32)
+    elif cfg.family == "hybrid":
+        k = cfg.shared_attn_every
+        nl, J = cfg.num_layers, cfg.num_layers // max(cfg.shared_attn_every, 1)
+        assert k and nl % k == 0, (nl, k)
+        grouped = jax.tree.map(
+            lambda x: x.reshape((J, k) + x.shape[1:]), params["layers"]
+        )
+
+        def group(hc, gp):
+            def inner(hc2, lp):
+                return _ssm_block(hc2, lp, cfg, mesh, dp), None
+
+            hc, _ = jax.lax.scan(inner, hc, gp, unroll=cfg.unroll_layers)
+            hc, _kv, _aux = _transformer_block(
+                hc, params["shared"], cfg, positions, mesh, dp, batch_sharded
+            )
+            return hc, None
+
+        group = jax.checkpoint(group) if remat else group
+        h, _ = jax.lax.scan(group, h, grouped, unroll=cfg.unroll_layers)
+        aux = jnp.zeros((), jnp.float32)
+    else:
+        def body(hc, lp):
+            hc, _kv, aux_l = _transformer_block(
+                hc, lp, cfg, positions, mesh, dp, batch_sharded
+            )
+            return hc, aux_l
+
+        body = jax.checkpoint(body) if remat else body
+        h, auxs = jax.lax.scan(body, h, params["layers"], unroll=cfg.unroll_layers)
+        aux = jnp.sum(auxs)
+
+    h = _final_norm(params, cfg, h)
+    if return_hidden:
+        return h, aux
+    logits = lm_logits(params, cfg, h)
+    logits = _constrain(logits, mesh, P(dp, None, "model"))
+    return logits, aux
+
+
+# =============================================================== loss/train
+def cross_entropy(logits, labels, weights=None):
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    if weights is None:
+        return -jnp.mean(ll)
+    w = weights.astype(jnp.float32)
+    return -jnp.sum(ll * w) / jnp.maximum(jnp.sum(w), 1.0)
+
+
+def chunked_cross_entropy(params, cfg: ArchConfig, h, labels, weights,
+                          mesh, chunk: int):
+    """CE scanned over sequence chunks: the (B,S,V) logits tensor is never
+    materialised (peak is (B,chunk,V)); the chunk body is remat'd so the
+    backward recomputes per-chunk logits instead of saving them."""
+    B, S, d = h.shape
+    chunk = min(chunk, S)
+    assert S % chunk == 0, (S, chunk)
+    nc = S // chunk
+    hc = h.reshape(B, nc, chunk, d).transpose(1, 0, 2, 3)
+    lc = labels.reshape(B, nc, chunk).transpose(1, 0, 2)
+    wc = (weights.reshape(B, nc, chunk).transpose(1, 0, 2)
+          if weights is not None else None)
+    dp = _dp(mesh)
+
+    def body(carry, inp):
+        if wc is None:
+            hcb, lcb = inp
+            w = None
+        else:
+            hcb, lcb, w = inp
+        logits = lm_logits(params, cfg, hcb)
+        logits = _constrain(logits, mesh, P(dp, None, "model"))
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        ll = jnp.take_along_axis(logp, lcb[..., None], axis=-1)[..., 0]
+        if w is None:
+            s, n = -jnp.sum(ll), jnp.asarray(ll.size, jnp.float32)
+        else:
+            wf = w.astype(jnp.float32)
+            s, n = -jnp.sum(ll * wf), jnp.sum(wf)
+        return (carry[0] + s, carry[1] + n), None
+
+    body = jax.checkpoint(body)
+    xs = (hc, lc) if wc is None else (hc, lc, wc)
+    (tot, cnt), _ = jax.lax.scan(body, (jnp.zeros(()), jnp.zeros(())), xs)
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def loss_fn(params, cfg: ArchConfig, batch: dict, mesh=None):
+    labels = batch["labels"]
+    if cfg.ce_chunk:
+        h, aux = forward(
+            params, cfg,
+            tokens=batch.get("tokens"),
+            embeds=batch.get("embeds"),
+            prefix_embeds=batch.get("prefix_embeds"),
+            mesh=mesh,
+            return_hidden=True,
+        )
+        pad = h.shape[1] - labels.shape[1]
+        if pad:  # prefix positions (vlm) carry no LM loss
+            h = h[:, pad:]
+        ce = chunked_cross_entropy(params, cfg, h, labels,
+                                   batch.get("loss_weights"), mesh,
+                                   cfg.ce_chunk)
+        return ce + cfg.router_aux_coef * aux, (ce, aux)
+    logits, aux = forward(
+        params, cfg,
+        tokens=batch.get("tokens"),
+        embeds=batch.get("embeds"),
+        prefix_embeds=batch.get("prefix_embeds"),
+        mesh=mesh,
+    )
+    pad = logits.shape[1] - labels.shape[1]
+    if pad:  # prefix positions (vlm) carry no LM loss
+        logits = logits[:, pad:]
+    ce = cross_entropy(logits, labels, batch.get("loss_weights"))
+    return ce + cfg.router_aux_coef * aux, (ce, aux)
+
+
+def make_train_step(cfg: ArchConfig, mesh=None, lr: float = 3e-4):
+    from repro.optim import AdamW
+
+    opt = AdamW(lr=lr, weight_decay=0.01)
+
+    def train_step(params, opt_state, batch):
+        (loss, (ce, aux)), grads = jax.value_and_grad(
+            lambda p: loss_fn(p, cfg, batch, mesh), has_aux=True
+        )(params)
+        params, opt_state = opt.apply(grads, opt_state, params)
+        return params, opt_state, {"loss": loss, "ce": ce, "aux": aux}
+
+    return opt, train_step
+
+
+# ================================================================== caches
+def attn_cache_shape(cfg: ArchConfig, B: int, S_max: int):
+    return (B, S_max, cfg.num_kv_heads, cfg.resolved_head_dim)
+
+
+def init_caches(cfg: ArchConfig, B: int, S_max: int, dtype=jnp.bfloat16) -> Any:
+    """Decode caches. S_max = window size for sliding-window decode."""
+    nl = cfg.num_layers
+    if cfg.family == "ssm":
+        di, N, K = cfg.d_inner, cfg.ssm_state, cfg.ssm_conv
+        return {
+            "conv": jnp.zeros((nl, B, K - 1, di), dtype),
+            "ssm": jnp.zeros((nl, B, di, N), jnp.float32),
+        }
+    if cfg.family == "hybrid":
+        di, N, K = cfg.d_inner, cfg.ssm_state, cfg.ssm_conv
+        nh, pd = di // cfg.ssm_headdim, cfg.ssm_headdim
+        J = cfg.num_layers // cfg.shared_attn_every
+        return {
+            "conv": jnp.zeros((nl, B, K - 1, di + 2 * N), dtype),
+            "ssm": jnp.zeros((nl, B, nh, pd, N), jnp.float32),
+            "k": jnp.zeros((J,) + attn_cache_shape(cfg, B, S_max), dtype),
+            "v": jnp.zeros((J,) + attn_cache_shape(cfg, B, S_max), dtype),
+        }
+    if cfg.kv_cache_dtype == "int8":
+        shp = attn_cache_shape(cfg, B, S_max)
+        return {
+            "k": jnp.zeros((nl,) + shp, jnp.int8),
+            "v": jnp.zeros((nl,) + shp, jnp.int8),
+            "k_scale": jnp.zeros((nl,) + shp[:-1] + (1,), jnp.bfloat16),
+            "v_scale": jnp.zeros((nl,) + shp[:-1] + (1,), jnp.bfloat16),
+        }
+    return {
+        "k": jnp.zeros((nl,) + attn_cache_shape(cfg, B, S_max), dtype),
+        "v": jnp.zeros((nl,) + attn_cache_shape(cfg, B, S_max), dtype),
+    }
+
+
+def cache_specs(cfg: ArchConfig, batch_sharded: bool = True,
+                dp: tuple[str, ...] = ("data",),
+                model_size: int = 16) -> Any:
+    """Explicit arg/out shardings must divide evenly (pjit requirement) —
+    shard KV heads over `model` when divisible, else shard head_dim
+    (always a multiple of 16 across the assigned archs)."""
+    bspec = dp if batch_sharded else None
+    if cfg.family == "ssm":
+        return {"conv": P(None, bspec, None, "model"),
+                "ssm": P(None, bspec, "model", None)}
+    if cfg.num_kv_heads and cfg.num_kv_heads % model_size == 0:
+        kv = P(None, bspec, None, "model", None)
+    else:
+        kv = P(None, bspec, None, None, "model")  # shard head_dim instead
+    if cfg.family == "hybrid":
+        return {
+            "conv": P(None, bspec, None, "model"),
+            "ssm": P(None, bspec, None, None, None),
+            "k": kv,
+            "v": kv,
+        }
+    if cfg.kv_cache_dtype == "int8":
+        # scales have a singleton last dim -> never shard it
+        sc = P(*(list(kv)[:-1] + [None])) if kv[-1] == "model" else kv
+        return {"k": kv, "v": kv, "k_scale": sc, "v_scale": sc}
+    return {"k": kv, "v": kv}
+
+
+# ================================================================== prefill
+def prefill(params, cfg: ArchConfig, tokens=None, embeds=None,
+            prefix_embeds=None, mesh=None, batch_sharded: bool = True):
+    """Run the full prompt, return (last-token logits, caches filled with
+    the first S positions)."""
+    dp = _dp(mesh)
+    if embeds is not None:
+        h = embeds.astype(_dt(cfg))
+    else:
+        h = embed_tokens(params, cfg, tokens)
+    if prefix_embeds is not None:
+        h = jnp.concatenate([prefix_embeds.astype(h.dtype), h], axis=1)
+    B, Stot, _ = h.shape
+    h = _constrain(h, mesh, P(dp, None, None))
+    positions = jnp.arange(Stot)
+
+    if cfg.family == "ssm":
+        def body(hc, lp):
+            x = L.apply_norm(hc, lp.get("norm"), cfg)
+            y, st = S.mamba1_forward(x, lp["mamba"], cfg, return_state=True)
+            hc = _constrain(hc + y, mesh, P(dp, None, None))
+            return hc, (st["conv"], st["ssm"])
+
+        h, (convs, ssms) = jax.lax.scan(body, h, params["layers"], unroll=cfg.unroll_layers)
+        caches = {"conv": convs, "ssm": ssms}
+    elif cfg.family == "hybrid":
+        k = cfg.shared_attn_every
+        J = cfg.num_layers // k
+        grouped = jax.tree.map(
+            lambda x: x.reshape((J, k) + x.shape[1:]), params["layers"]
+        )
+
+        def group(hc, gp):
+            def inner(hc2, lp):
+                x = L.apply_norm(hc2, lp.get("norm"), cfg)
+                y, st = S.mamba2_forward(x, lp["mamba"], cfg,
+                                         chunk=cfg.ssd_chunk, return_state=True)
+                hc2 = _constrain(hc2 + y, mesh, P(dp, None, None))
+                return hc2, (st["conv"], st["ssm"])
+
+            hc, states = jax.lax.scan(inner, hc, gp, unroll=cfg.unroll_layers)
+            hc, (kk, vv), _aux = _transformer_block(
+                hc, params["shared"], cfg, positions, mesh, dp, batch_sharded
+            )
+            return hc, (states, kk, vv)
+
+        h, (states, ks, vs) = jax.lax.scan(group, h, grouped, unroll=cfg.unroll_layers)
+        convs, ssms = states
+        caches = {
+            "conv": convs.reshape((cfg.num_layers,) + convs.shape[2:]),
+            "ssm": ssms.reshape((cfg.num_layers,) + ssms.shape[2:]),
+            "k": ks, "v": vs,
+        }
+    else:
+        def body(hc, lp):
+            hc, (kk, vv), _aux = _transformer_block(
+                hc, lp, cfg, positions, mesh, dp, batch_sharded
+            )
+            return hc, (kk, vv)
+
+        h, (ks, vs) = jax.lax.scan(body, h, params["layers"], unroll=cfg.unroll_layers)
+        caches = {"k": ks, "v": vs}
+
+    h = _final_norm(params, cfg, h)
+    logits = lm_logits(params, cfg, h[:, -1:])
+    logits = _constrain(logits, mesh, P(dp, None, "model"))
+    return logits[:, 0], caches
+
+
+# ================================================================== decode
+def _attn_decode(h, p, cfg: ArchConfig, k_cache, v_cache, pos, window, mesh, dp,
+                 batch_sharded=True):
+    """h (B,1,d); cache (B,S_c,KVH,hd); pos scalar current position."""
+    x = L.apply_norm(h, p.get("norm1"), cfg)
+    q, k, v = L.qkv_proj(x, p["attn"], cfg)
+    cos, sin = L.rope_cos_sin(jnp.asarray(pos)[None], cfg.resolved_head_dim,
+                              cfg.rope_theta)
+    cos_b, sin_b = cos[None, :, None, :], sin[None, :, None, :]
+    q = L.apply_rope(q, cos_b, sin_b)
+    k = L.apply_rope(k, cos_b, sin_b)
+    if cfg.kv_cache_dtype == "int8":
+        S_c = k_cache[0].shape[1]
+    else:
+        S_c = k_cache.shape[1]
+    slot = (pos % S_c) if window else pos
+
+    def upd(cache, new):
+        return jax.lax.dynamic_update_slice_in_dim(
+            cache, new.astype(cache.dtype), slot, 1)
+
+    if cfg.kv_cache_dtype == "int8":
+        k_cache, k_scale = k_cache  # (cache, scale) pairs
+        v_cache, v_scale = v_cache
+
+        def quant(x):  # per-(token,head) symmetric int8
+            s = jnp.max(jnp.abs(x), axis=-1, keepdims=True) / 127.0
+            s = jnp.maximum(s, 1e-8)
+            q = jnp.clip(jnp.round(x / s), -127, 127).astype(jnp.int8)
+            return q, s.astype(jnp.bfloat16)
+
+        kq, ks = quant(k.astype(jnp.float32))
+        vq, vs = quant(v.astype(jnp.float32))
+        k_cache = upd(k_cache, kq)
+        v_cache = upd(v_cache, vq)
+        k_scale = upd(k_scale, ks)
+        v_scale = upd(v_scale, vs)
+        k_deq = k_cache.astype(_dt(cfg)) * k_scale.astype(_dt(cfg))
+        v_deq = v_cache.astype(_dt(cfg)) * v_scale.astype(_dt(cfg))
+        k_cache, v_cache = (k_cache, k_scale), (v_cache, v_scale)
+    else:
+        k_cache = upd(k_cache, k)
+        v_cache = upd(v_cache, v)
+        k_deq = k_cache.astype(_dt(cfg))
+        v_deq = v_cache.astype(_dt(cfg))
+    valid = jnp.minimum(pos + 1, S_c)
+    rep = cfg.num_heads // cfg.num_kv_heads
+    kr = L.repeat_kv(k_deq, rep)
+    vr = L.repeat_kv(v_deq, rep)
+    bs = dp if batch_sharded else None
+    if cfg.attn_shard == "head_dim":
+        hspec = P(bs, None, None, "model")
+    else:
+        hspec = P(bs, None, "model", None)
+    q = _constrain(q, mesh, hspec)
+    kr = _constrain(kr, mesh, hspec)
+    vr = _constrain(vr, mesh, hspec)
+    o = L.decode_attention(q, kr, vr, valid)
+    B = h.shape[0]
+    o = o.reshape(B, 1, -1)
+    return h + o @ p["attn"]["wo"].astype(o.dtype), k_cache, v_cache
+
+
+def decode_step(params, cfg: ArchConfig, caches, token=None, embed=None,
+                pos=None, window: bool = False, mesh=None,
+                batch_sharded: bool = True,
+                moe_serving_mode: str = "weight_gather"):
+    """One serving step: next-token logits given caches at position `pos`.
+
+    token (B,) int32 or embed (B,d); pos scalar int32.
+    """
+    dp = _dp(mesh)
+    if embed is not None:
+        h = embed[:, None, :].astype(_dt(cfg))
+    else:
+        h = embed_tokens(params, cfg, token[:, None])
+    h = _constrain(h, mesh, P(dp, None, None))
+
+    if cfg.family == "ssm":
+        def body(hc, inp):
+            lp, conv, ssm = inp
+            x = L.apply_norm(hc[:, 0], lp.get("norm"), cfg)
+            y, st = S.mamba1_decode(x, {"conv": conv, "ssm": ssm}, lp["mamba"], cfg)
+            return hc + y[:, None], (st["conv"], st["ssm"])
+
+        h, (convs, ssms) = jax.lax.scan(
+            body, h, (params["layers"], caches["conv"], caches["ssm"]),
+            unroll=cfg.unroll_layers,
+        )
+        new_caches = {"conv": convs, "ssm": ssms}
+    elif cfg.family == "hybrid":
+        k = cfg.shared_attn_every
+        J = cfg.num_layers // k
+        grouped = jax.tree.map(
+            lambda x: x.reshape((J, k) + x.shape[1:]), params["layers"]
+        )
+        gconv = caches["conv"].reshape((J, k) + caches["conv"].shape[1:])
+        gssm = caches["ssm"].reshape((J, k) + caches["ssm"].shape[1:])
+
+        def group(hc, inp):
+            gp, conv_g, ssm_g, kc, vc = inp
+
+            def inner(hc2, inp2):
+                lp, conv, ssm = inp2
+                x = L.apply_norm(hc2[:, 0], lp.get("norm"), cfg)
+                y, st = S.mamba2_decode(x, {"conv": conv, "ssm": ssm}, lp["mamba"], cfg)
+                return hc2 + y[:, None], (st["conv"], st["ssm"])
+
+            hc, (conv_n, ssm_n) = jax.lax.scan(inner, hc, (gp, conv_g, ssm_g),
+                                               unroll=cfg.unroll_layers)
+            hc, kc, vc = _attn_decode(hc, params["shared"], cfg, kc, vc, pos,
+                                      window, mesh, dp, batch_sharded)
+            x = L.apply_norm(hc, params["shared"].get("norm2"), cfg)
+            hc = hc + L.mlp_apply(x, params["shared"]["ffn"], cfg)
+            return hc, (conv_n, ssm_n, kc, vc)
+
+        h, (convs, ssms, ks, vs) = jax.lax.scan(
+            group, h, (grouped, gconv, gssm, caches["k"], caches["v"]),
+            unroll=cfg.unroll_layers,
+        )
+        new_caches = {
+            "conv": convs.reshape(caches["conv"].shape),
+            "ssm": ssms.reshape(caches["ssm"].shape),
+            "k": ks, "v": vs,
+        }
+    else:
+        def body(hc, inp):
+            if cfg.kv_cache_dtype == "int8":
+                lp, kc, vc, ksc, vsc = inp
+                kc, vc = (kc, ksc), (vc, vsc)
+            else:
+                lp, kc, vc = inp
+            hc, kc, vc = _attn_decode(hc, lp, cfg, kc, vc, pos, window, mesh,
+                                      dp, batch_sharded)
+            if cfg.kv_cache_dtype == "int8":
+                (kc, ksc), (vc, vsc) = kc, vc
+            x = L.apply_norm(hc, lp.get("norm2"), cfg)
+            if cfg.num_experts:
+                moe_mesh = mesh if (mesh is not None and batch_sharded) else None
+                out, _aux = M.moe_ffn(x, lp["ffn"], cfg, mesh=moe_mesh,
+                                      serving_mode=moe_serving_mode)
+            else:
+                out = L.mlp_apply(x, lp["ffn"], cfg)
+            hc = hc + out
+            hc = _constrain(hc, mesh, P(dp, None, None))
+            if cfg.kv_cache_dtype == "int8":
+                return hc, (kc, vc, ksc, vsc)
+            return hc, (kc, vc)
+
+        if cfg.kv_cache_dtype == "int8":
+            h, (ks, vs, kss, vss) = jax.lax.scan(
+                body, h,
+                (params["layers"], caches["k"], caches["v"],
+                 caches["k_scale"], caches["v_scale"]),
+                unroll=cfg.unroll_layers,
+            )
+            new_caches = {"k": ks, "v": vs, "k_scale": kss, "v_scale": vss}
+        else:
+            h, (ks, vs) = jax.lax.scan(
+                body, h, (params["layers"], caches["k"], caches["v"]),
+                unroll=cfg.unroll_layers,
+            )
+            new_caches = {"k": ks, "v": vs}
+
+    h = _final_norm(params, cfg, h)
+    logits = lm_logits(params, cfg, h[:, 0])
+    logits = _constrain(logits, mesh, P(dp, "model"))
+    return logits, new_caches
+
+
+def make_serve_step(cfg: ArchConfig, mesh=None, window: bool = False,
+                    batch_sharded: bool = True,
+                    moe_serving_mode: str = "weight_gather"):
+    def serve_step(params, caches, token_or_embed, pos):
+        kw = {"embed": token_or_embed} if cfg.embeds_in else {"token": token_or_embed}
+        return decode_step(params, cfg, caches, pos=pos, window=window,
+                           mesh=mesh, batch_sharded=batch_sharded,
+                           moe_serving_mode=moe_serving_mode, **kw)
+
+    return serve_step

@@ -1,0 +1,3 @@
+from repro.optim.adamw import AdamW, AdamWState  # noqa: F401
+from repro.optim.lbfgs import LBFGSHistory, init_history, push, two_loop  # noqa: F401
+from repro.optim.owlqn_plus import OWLQNPlus, OWLQNState, StepStats  # noqa: F401

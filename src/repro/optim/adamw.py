@@ -1,0 +1,48 @@
+"""Minimal AdamW over pytrees (substrate for the transformer zoo; optax is
+not available offline). Matches optax.adamw semantics (decoupled weight
+decay, bias-corrected moments)."""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+class AdamWState(NamedTuple):
+    mu: Pytree
+    nu: Pytree
+    count: jax.Array
+
+
+class AdamW(NamedTuple):
+    lr: float | Callable[[jax.Array], jax.Array] = 1e-3
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+
+    def init(self, params: Pytree) -> AdamWState:
+        z = jax.tree.map(jnp.zeros_like, params)
+        return AdamWState(mu=z, nu=jax.tree.map(jnp.copy, z), count=jnp.asarray(0))
+
+    def update(self, grads: Pytree, state: AdamWState, params: Pytree):
+        count = state.count + 1
+        lr = self.lr(count) if callable(self.lr) else self.lr
+        mu = jax.tree.map(lambda m, g: self.b1 * m + (1 - self.b1) * g, state.mu, grads)
+        nu = jax.tree.map(lambda v, g: self.b2 * v + (1 - self.b2) * g * g, state.nu, grads)
+        mu_hat_scale = 1.0 / (1 - self.b1 ** count)
+        nu_hat_scale = 1.0 / (1 - self.b2 ** count)
+        updates = jax.tree.map(
+            lambda m, v, p: -lr
+            * (m * mu_hat_scale / (jnp.sqrt(v * nu_hat_scale) + self.eps)
+               + self.weight_decay * p),
+            mu, nu, params,
+        )
+        return updates, AdamWState(mu=mu, nu=nu, count=count)
+
+    def apply(self, grads: Pytree, state: AdamWState, params: Pytree):
+        updates, state = self.update(grads, state, params)
+        return jax.tree.map(jnp.add, params, updates), state

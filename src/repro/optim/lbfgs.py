@@ -1,0 +1,103 @@
+"""Limited-memory BFGS two-loop recursion over pytrees.
+
+History is stored as stacked leaves: each leaf of S/Y has shape
+(M, *leaf.shape), ordered oldest -> newest in the last ``count`` slots
+(slot M-1 is the newest). Invalid slots (unfilled, or pairs with
+y.s <= 0, which would break positive-definiteness of the implied H)
+are masked out — this realises the paper's §2.2.2 PD safeguard at the
+history level as well.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+def tree_vdot(a: Pytree, b: Pytree) -> jax.Array:
+    leaves = jax.tree.leaves(jax.tree.map(lambda x, y: jnp.vdot(x, y), a, b))
+    return jnp.sum(jnp.stack(leaves)) if len(leaves) > 1 else leaves[0]
+
+
+def tree_axpy(alpha, x: Pytree, y: Pytree) -> Pytree:
+    return jax.tree.map(lambda xi, yi: alpha * xi + yi, x, y)
+
+
+def tree_scale(alpha, x: Pytree) -> Pytree:
+    return jax.tree.map(lambda xi: alpha * xi, x)
+
+
+class LBFGSHistory(NamedTuple):
+    s: Pytree  # leaves (M, ...)
+    y: Pytree  # leaves (M, ...)
+    rho: jax.Array  # (M,) 1/(y.s), 0 where invalid
+    valid: jax.Array  # (M,) bool
+    gamma: jax.Array  # scalar: (s.y)/(y.y) of newest valid pair, else 1.0
+
+
+def init_history(params_like: Pytree, memory: int) -> LBFGSHistory:
+    zeros = jax.tree.map(
+        lambda x: jnp.zeros((memory,) + x.shape, x.dtype), params_like
+    )
+    return LBFGSHistory(
+        s=zeros,
+        y=jax.tree.map(jnp.copy, zeros),
+        rho=jnp.zeros((memory,)),
+        valid=jnp.zeros((memory,), dtype=bool),
+        gamma=jnp.asarray(1.0),
+    )
+
+
+def push(history: LBFGSHistory, s_new: Pytree, y_new: Pytree, eps: float = 1e-10) -> LBFGSHistory:
+    """Append (s, y); newest lives at index M-1. Pair masked if y.s <= eps."""
+    ys = tree_vdot(y_new, s_new)
+    yy = tree_vdot(y_new, y_new)
+    ok = ys > eps
+    roll = lambda h, new: jnp.concatenate([h[1:], new[None]], axis=0)
+    s = jax.tree.map(roll, history.s, s_new)
+    y = jax.tree.map(roll, history.y, y_new)
+    rho = jnp.concatenate([history.rho[1:], jnp.where(ok, 1.0 / jnp.where(ok, ys, 1.0), 0.0)[None]])
+    valid = jnp.concatenate([history.valid[1:], ok[None]])
+    gamma = jnp.where(ok, ys / jnp.where(yy > 0, yy, 1.0), history.gamma)
+    return LBFGSHistory(s=s, y=y, rho=rho, valid=valid, gamma=gamma)
+
+
+def two_loop(history: LBFGSHistory, d: Pytree) -> Pytree:
+    """Return H @ d (H = implicit inverse Hessian). d plays the role that
+    the negative gradient plays in smooth LBFGS (the paper uses the Eq. 9
+    direction instead)."""
+    M = history.rho.shape[0]
+
+    def slot(tree, i):
+        return jax.tree.map(lambda x: x[i], tree)
+
+    def bwd(i, carry):
+        # i runs 0..M-1 mapped to newest..oldest: idx = M-1-i
+        q, alphas = carry
+        idx = M - 1 - i
+        s_i, y_i = slot(history.s, idx), slot(history.y, idx)
+        a = history.rho[idx] * tree_vdot(s_i, q)
+        a = jnp.where(history.valid[idx], a, 0.0)
+        q = tree_axpy(-a, y_i, q)
+        alphas = alphas.at[idx].set(a)
+        return q, alphas
+
+    q, alphas = jax.lax.fori_loop(0, M, bwd, (d, jnp.zeros((M,))))
+    q = tree_scale(history.gamma, q)
+
+    def fwd(idx, q):
+        s_i, y_i = slot(history.s, idx), slot(history.y, idx)
+        b = history.rho[idx] * tree_vdot(y_i, q)
+        b = jnp.where(history.valid[idx], b, 0.0)
+        coef = jnp.where(history.valid[idx], alphas[idx] - b, 0.0)
+        return tree_axpy(coef, s_i, q)
+
+    q = jax.lax.fori_loop(0, M, fwd, q)
+    return q
+
+
+def any_valid(history: LBFGSHistory) -> jax.Array:
+    return jnp.any(history.valid)

@@ -1,0 +1,250 @@
+"""Algorithm 1 (the paper's optimizer): OWLQN generalised to L1 + L2,1
+non-convex objectives via directional-derivative descent directions.
+
+Differences from standard LBFGS — exactly the paper's three modifications:
+  1. Eq. 9 direction ``d`` replaces the negative gradient.
+  2. Update direction ``p = pi(H d; d)`` constrained to d's orthant;
+     pairs with y.s <= 0 are masked from the history (PD safeguard), and
+     with an all-invalid history the two-loop degenerates to ``p = d``.
+  3. Backtracking line search projects every trial point onto the orthant
+     xi of Eq. 10 (Eq. 12).
+
+Works on arbitrary pytrees. Group (L2,1) semantics per leaf: for ndim >= 2
+leaves, axis -1 is the within-group axis (feature rows for the paper's
+(d, 2m) Theta; fan-in rows for dense layers). 1-D leaves are treated as
+(n, 1) — every element its own group, so L2,1 degenerates to L1 there.
+
+The optimizer is pure-JAX and jit-able; under pjit with sharded Theta the
+element/row-local algebra stays shard-local and only the scalar dot
+products reduce — the paper's worker/server split (see DESIGN.md §3).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import direction as dirlib
+from repro.optim import lbfgs
+
+Pytree = Any
+
+
+# ---------------------------------------------------------------- leaf views
+def _grouped(leaf: jax.Array) -> jax.Array:
+    return leaf[:, None] if leaf.ndim == 1 else leaf
+
+
+def _ungrouped(arr: jax.Array, like: jax.Array) -> jax.Array:
+    return arr[:, 0] if like.ndim == 1 else arr
+
+
+def _map_grouped(fn, *trees: Pytree) -> Pytree:
+    def apply(*leaves):
+        out = fn(*(_grouped(l) for l in leaves))
+        return _ungrouped(out, leaves[0])
+
+    return jax.tree.map(apply, *trees)
+
+
+def direction_tree(theta: Pytree, grad: Pytree, lam: float, beta: float) -> Pytree:
+    return _map_grouped(partial(dirlib.descent_direction, lam=lam, beta=beta), theta, grad)
+
+
+def orthant_tree(theta: Pytree, d: Pytree) -> Pytree:
+    return jax.tree.map(dirlib.choose_orthant, theta, d)
+
+
+def project_tree(x: Pytree, omega: Pytree) -> Pytree:
+    return jax.tree.map(dirlib.project_orthant, x, omega)
+
+
+def reg_value(theta: Pytree, lam: float, beta: float) -> jax.Array:
+    def leaf_reg(leaf):
+        g = _grouped(leaf)
+        l21 = jnp.sum(jnp.sqrt(jnp.sum(g * g, axis=-1)))
+        l1 = jnp.sum(jnp.abs(g))
+        return lam * l21 + beta * l1
+
+    vals = [leaf_reg(l) for l in jax.tree.leaves(theta)]
+    return jnp.sum(jnp.stack(vals))
+
+
+def dirderiv_tree(theta: Pytree, grad: Pytree, d: Pytree, lam: float, beta: float) -> jax.Array:
+    vals = [
+        dirlib.directional_derivative(_grouped(t), _grouped(g), _grouped(dd), lam, beta)
+        for t, g, dd in zip(jax.tree.leaves(theta), jax.tree.leaves(grad), jax.tree.leaves(d))
+    ]
+    return jnp.sum(jnp.stack(vals))
+
+
+# ------------------------------------------------------------------- states
+class OWLQNState(NamedTuple):
+    theta: Pytree
+    history: lbfgs.LBFGSHistory
+    prev_theta: Pytree  # Theta^{k-1} (for s^{(k)})
+    prev_d: Pytree  # d^{k-1}      (for y^{(k)} = d^{k-1} - d^{k})
+    step: jax.Array  # iteration counter
+    f: jax.Array  # full objective at theta (filled after first step)
+
+
+class StepStats(NamedTuple):
+    f: jax.Array  # objective BEFORE the step
+    f_new: jax.Array
+    alpha: jax.Array  # accepted step size (0 if line search failed)
+    ls_iters: jax.Array
+    grad_norm: jax.Array  # ||d|| — the optimality measure for Eq. 4
+    nnz: jax.Array  # non-zero parameter count (sparsity tracking)
+
+
+class OWLQNPlus:
+    """Algorithm 1. ``loss_and_grad(theta) -> (loss, grad)`` must be the
+    SMOOTH part (Eq. 5) only; regularisers are handled internally."""
+
+    def __init__(
+        self,
+        loss_and_grad: Callable[[Pytree], tuple[jax.Array, Pytree]],
+        lam: float,
+        beta: float,
+        memory: int = 10,
+        c1: float = 1e-4,
+        max_ls: int = 30,
+        ls_shrink: float = 0.5,
+    ):
+        self.loss_and_grad = loss_and_grad
+        self.lam = float(lam)
+        self.beta = float(beta)
+        self.memory = memory
+        self.c1 = c1
+        self.max_ls = max_ls
+        self.ls_shrink = ls_shrink
+
+    # -- init ---------------------------------------------------------------
+    def init(self, theta0: Pytree) -> OWLQNState:
+        return OWLQNState(
+            theta=theta0,
+            history=lbfgs.init_history(theta0, self.memory),
+            prev_theta=jax.tree.map(jnp.copy, theta0),
+            prev_d=jax.tree.map(jnp.zeros_like, theta0),
+            step=jnp.asarray(0),
+            f=jnp.asarray(jnp.inf),
+        )
+
+    # -- objective ----------------------------------------------------------
+    def objective(self, theta: Pytree) -> jax.Array:
+        loss, _ = self.loss_and_grad(theta)
+        return loss + reg_value(theta, self.lam, self.beta)
+
+    # -- one iteration of Algorithm 1 ----------------------------------------
+    def step(self, state: OWLQNState) -> tuple[OWLQNState, StepStats]:
+        lam, beta = self.lam, self.beta
+        theta = state.theta
+        loss, grad = self.loss_and_grad(theta)
+        f0 = loss + reg_value(theta, lam, beta)
+
+        # (1) Eq. 9 direction
+        d = direction_tree(theta, grad, lam, beta)
+
+        # (5)(6) push history pair from the PREVIOUS iteration
+        s_prev = jax.tree.map(jnp.subtract, theta, state.prev_theta)
+        y_prev = jax.tree.map(jnp.subtract, state.prev_d, d)  # -d^k - (-d^{k-1})
+        history = jax.tree.map(
+            lambda new, old: jnp.where(state.step > 0, new, old),
+            lbfgs.push(state.history, s_prev, y_prev),
+            state.history,
+        )
+
+        # (2) p = pi(H d; d); empty/masked history degenerates to p = d
+        p = project_tree(lbfgs.two_loop(history, d), d)
+        # safeguard: if the projection annihilated p (fully conflicting
+        # curvature), fall back to d itself.
+        p_norm2 = lbfgs.tree_vdot(p, p)
+        p = jax.tree.map(lambda pi, di: jnp.where(p_norm2 > 0, pi, di), p, d)
+
+        # (3) orthant xi (Eq. 10) + projected backtracking line search (Eq.12)
+        xi = orthant_tree(theta, d)
+        d_norm = jnp.sqrt(lbfgs.tree_vdot(d, d))
+        alpha0 = jnp.where(
+            state.step == 0,
+            1.0 / jnp.maximum(jnp.sqrt(lbfgs.tree_vdot(p, p)), 1e-12),
+            1.0,
+        )
+        neg_d = jax.tree.map(jnp.negative, d)  # pseudo-gradient analogue
+
+        def trial(alpha):
+            theta_t = project_tree(
+                jax.tree.map(lambda t, pi: t + alpha * pi, theta, p), xi
+            )
+            loss_t, _ = self.loss_and_grad(theta_t)
+            f_t = loss_t + reg_value(theta_t, lam, beta)
+            # OWLQN acceptance: f(x') <= f(x) + c1 * <-d, x' - x>
+            gain = lbfgs.tree_vdot(neg_d, jax.tree.map(jnp.subtract, theta_t, theta))
+            ok = f_t <= f0 + self.c1 * gain
+            return theta_t, f_t, ok
+
+        def ls_cond(carry):
+            alpha, _theta_t, _f_t, ok, it = carry
+            return jnp.logical_and(jnp.logical_not(ok), it < self.max_ls)
+
+        def ls_body(carry):
+            alpha, _theta_t, _f_t, _ok, it = carry
+            alpha = jnp.where(it == 0, alpha, alpha * self.ls_shrink)
+            theta_t, f_t, ok = trial(alpha)
+            return alpha, theta_t, f_t, ok, it + 1
+
+        init = (alpha0, theta, f0, jnp.asarray(False), jnp.asarray(0))
+        alpha, theta_t, f_t, ok, ls_iters = jax.lax.while_loop(ls_cond, ls_body, init)
+
+        # line-search failure -> keep theta (alpha = 0)
+        theta_new = jax.tree.map(
+            lambda a, b: jnp.where(ok, a, b), theta_t, theta
+        )
+        f_new = jnp.where(ok, f_t, f0)
+        alpha = jnp.where(ok, alpha, 0.0)
+
+        nnz = jnp.sum(
+            jnp.stack([jnp.sum(l != 0.0) for l in jax.tree.leaves(theta_new)])
+        )
+        new_state = OWLQNState(
+            theta=theta_new,
+            history=history,
+            prev_theta=theta,
+            prev_d=d,
+            step=state.step + 1,
+            f=f_new,
+        )
+        stats = StepStats(
+            f=f0, f_new=f_new, alpha=alpha, ls_iters=ls_iters, grad_norm=d_norm, nnz=nnz
+        )
+        return new_state, stats
+
+    # -- driver ---------------------------------------------------------------
+    def run(
+        self,
+        theta0: Pytree,
+        max_iters: int = 100,
+        tol: float = 1e-6,
+        callback: Callable[[int, StepStats], None] | None = None,
+        jit: bool = True,
+    ) -> tuple[Pytree, list[StepStats]]:
+        """Python-loop driver with early stopping on ||d|| and f stagnation."""
+        step_fn = jax.jit(self.step) if jit else self.step
+        state = self.init(theta0)
+        trace: list[StepStats] = []
+        prev_f = None
+        for k in range(max_iters):
+            state, stats = step_fn(state)
+            trace.append(jax.device_get(stats))
+            if callback is not None:
+                callback(k, trace[-1])
+            f_new = float(trace[-1].f_new)
+            if float(trace[-1].grad_norm) < tol:
+                break
+            if float(trace[-1].alpha) == 0.0:  # line search failed: converged
+                break
+            if prev_f is not None and abs(prev_f - f_new) <= tol * max(1.0, abs(prev_f)):
+                break
+            prev_f = f_new
+        return state.theta, trace

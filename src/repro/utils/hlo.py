@@ -1,0 +1,65 @@
+"""Parse collective traffic out of compiled (post-SPMD) HLO text.
+
+cost_analysis() has no collective-byte entry, so we sum the RESULT shapes
+of every collective op in the per-device program. This is a volume proxy:
+e.g. an all-gather's result bytes are the full gathered size per device,
+an all-reduce's are the reduced tensor per device. Ring-algorithm
+wire-bytes differ by small constant factors; we report the proxy and use
+it consistently for before/after comparisons.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+COLLECTIVE_OPS = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Returns {op_kind: {"count": n, "bytes": b}, ..., "total_bytes": int}.
+
+    Matches lines of the form
+      %name = TYPE all-gather(...)   /  = (TYPE, TYPE) all-reduce(...)
+    and sums the result TYPE bytes (per-device program => per-chip bytes).
+    `-start` variants are counted; `-done` variants are skipped to avoid
+    double counting.
+    """
+    stats: dict = defaultdict(lambda: {"count": 0, "bytes": 0})
+    for line in hlo_text.splitlines():
+        for op in COLLECTIVE_OPS:
+            # require "<op>(" or "<op>-start(" as the instruction
+            m = re.search(rf"=\s+(.+?)\s+{op}(?:-start)?\(", line)
+            if m and f"{op}-done" not in line:
+                b = _shape_bytes(m.group(1))
+                stats[op]["count"] += 1
+                stats[op]["bytes"] += b
+                break
+    out = {k: dict(v) for k, v in stats.items()}
+    out["total_bytes"] = sum(v["bytes"] for v in stats.values())
+    return out

@@ -1,0 +1,78 @@
+"""Three-term roofline model from dry-run artifacts (TPU v5e constants).
+
+    compute term    = HLO_FLOPs_per_chip / peak_FLOP/s
+    memory term     = HLO_bytes_per_chip / HBM_bw
+    collective term = collective_bytes_per_chip / link_bw
+
+The SPMD program produced by pjit is per-device, so cost_analysis() numbers
+are already per-chip.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float  # per chip
+    hbm_bytes: float  # per chip
+    coll_bytes: float  # per chip
+    model_flops: float  # useful 6ND (or 2ND) per chip
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / PEAK_FLOPS_BF16
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def t_bound(self) -> float:
+        """Lower-bound step time if terms overlap perfectly."""
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs — remat/redundancy/padding waste gauge."""
+        return self.model_flops / self.flops if self.flops else 0.0
+
+    @property
+    def mfu_bound(self) -> float:
+        """Upper bound on model-FLOPs utilisation at the roofline."""
+        if self.t_bound == 0:
+            return 0.0
+        return (self.model_flops / PEAK_FLOPS_BF16) / self.t_bound
+
+    def to_dict(self) -> dict:
+        return {
+            "flops_per_chip": self.flops,
+            "hbm_bytes_per_chip": self.hbm_bytes,
+            "collective_bytes_per_chip": self.coll_bytes,
+            "model_flops_per_chip": self.model_flops,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "mfu_bound": self.mfu_bound,
+        }
+
+
+def model_flops_per_chip(cfg, shape_kind: str, tokens: int, chips: int) -> float:
+    """6*N_active*D for training, 2*N_active*D for inference, split per chip."""
+    n = cfg.active_param_count()
+    mult = 6 if shape_kind == "train" else 2
+    return mult * n * tokens / chips

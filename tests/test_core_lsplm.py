@@ -1,0 +1,100 @@
+"""Unit tests for the LS-PLM core model (Eq. 1-3)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    LSPLMConfig,
+    foe_mixture_proba,
+    init_params,
+    nll,
+    nll_common_feature,
+    objective,
+    predict_logits_stable,
+    predict_proba,
+    CTRBatch,
+)
+from repro.data import CTRDataConfig, generate, to_dense_batch
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _params(d=16, m=6, key=KEY):
+    return init_params(LSPLMConfig(num_features=d, num_regions=m), key, scale=0.5)
+
+
+def test_predict_is_probability():
+    p = _params()
+    x = jax.random.normal(jax.random.PRNGKey(1), (64, 16))
+    prob = predict_proba(p, x)
+    assert prob.shape == (64,)
+    assert np.all(np.asarray(prob) >= 0.0) and np.all(np.asarray(prob) <= 1.0)
+
+
+def test_foe_equivalence():
+    """Eq. 2 == Eq. 3 (FOE / mixed-LR view)."""
+    p = _params()
+    x = jax.random.normal(jax.random.PRNGKey(2), (32, 16))
+    np.testing.assert_allclose(
+        np.asarray(predict_proba(p, x)), np.asarray(foe_mixture_proba(p, x)), rtol=1e-6
+    )
+
+
+def test_stable_logps_consistent_with_proba():
+    p = _params()
+    x = jax.random.normal(jax.random.PRNGKey(3), (32, 16))
+    log_p1, log_p0 = predict_logits_stable(p, x)
+    np.testing.assert_allclose(
+        np.exp(np.asarray(log_p1)), np.asarray(predict_proba(p, x)), rtol=1e-5
+    )
+    # p1 + p0 == 1 (mixture of valid Bernoullis)
+    np.testing.assert_allclose(
+        np.exp(np.asarray(log_p1)) + np.exp(np.asarray(log_p0)), 1.0, rtol=1e-5
+    )
+
+
+def test_stable_logps_extreme_weights_no_nan():
+    p = _params()
+    p = p._replace(w=p.w * 1e4, u=p.u * 1e3)  # saturate everything
+    x = jax.random.normal(jax.random.PRNGKey(4), (8, 16))
+    log_p1, log_p0 = predict_logits_stable(p, x)
+    assert np.all(np.isfinite(np.asarray(log_p1)))
+    assert np.all(np.isfinite(np.asarray(log_p0)))
+
+
+def test_m_equals_one_reduces_to_lr():
+    """With m=1 the gate is constant 1 -> plain logistic regression."""
+    cfg = LSPLMConfig(num_features=16, num_regions=1)
+    p = init_params(cfg, KEY, scale=0.5)
+    x = jax.random.normal(jax.random.PRNGKey(5), (32, 16))
+    expected = jax.nn.sigmoid(x @ p.w[:, 0])
+    np.testing.assert_allclose(
+        np.asarray(predict_proba(p, x)), np.asarray(expected), rtol=1e-6
+    )
+
+
+def test_common_feature_nll_equals_dense_nll():
+    """Eq. 13: the trick is exact, not an approximation."""
+    cfg = CTRDataConfig(num_user_features=8, num_ad_features=8, noise_features=4)
+    batch, x_dense = generate(cfg, num_sessions=16)
+    dense = to_dense_batch(batch)
+    np.testing.assert_allclose(np.asarray(dense.x), x_dense, rtol=0, atol=0)
+
+    theta = jax.random.normal(KEY, (cfg.num_features, 2 * 5)) * 0.3
+    v_compressed = nll_common_feature(theta, batch)
+    v_dense = nll(theta, CTRBatch(x=jnp.asarray(dense.x), y=jnp.asarray(dense.y)))
+    np.testing.assert_allclose(float(v_compressed), float(v_dense), rtol=1e-5)
+
+
+def test_objective_adds_regularizers():
+    cfg = CTRDataConfig(num_user_features=8, num_ad_features=8, noise_features=4)
+    batch, _ = generate(cfg, num_sessions=8)
+    dense = to_dense_batch(batch)
+    b = CTRBatch(x=jnp.asarray(dense.x), y=jnp.asarray(dense.y))
+    theta = jax.random.normal(KEY, (cfg.num_features, 10)) * 0.3
+    f0 = objective(theta, b, lam=0.0, beta=0.0)
+    f1 = objective(theta, b, lam=1.0, beta=1.0)
+    l21 = jnp.sum(jnp.sqrt(jnp.sum(theta**2, axis=1)))
+    l1 = jnp.sum(jnp.abs(theta))
+    np.testing.assert_allclose(float(f1 - f0), float(l21 + l1), rtol=1e-5)

@@ -1,0 +1,131 @@
+"""Tests for Eq. 8-10 and Proposition 2 (the Eq. 9 direction)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.direction import (
+    choose_orthant,
+    descent_direction,
+    directional_derivative,
+    project_orthant,
+)
+
+
+def _numeric_dirderiv(f, theta, d, eps=1e-7):
+    # float64 one-sided difference (directional derivative is one-sided
+    # by definition, Eq. 7 — central differencing would be wrong at kinks)
+    return (f(theta + eps * d) - f(theta)) / eps
+
+
+def _full_objective(theta, grad_lin, lam, beta):
+    """A synthetic objective whose smooth part has constant gradient
+    grad_lin: f = <grad_lin, Theta> + lam*L21 + beta*L1. Evaluated in
+    float64 numpy so the finite difference has headroom."""
+    grad_lin = np.asarray(grad_lin, dtype=np.float64)
+
+    def f(t):
+        t = np.asarray(t, dtype=np.float64)
+        l21 = np.sum(np.sqrt(np.sum(t * t, axis=-1)))
+        l1 = np.sum(np.abs(t))
+        return np.vdot(grad_lin, t) + lam * l21 + beta * l1
+    return f
+
+
+def _rand_theta_with_zeros(key, d=12, m2=8):
+    k1, k2 = jax.random.split(key)
+    theta = jax.random.normal(k1, (d, m2))
+    # plant exact elementwise zeros and whole zero rows (all 3 Eq.9 cases)
+    mask = jax.random.bernoulli(k2, 0.5, theta.shape)
+    theta = theta * mask
+    theta = theta.at[0].set(0.0).at[5].set(0.0)
+    return theta
+
+
+@pytest.mark.parametrize("lam,beta", [(0.0, 0.0), (0.5, 0.0), (0.0, 0.7), (0.8, 0.6)])
+def test_closed_form_dirderiv_matches_numeric(lam, beta):
+    key = jax.random.PRNGKey(0)
+    theta = _rand_theta_with_zeros(key)
+    grad = jax.random.normal(jax.random.PRNGKey(1), theta.shape)
+    d = jax.random.normal(jax.random.PRNGKey(2), theta.shape)
+    f = _full_objective(theta, grad, lam, beta)
+    closed = float(directional_derivative(theta, grad, d, lam, beta))
+    numeric = float(_numeric_dirderiv(f, np.asarray(theta, np.float64), np.asarray(d, np.float64)))
+    np.testing.assert_allclose(closed, numeric, rtol=1e-3, atol=1e-3)
+
+
+@pytest.mark.parametrize("lam,beta", [(0.3, 0.2), (1.0, 1.0), (0.0, 1.0), (1.0, 0.0)])
+def test_direction_is_descent(lam, beta):
+    """f'(Theta; d) < 0 unless d == 0 (Prop. 2: d minimises the
+    directional derivative, and 0 is feasible)."""
+    for seed in range(5):
+        theta = _rand_theta_with_zeros(jax.random.PRNGKey(seed))
+        grad = jax.random.normal(jax.random.PRNGKey(100 + seed), theta.shape)
+        d = descent_direction(theta, grad, lam, beta)
+        dd = float(directional_derivative(theta, grad, d, lam, beta))
+        dnorm = float(jnp.linalg.norm(d))
+        if dnorm > 1e-8:
+            assert dd < 0.0, f"not a descent direction: f'={dd}, |d|={dnorm}"
+
+
+def test_reduces_to_owlqn_pseudogradient_when_lam_zero():
+    """With lam=0, Eq. 9 must equal OWLQN's negative pseudo-gradient
+    (Andrew & Gao 2007), the paper's own claim after Prop. 2."""
+    beta = 0.4
+    theta = _rand_theta_with_zeros(jax.random.PRNGKey(3))
+    grad = jax.random.normal(jax.random.PRNGKey(4), theta.shape)
+    d = descent_direction(theta, grad, lam=0.0, beta=beta)
+
+    # reference OWLQN pseudo-gradient (elementwise; sign convention: we
+    # return the NEGATIVE pseudo-gradient as the descent direction)
+    g = np.asarray(grad)
+    t = np.asarray(theta)
+    pg = np.zeros_like(g)
+    nz = t != 0
+    pg[nz] = g[nz] + beta * np.sign(t[nz])
+    z = ~nz
+    right = g + beta  # right partial derivative at 0
+    left = g - beta
+    pg[z & (left > 0)] = left[z & (left > 0)]
+    pg[z & (right < 0)] = right[z & (right < 0)]
+    np.testing.assert_allclose(np.asarray(d), -pg, rtol=1e-5, atol=1e-6)
+
+
+def test_direction_zero_at_optimum_of_pure_reg():
+    """If grad=0 and Theta=0, the direction must be 0 (0 is optimal)."""
+    theta = jnp.zeros((6, 4))
+    grad = jnp.zeros((6, 4))
+    d = descent_direction(theta, grad, lam=0.5, beta=0.5)
+    assert float(jnp.abs(d).max()) == 0.0
+
+
+def test_direction_soft_thresholds_small_gradients():
+    """At Theta=0, |grad| <= beta entries must yield d=0 (subgradient
+    optimality), and rows with ||softthresh(g,beta)|| <= lam must be 0."""
+    grad = jnp.array([[0.3, -0.2], [2.0, 0.0]])
+    theta = jnp.zeros_like(grad)
+    d = descent_direction(theta, grad, lam=0.0, beta=0.5)
+    assert float(jnp.abs(d[0]).max()) == 0.0
+    assert float(d[1, 0]) == -(2.0 - 0.5) * 1.0  # sign(-g)*(|g|-beta): g=2 -> -1.5
+    # group shrink: row norm 1.5 <= lam=2 -> whole row zero
+    d2 = descent_direction(theta, grad, lam=2.0, beta=0.5)
+    assert float(jnp.abs(d2).max()) == 0.0
+
+
+def test_project_orthant():
+    theta = jnp.array([1.0, -2.0, 3.0, -4.0, 0.0])
+    omega = jnp.array([1.0, 1.0, -1.0, -1.0, 1.0])
+    out = project_orthant(theta, omega)
+    np.testing.assert_array_equal(np.asarray(out), [1.0, 0.0, 0.0, -4.0, 0.0])
+
+
+def test_project_idempotent_and_orthant_consistency():
+    key = jax.random.PRNGKey(7)
+    theta = jax.random.normal(key, (20,))
+    d = jax.random.normal(jax.random.PRNGKey(8), (20,))
+    xi = choose_orthant(theta, d)
+    p1 = project_orthant(theta, xi)
+    p2 = project_orthant(p1, xi)
+    np.testing.assert_array_equal(np.asarray(p1), np.asarray(p2))
+    # theta entries never flip sign under projection onto own orthant
+    np.testing.assert_array_equal(np.asarray(p1), np.asarray(theta))

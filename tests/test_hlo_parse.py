@@ -1,0 +1,36 @@
+"""Unit tests for the collective-byte HLO parser (roofline input)."""
+from repro.utils.hlo import _shape_bytes, collective_bytes
+
+
+def test_shape_bytes():
+    assert _shape_bytes("f32[16,4096]") == 16 * 4096 * 4
+    assert _shape_bytes("bf16[2,3,4]{2,1,0}") == 24 * 2
+    assert _shape_bytes("(f32[8], s32[4])") == 32 + 16
+    assert _shape_bytes("pred[]") == 1  # scalar
+    assert _shape_bytes("token[]") == 0  # non-numeric types ignored
+
+
+def test_collective_bytes_counts_ops():
+    hlo = """
+  %ag = f32[256,512]{1,0} all-gather(%x), replica_groups={}
+  %ar.1 = bf16[1024]{0} all-reduce(%y), to_apply=%add
+  %rs = (f32[64], f32[64]) reduce-scatter(%a, %b), dimensions={0}
+  %a2a = f32[32,32]{1,0} all-to-all(%z), dimensions={0}
+  %cp = f32[8]{0} collective-permute(%w), source_target_pairs={{0,1}}
+  %ags = f32[128]{0} all-gather-start(%v)
+  %agd = f32[128]{0} all-gather-done(%ags)
+  %not_a_collective = f32[999]{0} add(%p, %q)
+"""
+    stats = collective_bytes(hlo)
+    assert stats["all-gather"]["count"] == 2  # ag + ag-start (done skipped)
+    assert stats["all-gather"]["bytes"] == 256 * 512 * 4 + 128 * 4
+    assert stats["all-reduce"]["bytes"] == 1024 * 2
+    assert stats["reduce-scatter"]["bytes"] == 2 * 64 * 4
+    assert stats["all-to-all"]["bytes"] == 32 * 32 * 4
+    assert stats["collective-permute"]["bytes"] == 8 * 4
+    assert stats["total_bytes"] == sum(
+        v["bytes"] for k, v in stats.items() if k != "total_bytes")
+
+
+def test_no_collectives():
+    assert collective_bytes("%x = f32[4] add(%a, %b)")["total_bytes"] == 0

@@ -1,0 +1,82 @@
+"""Hybrid (zamba-style) specifics: the shared transformer block is ONE
+set of weights applied every k layers; sliding-window decode wraps
+correctly past the window boundary."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import decode_step, forward, init_caches, init_model
+
+
+def test_shared_block_gradient_accumulates_across_groups():
+    """If the shared block were per-group copies, its grad tree would have
+    a leading J axis; being shared, grads accumulate into ONE param set
+    and perturbing it changes all groups' outputs."""
+    cfg = get_config("zamba2-2.7b").reduced()
+    assert cfg.num_layers // cfg.shared_attn_every == 1  # reduced: 1 group
+    cfg = dataclasses.replace(cfg, num_layers=4)  # 2 groups
+    params = init_model(cfg, jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0, cfg.vocab_size)
+
+    def loss(p):
+        logits, _ = forward(p, cfg, tokens=toks, remat=False)
+        return jnp.sum(logits.astype(jnp.float32) ** 2)
+
+    g = jax.grad(loss)(params)
+    wq_g = g["shared"]["attn"]["wq"]
+    assert wq_g.shape == params["shared"]["attn"]["wq"].shape  # no J axis
+    assert float(jnp.abs(wq_g).max()) > 0
+
+    # ablate: zeroing the shared block changes outputs of BOTH groups
+    p2 = jax.tree.map(jnp.copy, params)
+    p2["shared"]["attn"]["wq"] = jnp.zeros_like(p2["shared"]["attn"]["wq"])
+    l1, _ = forward(params, cfg, tokens=toks, remat=False)
+    l2, _ = forward(p2, cfg, tokens=toks, remat=False)
+    assert float(jnp.abs(l1 - l2).max()) > 1e-3
+
+
+def test_sliding_window_wraps_and_is_shift_invariant_single_layer():
+    """Ring buffer wraps correctly far past the window. With ONE layer the
+    logits depend only on the last W tokens (exact shift invariance); with
+    stacked layers the receptive field grows beyond W through cached keys
+    (by design), so the multi-layer check is finiteness + wrap behaviour.
+    """
+    cfg = dataclasses.replace(get_config("llama3.2-1b").reduced(),
+                              num_layers=1)
+    params = init_model(cfg, jax.random.PRNGKey(0))
+    B, W = 1, 8
+    rng = np.random.default_rng(0)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, 24), jnp.int32)
+
+    def run(seq, offset=0):
+        caches = init_caches(cfg, B, W)
+        out = None
+        for t, tok in enumerate(np.asarray(seq)):
+            out, caches = decode_step(
+                params, cfg, caches, token=jnp.asarray([tok]),
+                pos=jnp.asarray(t + offset), window=True)
+        return np.asarray(out, np.float32)
+
+    full = run(toks)  # wraps the ring buffer twice
+    assert np.all(np.isfinite(full))
+    # feeding ONLY the last W tokens with matching absolute positions must
+    # reproduce the logits exactly (1 layer => window == receptive field)
+    tail = run(toks[-W:], offset=len(toks) - W)
+    np.testing.assert_allclose(tail, full, rtol=2e-2, atol=2e-2)
+
+
+def test_sliding_window_multilayer_finite_past_wrap():
+    cfg = get_config("llama3.2-1b").reduced()
+    params = init_model(cfg, jax.random.PRNGKey(0))
+    caches = init_caches(cfg, 1, 8)
+    rng = np.random.default_rng(1)
+    out = None
+    for t in range(20):
+        out, caches = decode_step(
+            params, cfg, caches,
+            token=jnp.asarray([rng.integers(0, cfg.vocab_size)]),
+            pos=jnp.asarray(t), window=True)
+    assert np.all(np.isfinite(np.asarray(out, np.float32)))

@@ -1,0 +1,44 @@
+"""int8 KV cache (quantised serving) must closely track the bf16 cache."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import decode_step, init_caches, init_model
+
+
+def test_int8_kv_decode_tracks_bf16():
+    cfg = get_config("qwen1.5-32b").reduced()
+    cfg8 = dataclasses.replace(cfg, kv_cache_dtype="int8")
+    params = init_model(cfg, jax.random.PRNGKey(0))
+    B, S = 2, 12
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab_size)
+    c16 = init_caches(cfg, B, 32)
+    c8 = init_caches(cfg8, B, 32)
+    assert c8["k"].dtype == jnp.int8 and "k_scale" in c8
+
+    agree = 0
+    for t in range(S):
+        l16, c16 = decode_step(params, cfg, c16, token=tokens[:, t],
+                               pos=jnp.asarray(t))
+        l8, c8 = decode_step(params, cfg8, c8, token=tokens[:, t],
+                             pos=jnp.asarray(t))
+        a16 = np.asarray(l16, np.float32)
+        a8 = np.asarray(l8, np.float32)
+        assert np.all(np.isfinite(a8))
+        # logits close; argmax agreement across steps
+        np.testing.assert_allclose(a8, a16, rtol=0.2, atol=0.2)
+        agree += int((a8.argmax(-1) == a16.argmax(-1)).all())
+    assert agree >= S - 1, f"top-1 agreement {agree}/{S}"
+
+
+def test_int8_cache_memory_is_half():
+    cfg = dataclasses.replace(get_config("llama3.2-1b").reduced(),
+                              kv_cache_dtype="int8")
+    c = init_caches(cfg, 2, 64)
+    bf16 = init_caches(get_config("llama3.2-1b").reduced(), 2, 64)
+    bytes8 = sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(c))
+    bytes16 = sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(bf16))
+    assert bytes8 < 0.6 * bytes16  # int8 + small scale overhead

@@ -1,0 +1,139 @@
+"""Tests for Algorithm 1 (OWLQN+): convergence, sparsity, invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import CTRBatch, init_params, LSPLMConfig, objective, predict_proba
+from repro.core.objective import smooth_loss_and_grad
+from repro.data import CTRDataConfig, auc, generate, to_dense_batch
+from repro.optim import OWLQNPlus
+
+
+def _quadratic_problem(d=20, m2=6, seed=0):
+    """Smooth part: 0.5||A theta - b||^2 (convex); known solvable baseline."""
+    rng = np.random.default_rng(seed)
+    A = jnp.asarray(rng.normal(size=(40, d)) / np.sqrt(d), jnp.float32)
+    theta_true = rng.normal(size=(d, m2)).astype(np.float32)
+    theta_true[rng.random((d, m2)) < 0.6] = 0.0  # sparse truth
+    b = A @ jnp.asarray(theta_true)
+
+    def loss_and_grad(theta):
+        r = A @ theta - b
+        return 0.5 * jnp.vdot(r, r), A.T @ r
+
+    return loss_and_grad, jnp.asarray(theta_true)
+
+
+def test_converges_smooth_case():
+    """lam=beta=0: plain LBFGS on a convex quadratic -> near-exact solve."""
+    lg, theta_true = _quadratic_problem()
+    opt = OWLQNPlus(lg, lam=0.0, beta=0.0, memory=10)
+    theta, trace = opt.run(jnp.zeros_like(theta_true), max_iters=200, tol=1e-10)
+    final = float(lg(theta)[0])
+    assert final < 1e-6, f"final loss {final}"
+
+
+def test_monotone_decrease():
+    lg, theta_true = _quadratic_problem()
+    opt = OWLQNPlus(lg, lam=0.3, beta=0.3)
+    _, trace = opt.run(jnp.zeros_like(theta_true), max_iters=50)
+    fs = [float(s.f) for s in trace] + [float(trace[-1].f_new)]
+    # f is evaluated pre-step; accepted steps never increase the objective
+    for a, b in zip(fs[:-1], fs[1:]):
+        assert b <= a + 1e-4 * max(1.0, abs(a)), (a, b)
+
+
+def test_l1_induces_elementwise_sparsity():
+    lg, theta_true = _quadratic_problem()
+    opt_dense = OWLQNPlus(lg, lam=0.0, beta=0.0)
+    opt_sparse = OWLQNPlus(lg, lam=0.0, beta=2.0)
+    t_dense, _ = opt_dense.run(jnp.ones_like(theta_true) * 0.1, max_iters=100)
+    t_sparse, _ = opt_sparse.run(jnp.ones_like(theta_true) * 0.1, max_iters=100)
+    nnz_dense = int(jnp.sum(t_dense != 0))
+    nnz_sparse = int(jnp.sum(t_sparse != 0))
+    assert nnz_sparse < nnz_dense
+    assert nnz_sparse < theta_true.size * 0.8
+
+
+def test_l21_induces_row_sparsity():
+    """Table 2's claim: L2,1 kills whole feature rows."""
+    lg, theta_true = _quadratic_problem()
+    opt = OWLQNPlus(lg, lam=4.0, beta=0.0)
+    theta, _ = opt.run(jnp.ones_like(theta_true) * 0.1, max_iters=150)
+    row_norms = np.asarray(jnp.sqrt(jnp.sum(theta**2, axis=1)))
+    zero_rows = int((row_norms == 0.0).sum())
+    assert zero_rows > 0, "L2,1 should remove whole features"
+    # surviving rows are fully dense or fully zero more often than chance:
+    # elementwise zeros inside surviving rows only come from projection
+    t = np.asarray(theta)
+    for i in range(t.shape[0]):
+        if row_norms[i] == 0.0:
+            np.testing.assert_array_equal(t[i], 0.0)
+
+
+def test_lasso_matches_scipy_proximal_reference():
+    """L1-only convex case cross-checked against scipy's L-BFGS-B split
+    formulation (theta = a - b, a,b >= 0) — an exact LASSO reference."""
+    from scipy.optimize import minimize
+
+    rng = np.random.default_rng(1)
+    A = rng.normal(size=(30, 10)).astype(np.float64)
+    b = rng.normal(size=(30,)).astype(np.float64)
+    beta = 1.5
+
+    Aj, bj = jnp.asarray(A, jnp.float32), jnp.asarray(b, jnp.float32)
+
+    def lg(theta):
+        r = Aj @ theta[:, 0] - bj
+        return 0.5 * jnp.vdot(r, r), (Aj.T @ r)[:, None]
+
+    opt = OWLQNPlus(lg, lam=0.0, beta=beta)
+    theta, _ = opt.run(jnp.zeros((10, 1), jnp.float32), max_iters=300, tol=1e-12)
+    ours = float(0.5 * np.sum((A @ np.asarray(theta)[:, 0] - b) ** 2)
+                 + beta * np.abs(np.asarray(theta)).sum())
+
+    def split_obj(z):
+        a, c = z[:10], z[10:]
+        t = a - c
+        r = A @ t - b
+        return 0.5 * r @ r + beta * (a.sum() + c.sum())
+
+    def split_grad(z):
+        a, c = z[:10], z[10:]
+        g = A.T @ (A @ (a - c) - b)
+        return np.concatenate([g + beta, -g + beta])
+
+    res = minimize(split_obj, np.zeros(20), jac=split_grad, method="L-BFGS-B",
+                   bounds=[(0, None)] * 20, options={"maxiter": 2000, "ftol": 1e-14})
+    assert ours <= res.fun * (1 + 1e-3) + 1e-6, (ours, res.fun)
+
+
+def test_lsplm_end_to_end_beats_lr():
+    """The paper's headline claim (Fig. 5): LS-PLM > LR on nonlinear data."""
+    cfg = CTRDataConfig(num_user_features=24, num_ad_features=24,
+                        noise_features=8, true_regions=4, seed=0)
+    train_cf, _ = generate(cfg, num_sessions=4000, seed=1)
+    test_cf, _ = generate(cfg, num_sessions=800, seed=2)
+    train = to_dense_batch(train_cf)
+    test = to_dense_batch(test_cf)
+    tb = CTRBatch(x=jnp.asarray(train.x), y=jnp.asarray(train.y))
+    d = cfg.num_features
+
+    def fit(m, lam, beta, iters):
+        theta0 = jnp.asarray(
+            0.01 * np.random.default_rng(0).normal(size=(d, 2 * m)), jnp.float32
+        )
+        lg = lambda theta: smooth_loss_and_grad(theta, tb)
+        opt = OWLQNPlus(lg, lam=lam, beta=beta)
+        theta, _ = opt.run(theta0, max_iters=iters)
+        from repro.core.lsplm import params_from_theta
+        return np.asarray(predict_proba(params_from_theta(theta), jnp.asarray(test.x)))
+
+    auc_lr = auc(test.y, fit(m=1, lam=0.0, beta=1.0, iters=30))
+    auc_plm = auc(test.y, fit(m=8, lam=1.0, beta=1.0, iters=70))
+    # Fig. 5: LS-PLM improves AUC over LR markedly (paper: +1.4% absolute
+    # on production data; our synthetic truth is piecewise-linear so the
+    # gap is larger)
+    assert auc_plm > auc_lr + 0.05, (auc_lr, auc_plm)
+    assert auc_plm > 0.8

@@ -1,0 +1,154 @@
+"""Property-based tests (hypothesis) for system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.direction import (
+    choose_orthant,
+    descent_direction,
+    directional_derivative,
+    project_orthant,
+)
+from repro.core.objective import smooth_loss_and_grad
+from repro.data import CTRDataConfig, auc, generate, pad_to_multiple
+from repro.optim import OWLQNPlus
+
+
+def _rand_problem(seed, d=10, m2=6, n=24):
+    rng = np.random.default_rng(seed)
+    A = jnp.asarray(rng.normal(size=(n, d)) / np.sqrt(d), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(n, m2)), jnp.float32)
+
+    def lg(theta):
+        r = A @ theta - b
+        return 0.5 * jnp.vdot(r, r), A.T @ r
+
+    return lg
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10_000), lam=st.floats(0.0, 2.0),
+       beta=st.floats(0.0, 2.0))
+def test_direction_is_minimiser_among_random_directions(seed, lam, beta):
+    """Prop. 2: d minimises f'(Theta; .) among equal-norm directions."""
+    rng = np.random.default_rng(seed)
+    theta = jnp.asarray(rng.normal(size=(8, 6)) *
+                        (rng.random((8, 6)) > 0.4), jnp.float32)
+    grad = jnp.asarray(rng.normal(size=(8, 6)), jnp.float32)
+    d = descent_direction(theta, grad, lam, beta)
+    dn = float(jnp.linalg.norm(d))
+    if dn < 1e-8:
+        return
+    fd = float(directional_derivative(theta, grad, d, lam, beta))
+    for _ in range(8):
+        r = jnp.asarray(rng.normal(size=d.shape), jnp.float32)
+        r = r * (dn / float(jnp.linalg.norm(r)))
+        fr = float(directional_derivative(theta, grad, r, lam, beta))
+        assert fd <= fr + 1e-3 * max(1.0, abs(fd)), (fd, fr)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_projection_idempotent_and_sign_safe(seed):
+    rng = np.random.default_rng(seed)
+    theta = jnp.asarray(rng.normal(size=(30,)) * (rng.random(30) > 0.3))
+    d = jnp.asarray(rng.normal(size=(30,)))
+    xi = choose_orthant(theta, d)
+    p1 = project_orthant(theta + 0.5 * d, xi)
+    p2 = project_orthant(p1, xi)
+    np.testing.assert_array_equal(np.asarray(p1), np.asarray(p2))
+    # projected point never has sign opposite to xi
+    s = np.sign(np.asarray(p1))
+    x = np.asarray(xi)
+    assert np.all((s == 0) | (x == 0) | (s == x))
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 1000), lam=st.floats(0.0, 1.0),
+       beta=st.floats(0.0, 1.0))
+def test_owlqn_step_never_flips_signs(seed, lam, beta):
+    """Eq. 10/12 invariant: within one iteration parameters never cross
+    zero — they move within the chosen orthant or become exactly 0."""
+    lg = _rand_problem(seed)
+    opt = OWLQNPlus(lg, lam=lam, beta=beta)
+    rng = np.random.default_rng(seed)
+    theta = jnp.asarray(rng.normal(size=(10, 6)) *
+                        (rng.random((10, 6)) > 0.5), jnp.float32)
+    state = opt.init(theta)
+    step = jax.jit(opt.step)
+    for _ in range(5):
+        old = np.asarray(state.theta)
+        state, _ = step(state)
+        new = np.asarray(state.theta)
+        crossed = (old != 0) & (new != 0) & (np.sign(old) != np.sign(new))
+        assert not crossed.any()
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 1000), lam=st.floats(0.0, 2.0),
+       beta=st.floats(0.0, 2.0))
+def test_owlqn_objective_never_increases(seed, lam, beta):
+    lg = _rand_problem(seed)
+    opt = OWLQNPlus(lg, lam=lam, beta=beta)
+    theta = jnp.zeros((10, 6), jnp.float32) + 0.1
+    state = opt.init(theta)
+    step = jax.jit(opt.step)
+    prev = None
+    for _ in range(6):
+        state, stats = step(state)
+        f_before, f_after = float(stats.f), float(stats.f_new)
+        assert f_after <= f_before + 1e-5 * max(1.0, abs(f_before))
+        if prev is not None:
+            assert f_before <= prev + 1e-4 * max(1.0, abs(prev))
+        prev = f_after
+
+
+@settings(max_examples=10, deadline=None)
+@given(mult=st.integers(1, 7), sessions=st.integers(2, 20))
+def test_pad_to_multiple_preserves_loss(mult, sessions):
+    cfg = CTRDataConfig(num_user_features=6, num_ad_features=6,
+                        noise_features=2)
+    batch, _ = generate(cfg, sessions, seed=1)
+    theta = jnp.asarray(
+        np.random.default_rng(0).normal(size=(cfg.num_features, 8)) * 0.2,
+        jnp.float32)
+    l0, _ = smooth_loss_and_grad(theta, jax.tree.map(jnp.asarray, batch),
+                                 common_feature=True)
+    padded = pad_to_multiple(batch, mult)
+    assert np.asarray(padded.y).shape[0] % mult == 0
+    l1, _ = smooth_loss_and_grad(theta, jax.tree.map(jnp.asarray, padded),
+                                 common_feature=True)
+    np.testing.assert_allclose(float(l0), float(l1), rtol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10_000), n=st.integers(5, 60))
+def test_auc_agrees_with_quadratic_reference(seed, n):
+    rng = np.random.default_rng(seed)
+    y = (rng.random(n) > 0.5).astype(np.float32)
+    s = rng.normal(size=n)
+    if y.sum() in (0, n):
+        return
+    ours = auc(y, s)
+    pos, neg = s[y == 1], s[y == 0]
+    cmp = (pos[:, None] > neg[None, :]).sum() + 0.5 * (pos[:, None] == neg[None, :]).sum()
+    ref = cmp / (len(pos) * len(neg))
+    np.testing.assert_allclose(ours, ref, atol=1e-9)
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    from repro.io import checkpoint
+    from repro.optim import OWLQNPlus
+
+    lg = _rand_problem(0)
+    opt = OWLQNPlus(lg, lam=0.5, beta=0.5)
+    state = opt.init(jnp.ones((10, 6)) * 0.1)
+    state, _ = jax.jit(opt.step)(state)
+    path = str(tmp_path / "state.npz")
+    checkpoint.save(path, state._asdict())
+    restored = checkpoint.load(path, state._asdict())
+    jax.tree.map(
+        lambda a, b: np.testing.assert_array_equal(np.asarray(a), np.asarray(b)),
+        state._asdict(), restored,
+    )
