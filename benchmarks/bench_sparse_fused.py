@@ -1,0 +1,105 @@
+"""Fused sparse LS-PLM forward — fused vs gather+einsum vs densified.
+
+The paper's production regime is K active ids out of d columns with
+K << d (§2, §3.2). Three executions of the same p(y=1|x):
+
+  * fused      repro.kernels.lsplm_sparse_fused.ops.lsplm_sparse_forward
+               (Pallas kernel on TPU; K-chunked accumulation elsewhere —
+               either way the (N, K, 2m) gather intermediate never lands
+               in memory)
+  * ref        the gather+einsum oracle (materialises (N, K, 2m))
+  * densified  scatter into a dense (N, d) batch + the dense matmul —
+               only run where N*d stays addressable; at production width
+               it would need tens of GiB, which is the whole point
+
+CSV rows: sparse_fused/<path>/N{N}_K{K}_d{d}_m{m},us,<speedup vs ref>.
+
+Smoke mode (CI): tiny shapes, plus an interpret-mode Pallas-kernel
+parity check so the kernel itself is exercised on CPU-only runners.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import numpy as np
+
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+from repro.kernels.lsplm_sparse_fused.lsplm_sparse_fused import (
+    lsplm_sparse_fused_forward,
+)
+from repro.kernels.lsplm_sparse_fused.ops import lsplm_sparse_forward, pad_theta
+from repro.kernels.lsplm_sparse_fused.ref import lsplm_sparse_forward_ref
+
+# production-like sparsity sweep: K << d throughout
+SHAPES = [  # (N, K, d, m)
+    (4096, 16, 16_384, 12),  # small enough to also densify
+    (16384, 24, 500_000, 12),
+    (32768, 48, 1_000_000, 4),
+]
+SMOKE_SHAPES = [(512, 8, 4_096, 4)]
+DENSIFY_LIMIT = 2**27  # max N*d elements we are willing to materialise
+
+
+def _make(N, K, d, m, seed=0):
+    rng = np.random.default_rng(seed)
+    ids = jnp.asarray(rng.integers(0, d, (N, K)), jnp.int32)
+    vals = jnp.asarray(rng.normal(size=(N, K)).astype(np.float32) / np.sqrt(K))
+    theta = jnp.asarray(rng.normal(size=(d, 2 * m)).astype(np.float32) * 0.1)
+    return ids, vals, pad_theta(theta)
+
+
+def _densified(ids, vals, theta):
+    N = ids.shape[0]
+    d1 = theta.shape[0]
+    x = jnp.zeros((N, d1), jnp.float32).at[
+        jnp.arange(N)[:, None], ids].add(vals)
+    z = x @ theta
+    m = theta.shape[1] // 2
+    gate = jax.nn.softmax(z[:, :m], axis=-1)
+    return jnp.sum(gate * jax.nn.sigmoid(z[:, m:]), axis=-1)
+
+
+def run(smoke: bool | None = None):
+    if smoke is None:
+        smoke = os.environ.get("REPRO_BENCH_SMOKE", "") == "1"
+    shapes = SMOKE_SHAPES if smoke else SHAPES
+    rows = []
+    for (N, K, d, m) in shapes:
+        tag = f"N{N}_K{K}_d{d}_m{m}"
+        ids, vals, tp = _make(N, K, d, m)
+
+        fused = jax.jit(lambda i, v, t: lsplm_sparse_forward(i, v, t))
+        ref = jax.jit(lsplm_sparse_forward_ref)
+        p_f = np.asarray(fused(ids, vals, tp))
+        p_r = np.asarray(ref(ids, vals, tp))
+        np.testing.assert_allclose(p_f, p_r, rtol=2e-4, atol=2e-6)
+
+        t_ref = time_fn(ref, ids, vals, tp)
+        t_fused = time_fn(fused, ids, vals, tp)
+        rows.append((f"sparse_fused/fused/{tag}", t_fused,
+                     f"{t_ref / t_fused:.2f}x_vs_ref"))
+        rows.append((f"sparse_fused/gather_einsum/{tag}", t_ref, "1.00x_vs_ref"))
+        if N * d <= DENSIFY_LIMIT:
+            dens = jax.jit(_densified)
+            np.testing.assert_allclose(
+                np.asarray(dens(ids, vals, tp)), p_r, rtol=2e-4, atol=2e-6)
+            t_dens = time_fn(dens, ids, vals, tp)
+            rows.append((f"sparse_fused/densified/{tag}", t_dens,
+                         f"{t_ref / t_dens:.2f}x_vs_ref"))
+
+    if smoke:
+        # exercise the actual Pallas kernel (interpret mode) for parity
+        (N, K, d, m) = SMOKE_SHAPES[0]
+        ids, vals, tp = _make(N, K, d, m)
+        p_k, _ = lsplm_sparse_fused_forward(ids, vals, tp, block_n=128,
+                                            interpret=True)
+        np.testing.assert_allclose(
+            np.asarray(p_k),
+            np.asarray(lsplm_sparse_forward_ref(ids, vals, tp)),
+            rtol=1e-5, atol=1e-6)
+        rows.append((f"sparse_fused/kernel_interpret/N{N}_K{K}_d{d}_m{m}",
+                     0.0, "parity_ok"))
+    emit(rows)

@@ -5,29 +5,57 @@ Prints ``name,us_per_call,derived`` CSV rows:
   * bench_regularization  — Table 2 (L1 / L2,1 sparsity + AUC)
   * bench_common_feature  — Table 3 (common-feature trick cost)
   * bench_lr_vs_lsplm     — Fig. 5 (LS-PLM vs LR over 7 datasets)
+  * bench_sparse_fused    — fused sparse kernel vs gather+einsum vs dense
   * roofline_report       — §Roofline rows from the dry-run artifacts
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.run [--only SUBSTR] [--smoke]
+
+``--only`` filters modules by name substring; ``--smoke`` asks modules
+that support it for tiny shapes (the CI smoke step runs
+``--only sparse_fused --smoke`` on CPU).
 """
 from __future__ import annotations
 
+import argparse
+import inspect
 import sys
 import traceback
 
 
 def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="run only modules whose name contains this substring")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes where supported (CI)")
+    args = ap.parse_args()
+
     from benchmarks import (
         bench_common_feature,
         bench_division,
         bench_lr_vs_lsplm,
         bench_regularization,
         bench_router_balance,
+        bench_sparse_fused,
         roofline_report,
     )
 
+    mods = [bench_division, bench_regularization, bench_common_feature,
+            bench_lr_vs_lsplm, bench_router_balance, bench_sparse_fused,
+            roofline_report]
+    if args.only:
+        mods = [m for m in mods if args.only in m.__name__]
+        if not mods:
+            raise SystemExit(f"--only {args.only!r} matched no benchmark module")
+
     ok = True
-    for mod in (bench_division, bench_regularization, bench_common_feature,
-                bench_lr_vs_lsplm, bench_router_balance, roofline_report):
+    for mod in mods:
+        kwargs = {}
+        if args.smoke and "smoke" in inspect.signature(mod.run).parameters:
+            kwargs["smoke"] = True
         try:
-            mod.run()
+            mod.run(**kwargs)
         except Exception:  # noqa: BLE001
             ok = False
             print(f"{mod.__name__},0,ERROR", file=sys.stderr)

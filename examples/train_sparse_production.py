@@ -6,9 +6,16 @@ Dense (B, d) features are impossible at this width (a 2048-sample batch
 would be 8 TB); the padded-COO sparse path (`repro.data.sparse`) stores
 only active ids — exactly the paper's one-hot regime — and OWLQN+ trains
 Theta (1e6 x 8) with L1+L2,1 sparsity.
+
+Execution: the whole job rides the FUSED sparse kernel package
+(`repro.kernels.lsplm_sparse_fused`) — Pallas gather-matmul on TPU
+(Theta in HBM, active rows DMA'd to VMEM), K-chunked jnp accumulation on
+CPU/GPU, and a custom-VJP backward that scatter-adds only into active
+Theta rows. No (B, d) batch or (N, K, 2m) gather blob is ever built.
 """
 import time
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -30,6 +37,10 @@ def main():
     theta0 = jnp.asarray(
         0.01 * np.random.default_rng(0).normal(size=(D, 2 * M)), jnp.float32)
     n_samples = np.asarray(train.ad_ids).shape[0]
+    backend = jax.default_backend()
+    print(f"sparse execution path: fused kernel "
+          f"({'Pallas' if backend == 'tpu' else 'chunked-jnp fallback'}, "
+          f"backend={backend}), scatter-add custom VJP")
     print(f"features d = {D:,}; params = {theta0.size:,} "
           f"(this batch dense: {n_samples * D * 4 / 2**30:.1f} GiB; one of "
           f"the paper's 1.4e9-sample days dense: "

@@ -6,13 +6,17 @@ from repro.core.lsplm import (  # noqa: F401
     init_params,
     params_from_theta,
     predict_logits_stable,
+    predict_logits_stable_sparse,
     predict_proba,
+    predict_proba_sparse,
 )
 from repro.core.objective import (  # noqa: F401
     CommonFeatureBatch,
     CTRBatch,
+    is_sparse_batch,
     nll,
     nll_common_feature,
+    nll_sparse,
     objective,
     smooth_loss_and_grad,
 )

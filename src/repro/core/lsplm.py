@@ -116,6 +116,29 @@ def predict_logits_stable(params: LSPLMParams, x: jax.Array) -> tuple[jax.Array,
     return log_p1, log_p0
 
 
+def predict_proba_sparse(
+    params: LSPLMParams, ids: jax.Array, vals: jax.Array, *, mode: str = "auto"
+) -> jax.Array:
+    """p(y=1|x) per Eq. 2 from padded-COO (ids, vals) — the production
+    input format. Runs the fused sparse kernel (softmax-dot-sigmoid
+    in-register); ids use pad id == d. Returns (N,)."""
+    from repro.kernels.lsplm_sparse_fused.ops import (
+        lsplm_sparse_forward, pad_theta)
+
+    return lsplm_sparse_forward(ids, vals, pad_theta(params.theta), mode=mode)
+
+
+def predict_logits_stable_sparse(
+    params: LSPLMParams, ids: jax.Array, vals: jax.Array, *, mode: str = "auto"
+) -> tuple[jax.Array, jax.Array]:
+    """Sparse analogue of ``predict_logits_stable``: (log_p1, log_p0)
+    from padded-COO inputs via the fused kernel's region logits."""
+    from repro.kernels.lsplm_sparse_fused.ops import (
+        lsplm_sparse_logps, pad_theta)
+
+    return lsplm_sparse_logps(ids, vals, pad_theta(params.theta), mode=mode)
+
+
 def foe_mixture_proba(params: LSPLMParams, x: jax.Array) -> jax.Array:
     """Eq. 3 (FOE / mixed-LR view): sum_i p(z=i|x) p(y=1|z=i,x).
 

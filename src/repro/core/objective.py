@@ -10,6 +10,12 @@ Supports the common-feature trick (§3.2): when a batch carries
 (x_common [G,d_c], session_id [B]) alongside x_noncommon [B,d_nc], the
 common part of the dot products is computed once per session group and
 gathered per sample (Eq. 13).
+
+Sparse dispatch: batches shaped like ``repro.data.sparse.SparseCTRBatch``
+(padded-COO ``user_ids``/``ad_ids`` id lists instead of dense x) are
+detected structurally and routed to ``nll_sparse``, which runs on the
+fused sparse kernel (``repro.kernels.lsplm_sparse_fused``) — Pallas
+gather-matmul on TPU, chunked jnp elsewhere, scatter-add custom VJP.
 """
 from __future__ import annotations
 
@@ -20,6 +26,11 @@ import jax.numpy as jnp
 
 from repro.core import regularizers
 from repro.core.lsplm import LSPLMParams, params_from_theta, predict_logits_stable
+from repro.kernels.lsplm_sparse_fused.ops import (
+    logps_from_z,
+    pad_theta,
+    sparse_gather_matmul,
+)
 
 
 class CTRBatch(NamedTuple):
@@ -76,15 +87,40 @@ def nll_common_feature(theta: jax.Array, batch: CommonFeatureBatch) -> jax.Array
     return _nll_from_logps(log_p1, log_p0, batch.y.astype(log_p1.dtype), batch.weight)
 
 
+def is_sparse_batch(batch) -> bool:
+    """Structural check for a padded-COO sparse batch (SparseCTRBatch)."""
+    return hasattr(batch, "ad_ids") and hasattr(batch, "user_ids")
+
+
+def nll_sparse(theta: jax.Array, batch, *, mode: str = "auto") -> jax.Array:
+    """Eq. 5 on padded-COO sparse features with the common-feature trick
+    (Eq. 13): user region-logits once per session group, gathered per
+    sample. Both gather-matmuls run on the fused sparse kernel, so the
+    backward is the transposed scatter-add into active Theta rows only.
+    """
+    tp = pad_theta(theta)
+    z_user = sparse_gather_matmul(batch.user_ids, batch.user_vals, tp, mode=mode)
+    z_ad = sparse_gather_matmul(batch.ad_ids, batch.ad_vals, tp, mode=mode)
+    z = z_user[batch.session_id] + z_ad
+    log_p1, log_p0 = logps_from_z(z)
+    return _nll_from_logps(log_p1, log_p0, batch.y.astype(log_p1.dtype), None)
+
+
+def _nll_fn(batch, common_feature: bool):
+    if is_sparse_batch(batch):
+        return nll_sparse
+    return nll_common_feature if common_feature else nll
+
+
 def objective(
     theta: jax.Array, batch, lam: float, beta: float, *, common_feature: bool = False
 ) -> jax.Array:
-    """f(Theta), Eq. 4. Used by tests and the line search."""
-    loss = nll_common_feature(theta, batch) if common_feature else nll(theta, batch)
+    """f(Theta), Eq. 4. Used by tests and the line search. Dense,
+    common-feature and sparse (padded-COO) batches all dispatch here."""
+    loss = _nll_fn(batch, common_feature)(theta, batch)
     return loss + lam * regularizers.l21_norm(theta) + beta * regularizers.l1_norm(theta)
 
 
 def smooth_loss_and_grad(theta: jax.Array, batch, *, common_feature: bool = False):
     """(loss(Theta), grad loss(Theta)) for the smooth NLL part only."""
-    fn = nll_common_feature if common_feature else nll
-    return jax.value_and_grad(fn)(theta, batch)
+    return jax.value_and_grad(_nll_fn(batch, common_feature))(theta, batch)

@@ -14,8 +14,11 @@ from repro.data.common_feature import (  # noqa: F401
 from repro.data.sparse import (  # noqa: F401
     SparseCTRBatch,
     generate_sparse,
+    pad_theta,
     sparse_loss_and_grad,
+    sparse_matmul,
     sparse_nll,
     sparse_predict,
+    sparse_predict_flat,
 )
 from repro.data.tokens import TokenStream, host_sharded_stream  # noqa: F401

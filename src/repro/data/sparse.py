@@ -12,9 +12,15 @@ and compute z = x @ Theta as a gather + weighted segment-sum:
     z[b] = sum_k vals[b,k] * Theta[ids[b,k], :]
 
 This is TPU-native (dense gather + reductions — no hash maps, DESIGN.md
-§3), exactly how embedding lookups work in production CTR systems. The
-gradient wrt Theta is the transposed scatter-add, which JAX derives
-automatically from `take`/`segment_sum`.
+§3), exactly how embedding lookups work in production CTR systems.
+
+Execution path: everything here rides the FUSED sparse kernel package
+(``repro.kernels.lsplm_sparse_fused``) — a Pallas gather-matmul on TPU
+that DMAs only the active Theta rows into VMEM, a K-chunked jnp
+accumulation elsewhere, and a ``jax.custom_vjp`` whose backward is the
+transposed scatter-add (segment-sum into Theta rows). The old
+``take``+einsum formulation, which materialises the (N, K, 2m) gather
+intermediate in HBM, lives on as the oracle in that package's ``ref.py``.
 
 The common-feature trick composes: user ids are stored once per session
 (G, Ku) and gathered per sample, ad ids per sample (B, Ka).
@@ -26,6 +32,13 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.core.objective import nll_sparse
+from repro.kernels.lsplm_sparse_fused.ops import (
+    lsplm_sparse_forward,
+    pad_theta,
+    sparse_gather_matmul,
+)
 
 
 class SparseCTRBatch(NamedTuple):
@@ -40,34 +53,23 @@ class SparseCTRBatch(NamedTuple):
     num_features: int = 0  # d (static)
 
 
-def sparse_matmul(ids: jax.Array, vals: jax.Array, theta: jax.Array) -> jax.Array:
-    """(N, K) ids/vals  x  Theta (d+1, 2m) -> (N, 2m).
+def sparse_matmul(ids: jax.Array, vals: jax.Array, theta: jax.Array,
+                  *, mode: str = "auto") -> jax.Array:
+    """(N, K) ids/vals  x  Theta (d+1, 2m) -> (N, 2m), FUSED.
 
-    Theta must carry ONE trailing pad row (all zeros) so pad ids hit it.
+    Theta must carry ONE trailing pad row (all zeros) so pad ids hit it
+    (``pad_theta``). Dispatches to the Pallas kernel on TPU and the
+    chunked jnp path elsewhere; differentiable via the scatter-add
+    custom VJP either way.
     """
-    rows = jnp.take(theta, ids, axis=0)  # (N, K, 2m)
-    return jnp.einsum("nk,nkm->nm", vals.astype(rows.dtype), rows)
-
-
-def pad_theta(theta: jax.Array) -> jax.Array:
-    """Append the zero pad row (id == d)."""
-    return jnp.concatenate([theta, jnp.zeros((1, theta.shape[1]), theta.dtype)])
+    return sparse_gather_matmul(ids, vals, theta, mode=mode)
 
 
 def sparse_nll(theta: jax.Array, batch: SparseCTRBatch) -> jax.Array:
     """Eq. 5 on sparse features with the common-feature trick (Eq. 13):
-    user dot-products computed ONCE per session, gathered per sample."""
-    tp = pad_theta(theta)
-    z_user = sparse_matmul(batch.user_ids, batch.user_vals, tp)  # (G, 2m)
-    z_ad = sparse_matmul(batch.ad_ids, batch.ad_vals, tp)  # (B, 2m)
-    z = z_user[batch.session_id] + z_ad
-    m = theta.shape[-1] // 2
-    zu, zw = z[..., :m], z[..., m:]
-    log_gate = jax.nn.log_softmax(zu, axis=-1)
-    log_p1 = jax.nn.logsumexp(log_gate + jax.nn.log_sigmoid(zw), axis=-1)
-    log_p0 = jax.nn.logsumexp(log_gate + jax.nn.log_sigmoid(-zw), axis=-1)
-    y = batch.y.astype(log_p1.dtype)
-    return -jnp.sum(y * log_p1 + (1.0 - y) * log_p0)
+    user dot-products computed ONCE per session, gathered per sample.
+    Delegates to the fused-kernel path in ``repro.core.objective``."""
+    return nll_sparse(theta, batch)
 
 
 def sparse_loss_and_grad(theta: jax.Array, batch: SparseCTRBatch):
@@ -75,6 +77,7 @@ def sparse_loss_and_grad(theta: jax.Array, batch: SparseCTRBatch):
 
 
 def sparse_predict(theta: jax.Array, batch: SparseCTRBatch) -> jax.Array:
+    """p(y=1|x) for a session-structured sparse batch (fused path)."""
     tp = pad_theta(theta)
     z = (sparse_matmul(batch.user_ids, batch.user_vals, tp)[batch.session_id]
          + sparse_matmul(batch.ad_ids, batch.ad_vals, tp))
@@ -82,6 +85,13 @@ def sparse_predict(theta: jax.Array, batch: SparseCTRBatch) -> jax.Array:
     gate = jax.nn.softmax(z[..., :m], axis=-1)
     fit = jax.nn.sigmoid(z[..., m:])
     return jnp.sum(gate * fit, axis=-1)
+
+
+def sparse_predict_flat(theta: jax.Array, ids: jax.Array, vals: jax.Array,
+                        *, mode: str = "auto") -> jax.Array:
+    """p(y=1|x) for flat (sessionless) padded-COO rows — the serving hot
+    path, fully fused down to the (N,) probabilities."""
+    return lsplm_sparse_forward(ids, vals, pad_theta(theta), mode=mode)
 
 
 # ----------------------------------------------------------------- generator

@@ -1,0 +1,93 @@
+"""Distribution plan (DESIGN.md §3): the paper's worker/server split as a
+GSPMD (data, model) mesh.
+
+  * batch axis   -> 'data'  (the paper's workers): every per-sample row
+    block — x, ids, labels, session ids — is split over the data axis.
+  * Theta rows   -> 'model' (the paper's parameter servers): feature rows
+    are the L2,1 groups, so a row never straddles shards and OWLQN+'s
+    orthant/direction algebra stays shard-local; only the scalar dot
+    products of the two-loop recursion and line search all-reduce.
+  * feature (contraction) axes of x are sharded over 'model' to line up
+    with Theta's row sharding — each matmul psums exactly once.
+
+Multi-pod meshes add a leading 'pod' axis to the data split
+(``launch.mesh.data_axes``).
+
+Sparse padded-COO batches currently train single-device (the fused
+gather kernel needs whole Theta rows per id); sharding Theta rows over
+'model' with id-range routing is the recorded next step — see ROADMAP.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core.objective import CommonFeatureBatch, CTRBatch
+from repro.launch.mesh import data_axes
+from repro.optim.lbfgs import LBFGSHistory
+from repro.optim.owlqn_plus import OWLQNState
+
+_is_spec = lambda x: isinstance(x, P)
+
+
+def _row_axes(mesh):
+    axes = data_axes(mesh)
+    return axes[0] if len(axes) == 1 else axes
+
+
+def batch_specs(mesh, *, common_feature: bool = False):
+    """PartitionSpec tree for a CTRBatch / CommonFeatureBatch."""
+    row = _row_axes(mesh)
+    if common_feature:
+        return CommonFeatureBatch(
+            x_common=P(row, "model"),
+            x_noncommon=P(row, "model"),
+            session_id=P(row),
+            y=P(row),
+            weight=P(row),
+        )
+    return CTRBatch(x=P(row, "model"), y=P(row), weight=P(row))
+
+
+def state_specs(mesh):
+    """PartitionSpec tree for OWLQNState with a (d, 2m) Theta: Theta-like
+    leaves row-sharded over 'model', LBFGS stacks likewise (history axis
+    replicated), scalars replicated."""
+    del mesh  # specs are mesh-independent; kept for call-site symmetry
+    t = P("model", None)
+    hist = LBFGSHistory(
+        s=P(None, "model", None),
+        y=P(None, "model", None),
+        rho=P(),
+        valid=P(),
+        gamma=P(),
+    )
+    return OWLQNState(theta=t, history=hist, prev_theta=t, prev_d=t,
+                      step=P(), f=P())
+
+
+def _named(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=_is_spec)
+
+
+def shard_batch(mesh, batch, *, common_feature: bool = False):
+    """device_put a batch onto the mesh per ``batch_specs`` (None leaves,
+    e.g. an absent weight, pass through)."""
+    specs = batch_specs(mesh, common_feature=common_feature)
+    put = lambda x, s: None if x is None else jax.device_put(
+        x, NamedSharding(mesh, s))
+    return type(batch)(*(put(x, s) for x, s in zip(batch, specs)))
+
+
+def shard_state(state: OWLQNState, mesh) -> OWLQNState:
+    """device_put an optimizer state onto the mesh per ``state_specs``."""
+    return jax.tree.map(lambda s, x: jax.device_put(x, NamedSharding(mesh, s)),
+                        state_specs(mesh), state, is_leaf=_is_spec)
+
+
+def make_distributed_step(opt, mesh):
+    """jit ``opt.step`` with state kept sharded across iterations (stats
+    shardings left to the compiler)."""
+    ns = _named(mesh, state_specs(mesh))
+    return jax.jit(opt.step, in_shardings=(ns,), out_shardings=(ns, None))

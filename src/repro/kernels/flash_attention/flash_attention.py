@@ -105,7 +105,9 @@ def flash_attention(
             pltpu.VMEM((block_q, 1), jnp.float32),
             pltpu.VMEM((block_q, 1), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        # jax >= 0.5 renamed TPUCompilerParams -> CompilerParams
+        compiler_params=getattr(pltpu, "CompilerParams",
+                                pltpu.TPUCompilerParams)(
             dimension_semantics=("parallel", "parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

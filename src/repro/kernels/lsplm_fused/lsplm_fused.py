@@ -55,14 +55,28 @@ def lsplm_fused_forward(
     block_d: int = 512,
     interpret: bool = False,
 ) -> jax.Array:
-    """p(y=1|x) per Eq. 2, fused. Returns (B,)."""
+    """p(y=1|x) per Eq. 2, fused. Returns (B,).
+
+    Ragged shapes are zero-padded up to block multiples (pad rows/columns
+    contribute nothing to either contraction) and the output sliced back,
+    so real loaders' tail batches don't crash the kernel.
+    """
+    if block_b <= 0 or block_d <= 0:
+        raise ValueError(f"block sizes must be positive, got ({block_b}, {block_d})")
     B, d = x.shape
     m = u.shape[1]
+    if u.shape != w.shape or u.shape[0] != d:
+        raise ValueError(f"u/w must be ({d}, m), got {u.shape}/{w.shape}")
     block_b = min(block_b, B)
     block_d = min(block_d, d)
-    assert B % block_b == 0 and d % block_d == 0, (B, d, block_b, block_d)
-    n_dtiles = d // block_d
-    grid = (B // block_b, n_dtiles)
+    b_pad = pl.cdiv(B, block_b) * block_b
+    d_pad = pl.cdiv(d, block_d) * block_d
+    if b_pad != B or d_pad != d:
+        x = jnp.pad(x, ((0, b_pad - B), (0, d_pad - d)))
+        u = jnp.pad(u, ((0, d_pad - d), (0, 0)))
+        w = jnp.pad(w, ((0, d_pad - d), (0, 0)))
+    n_dtiles = d_pad // block_d
+    grid = (b_pad // block_b, n_dtiles)
 
     out = pl.pallas_call(
         functools.partial(_kernel, n_dtiles=n_dtiles),
@@ -73,11 +87,11 @@ def lsplm_fused_forward(
             pl.BlockSpec((block_d, m), lambda i, j: (j, 0)),
         ],
         out_specs=pl.BlockSpec((block_b, 1), lambda i, j: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((B, 1), x.dtype),
+        out_shape=jax.ShapeDtypeStruct((b_pad, 1), x.dtype),
         scratch_shapes=[
             pltpu.VMEM((block_b, m), jnp.float32),
             pltpu.VMEM((block_b, m), jnp.float32),
         ],
         interpret=interpret,
     )(x, u, w)
-    return out[:, 0]
+    return out[:B, 0]

@@ -1,0 +1,124 @@
+"""Fused sparse LS-PLM forward kernel — padded-COO gather-matmul + Eq. 2.
+
+The paper's production inputs are one-hot/multi-hot id lists over millions
+of columns (§2, §3.2); a dense (B, d) batch never exists. The jnp path
+(`ref.py`) gathers Theta rows with ``take`` — materialising an (N, K, 2m)
+intermediate in HBM — and reduces it with an einsum (a second HBM sweep).
+This kernel does the whole thing in one pass per batch tile:
+
+  * ids/vals tiles (BT, K) live in VMEM; Theta (D, 2m) STAYS IN HBM —
+    only the K active rows of each sample are DMA'd into a (K, 2m) VMEM
+    scratch (exactly how production embedding lookups work),
+  * each sample's z = vals_n . rows is one (K)x(K,2m) contraction,
+    accumulated straight into a (BT, 2m) VMEM buffer — the (N, K, 2m)
+    gather intermediate is never materialised anywhere,
+  * the softmax-dot-sigmoid fusion (Eq. 2) runs in-register on the z
+    tile; only (BT,) probabilities and the (BT, 2m) region logits are
+    written back to HBM (z is the residual the custom VJP needs).
+
+Grid: (N/BT,) over batch tiles. Theta must carry the zero pad row
+(id == D-1) so pad slots contribute nothing; `ops.pad_theta` provides it.
+
+Scaling note: Theta lives in HBM so d is bounded by device HBM, not VMEM
+(a (1e6, 24) fp32 Theta is 96 MB — fine). Sharding Theta's rows across
+chips (the paper's parameter-server axis) is the next step; see ROADMAP.
+
+Coverage caveat: CI validates this kernel in INTERPRET mode only (the
+runners have no TPU). The compiled Mosaic path — in particular driving
+the per-row DMA index from the VMEM-resident ids tile — has not been
+lowered on real hardware yet; first-TPU bring-up should start from
+``mode="interpret"`` parity and may need ids moved to scalar prefetch.
+See ROADMAP "Sparse kernel perf on real TPU".
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(ids_ref, vals_ref, theta_ref, p_ref, z_ref, rows, sems, *, m: int):
+    block_n, K = ids_ref.shape
+
+    def row_body(n, carry):
+        # start all K row-DMAs for this sample, then drain them: the
+        # gathers overlap each other (and, across rows, the contraction).
+        for k in range(K):
+            pltpu.make_async_copy(
+                theta_ref.at[ids_ref[n, k]], rows.at[k], sems.at[k]
+            ).start()
+        for k in range(K):
+            pltpu.make_async_copy(
+                theta_ref.at[ids_ref[n, k]], rows.at[k], sems.at[k]
+            ).wait()
+        z_ref[n, :] = jnp.dot(
+            vals_ref[n, :].astype(jnp.float32),
+            rows[...].astype(jnp.float32),
+            preferred_element_type=jnp.float32,
+        )
+        return carry
+
+    jax.lax.fori_loop(0, block_n, row_body, 0)
+
+    z = z_ref[...]
+    gate = jax.nn.softmax(z[:, :m], axis=-1)
+    fit = jax.nn.sigmoid(z[:, m:])
+    p_ref[...] = jnp.sum(gate * fit, axis=-1, keepdims=True).astype(p_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def lsplm_sparse_fused_forward(
+    ids: jax.Array,  # (N, K) int32, pad id == theta.shape[0] - 1
+    vals: jax.Array,  # (N, K)
+    theta: jax.Array,  # (D, 2m) with zero pad row at D-1
+    *,
+    block_n: int = 256,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Fused sparse forward. Returns (p (N,), z (N, 2m)).
+
+    Ragged N is handled by padding the batch with pad-id rows up to a
+    block multiple (those rows gather only the zero row) and slicing the
+    outputs back — real loaders never need to round their batch sizes.
+    """
+    if ids.shape != vals.shape or ids.ndim != 2:
+        raise ValueError(f"ids/vals must be (N, K), got {ids.shape}/{vals.shape}")
+    if theta.ndim != 2 or theta.shape[1] % 2:
+        raise ValueError(f"theta must be (D, 2m), got {theta.shape}")
+    N, K = ids.shape
+    D, m2 = theta.shape
+    m = m2 // 2
+    block_n = max(1, min(block_n, N))
+    n_pad = pl.cdiv(N, block_n) * block_n
+    if n_pad != N:
+        ids = jnp.concatenate(
+            [ids, jnp.full((n_pad - N, K), D - 1, ids.dtype)], axis=0)
+        vals = jnp.concatenate(
+            [vals, jnp.zeros((n_pad - N, K), vals.dtype)], axis=0)
+
+    p, z = pl.pallas_call(
+        functools.partial(_kernel, m=m),
+        grid=(n_pad // block_n,),
+        in_specs=[
+            pl.BlockSpec((block_n, K), lambda i: (i, 0)),
+            pl.BlockSpec((block_n, K), lambda i: (i, 0)),
+            pl.BlockSpec(memory_space=pl.ANY),  # Theta stays in HBM
+        ],
+        out_specs=[
+            pl.BlockSpec((block_n, 1), lambda i: (i, 0)),
+            pl.BlockSpec((block_n, m2), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_pad, 1), theta.dtype),
+            jax.ShapeDtypeStruct((n_pad, m2), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((K, m2), theta.dtype),
+            pltpu.SemaphoreType.DMA((K,)),
+        ],
+        interpret=interpret,
+    )(ids, vals, theta)
+    return p[:N, 0], z[:N]

@@ -1,0 +1,194 @@
+"""Public fused sparse LS-PLM ops: dispatch + ``jax.custom_vjp``.
+
+Two differentiable entry points, both backed by the Pallas kernel on TPU
+(or in interpret mode) and by a K-chunked accumulation elsewhere — the
+chunked path keeps the live intermediate at (N, chunk, 2m) instead of the
+(N, K, 2m) HBM blob the ``take``+einsum oracle materialises, which is
+what makes it win at production sparsity (K << d; see
+``benchmarks/bench_sparse_fused.py``):
+
+  * ``sparse_gather_matmul(ids, vals, theta) -> z (N, 2m)`` — the region
+    logits. The stable-NLL training path (log-space Eq. 5) builds on this,
+    so OWLQN+ line searches differentiate through the custom VJP.
+  * ``lsplm_sparse_forward(ids, vals, theta) -> p (N,)`` — fully fused
+    probabilities (softmax-dot-sigmoid in-register on the kernel path).
+
+Both VJPs share one backward: the transposed scatter-add
+
+    dTheta[r] = sum_{(n,k): ids[n,k]=r} vals[n,k] * dz[n]     (segment-sum)
+    dvals[n,k] = theta[ids[n,k]] . dz[n]                      (gather-dot)
+
+emitted as K-chunked ``jax.ops.segment_sum`` into Theta rows — the exact
+transpose of the forward gather, and TPU-native (sorted scatter / one-hot
+matmul under XLA). ids are integer primals and get float0 cotangents.
+
+``mode`` selects the forward implementation:
+    "auto"      Pallas kernel on TPU, chunked jnp elsewhere (default)
+    "kernel"    force the compiled Pallas kernel
+    "interpret" force the Pallas kernel in interpret mode (tests/CI)
+    "jnp"       force the chunked jnp path
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.lsplm_sparse_fused.lsplm_sparse_fused import (
+    lsplm_sparse_fused_forward,
+)
+
+_CHUNK = 8  # K-chunk for the jnp fallback and the scatter backward
+
+
+def pad_theta(theta: jax.Array) -> jax.Array:
+    """Append the zero pad row (pad id == d == theta.shape[0])."""
+    return jnp.concatenate(
+        [theta, jnp.zeros((1, theta.shape[1]), theta.dtype)], axis=0)
+
+
+def _finalize_p(z: jax.Array) -> jax.Array:
+    m = z.shape[-1] // 2
+    gate = jax.nn.softmax(z[..., :m], axis=-1)
+    fit = jax.nn.sigmoid(z[..., m:])
+    return jnp.sum(gate * fit, axis=-1)
+
+
+def logps_from_z(z: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Stable (log_p1, log_p0) from region logits z (..., 2m) — the one
+    log-space Eq. 5 head shared by every fused-path consumer."""
+    m = z.shape[-1] // 2
+    log_gate = jax.nn.log_softmax(z[..., :m], axis=-1)
+    log_p1 = jax.nn.logsumexp(log_gate + jax.nn.log_sigmoid(z[..., m:]), axis=-1)
+    log_p0 = jax.nn.logsumexp(log_gate + jax.nn.log_sigmoid(-z[..., m:]), axis=-1)
+    return log_p1, log_p0
+
+
+def _chunked_zmap(ids, vals, theta, chunk: int = _CHUNK) -> jax.Array:
+    """Fused-style jnp forward: accumulate z in K-chunks so the live
+    gather intermediate is (N, chunk, 2m), never (N, K, 2m)."""
+    N, K = ids.shape
+    z = jnp.zeros((N, theta.shape[1]), jnp.float32)
+    for k0 in range(0, K, chunk):
+        rows = jnp.take(theta, ids[:, k0:k0 + chunk], axis=0)
+        z = z + jnp.einsum(
+            "nk,nkm->nm", vals[:, k0:k0 + chunk].astype(rows.dtype), rows)
+    return z
+
+
+def _use_kernel(mode: str) -> bool:
+    if mode == "auto":
+        return jax.default_backend() == "tpu"
+    if mode in ("kernel", "interpret"):
+        return True
+    if mode == "jnp":
+        return False
+    raise ValueError(f"unknown mode {mode!r}")
+
+
+def _zmap(mode: str, block_n: int, ids, vals, theta) -> jax.Array:
+    if _use_kernel(mode):
+        _, z = lsplm_sparse_fused_forward(
+            ids, vals, theta, block_n=block_n, interpret=mode == "interpret")
+        return z
+    return _chunked_zmap(ids, vals, theta)
+
+
+def _scatter_bwd(ids, vals, theta, dz):
+    """Shared VJP tail: dz (N, 2m) -> (dvals, dtheta), K-chunked."""
+    m2 = theta.shape[1]
+    dz = dz.astype(jnp.float32)
+    dtheta = jnp.zeros(theta.shape, jnp.float32)
+    dvals_parts = []
+    for k0 in range(0, ids.shape[1], _CHUNK):
+        i = ids[:, k0:k0 + _CHUNK]
+        v = vals[:, k0:k0 + _CHUNK].astype(jnp.float32)
+        data = (v[..., None] * dz[:, None, :]).reshape(-1, m2)
+        # scatter straight into the one accumulator (duplicate ids sum) —
+        # a per-chunk segment_sum would build a full (D, 2m) temp each time
+        dtheta = dtheta.at[i.reshape(-1)].add(data)
+        rows = jnp.take(theta, i, axis=0).astype(jnp.float32)
+        dvals_parts.append(jnp.einsum("nkm,nm->nk", rows, dz))
+    dvals = jnp.concatenate(dvals_parts, axis=1).astype(vals.dtype)
+    return dvals, dtheta.astype(theta.dtype)
+
+
+def _float0_like(ids):
+    return np.zeros(ids.shape, dtype=jax.dtypes.float0)
+
+
+# ------------------------------------------------------- z-level custom VJP
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1))
+def _gather_matmul(mode: str, block_n: int, ids, vals, theta):
+    return _zmap(mode, block_n, ids, vals, theta)
+
+
+def _gather_matmul_fwd(mode, block_n, ids, vals, theta):
+    return _zmap(mode, block_n, ids, vals, theta), (ids, vals, theta)
+
+
+def _gather_matmul_bwd(mode, block_n, res, dz):
+    ids, vals, theta = res
+    dvals, dtheta = _scatter_bwd(ids, vals, theta, dz)
+    return _float0_like(ids), dvals, dtheta
+
+
+_gather_matmul.defvjp(_gather_matmul_fwd, _gather_matmul_bwd)
+
+
+# ------------------------------------------------------- p-level custom VJP
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1))
+def _forward_p(mode: str, block_n: int, ids, vals, theta):
+    if _use_kernel(mode):
+        p, _ = lsplm_sparse_fused_forward(
+            ids, vals, theta, block_n=block_n, interpret=mode == "interpret")
+        return p
+    return _finalize_p(_chunked_zmap(ids, vals, theta))
+
+
+def _forward_p_fwd(mode, block_n, ids, vals, theta):
+    if _use_kernel(mode):
+        p, z = lsplm_sparse_fused_forward(
+            ids, vals, theta, block_n=block_n, interpret=mode == "interpret")
+    else:
+        z = _chunked_zmap(ids, vals, theta)
+        p = _finalize_p(z)
+    return p, (ids, vals, theta, z, p)
+
+
+def _forward_p_bwd(mode, block_n, res, dp):
+    ids, vals, theta, z, p = res
+    m = z.shape[-1] // 2
+    gate = jax.nn.softmax(z[:, :m], axis=-1)
+    fit = jax.nn.sigmoid(z[:, m:])
+    dp = dp.astype(jnp.float32)[:, None]
+    dzu = dp * gate * (fit - p.astype(jnp.float32)[:, None])
+    dzw = dp * gate * fit * (1.0 - fit)
+    dvals, dtheta = _scatter_bwd(ids, vals, theta,
+                                 jnp.concatenate([dzu, dzw], axis=-1))
+    return _float0_like(ids), dvals, dtheta
+
+
+_forward_p.defvjp(_forward_p_fwd, _forward_p_bwd)
+
+
+# ------------------------------------------------------------- public API
+def sparse_gather_matmul(ids, vals, theta, *, mode: str = "auto",
+                         block_n: int = 256) -> jax.Array:
+    """z = x @ Theta from padded COO, fused, custom-VJP'd. (N, K) -> (N, 2m)."""
+    return _gather_matmul(mode, block_n, ids, vals, theta)
+
+
+def lsplm_sparse_forward(ids, vals, theta, *, mode: str = "auto",
+                         block_n: int = 256) -> jax.Array:
+    """p(y=1|x) per Eq. 2 from padded COO, fully fused. Returns (N,)."""
+    return _forward_p(mode, block_n, ids, vals, theta)
+
+
+def lsplm_sparse_logps(ids, vals, theta, *, mode: str = "auto",
+                       block_n: int = 256) -> tuple[jax.Array, jax.Array]:
+    """Stable (log_p1, log_p0) for Eq. 5 on padded COO — the training path."""
+    z = sparse_gather_matmul(ids, vals, theta, mode=mode, block_n=block_n)
+    return logps_from_z(z)

@@ -1,0 +1,48 @@
+"""Pure-jnp oracle for the fused sparse LS-PLM kernel.
+
+This is the padded-COO math that ``repro/data/sparse.py`` shipped as its
+production path before the Pallas kernel existed: a ``take`` gather that
+materialises the (N, K, 2m) row intermediate in HBM, then an einsum
+reduction. It stays here as the bit-exact oracle for the kernel tests and
+as the baseline ``benchmarks/bench_sparse_fused.py`` measures against.
+
+Conventions (shared by kernel, ops and oracle):
+
+    ids   (N, K) int32    active column ids; pad slots carry id == D-1
+    vals  (N, K) float    feature values; 0.0 on pad slots
+    theta (D, 2m) float   PADDED parameters — the last row must be all
+                          zeros so pad ids contribute nothing
+
+with D = d + 1 (``ops.pad_theta`` appends the zero row).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sparse_matmul_ref(ids: jax.Array, vals: jax.Array, theta: jax.Array) -> jax.Array:
+    """z[n] = sum_k vals[n,k] * theta[ids[n,k], :].  (N, K) -> (N, 2m)."""
+    rows = jnp.take(theta, ids, axis=0)  # (N, K, 2m) — the HBM intermediate
+    return jnp.einsum("nk,nkm->nm", vals.astype(rows.dtype), rows)
+
+
+def lsplm_sparse_forward_ref(ids: jax.Array, vals: jax.Array, theta: jax.Array) -> jax.Array:
+    """p(y=1|x) per Eq. 2 on padded-COO inputs. Returns (N,)."""
+    z = sparse_matmul_ref(ids, vals, theta)
+    m = theta.shape[-1] // 2
+    gate = jax.nn.softmax(z[..., :m], axis=-1)
+    fit = jax.nn.sigmoid(z[..., m:])
+    return jnp.sum(gate * fit, axis=-1)
+
+
+def lsplm_sparse_logps_ref(
+    ids: jax.Array, vals: jax.Array, theta: jax.Array
+) -> tuple[jax.Array, jax.Array]:
+    """Numerically-stable (log_p1, log_p0) for the NLL (Eq. 5), sparse."""
+    z = sparse_matmul_ref(ids, vals, theta)
+    m = theta.shape[-1] // 2
+    log_gate = jax.nn.log_softmax(z[..., :m], axis=-1)
+    log_p1 = jax.nn.logsumexp(log_gate + jax.nn.log_sigmoid(z[..., m:]), axis=-1)
+    log_p0 = jax.nn.logsumexp(log_gate + jax.nn.log_sigmoid(-z[..., m:]), axis=-1)
+    return log_p1, log_p0

@@ -68,6 +68,7 @@ def test_decode_attention_ignores_invalid_slots():
     np.testing.assert_allclose(np.asarray(out1), np.asarray(out2), rtol=1e-6)
 
 
+@pytest.mark.slow
 def test_sliding_window_decode_equals_full_when_window_covers():
     """Ring-buffer sliding-window decode == full-cache decode while
     pos < window (the window hasn't wrapped yet)."""

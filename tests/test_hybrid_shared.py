@@ -6,11 +6,13 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.configs import get_config
 from repro.models import decode_step, forward, init_caches, init_model
 
 
+@pytest.mark.slow
 def test_shared_block_gradient_accumulates_across_groups():
     """If the shared block were per-group copies, its grad tree would have
     a leading J axis; being shared, grads accumulate into ONE param set
@@ -38,6 +40,7 @@ def test_shared_block_gradient_accumulates_across_groups():
     assert float(jnp.abs(l1 - l2).max()) > 1e-3
 
 
+@pytest.mark.slow
 def test_sliding_window_wraps_and_is_shift_invariant_single_layer():
     """Ring buffer wraps correctly far past the window. With ONE layer the
     logits depend only on the last W tokens (exact shift invariance); with
@@ -68,6 +71,7 @@ def test_sliding_window_wraps_and_is_shift_invariant_single_layer():
     np.testing.assert_allclose(tail, full, rtol=2e-2, atol=2e-2)
 
 
+@pytest.mark.slow
 def test_sliding_window_multilayer_finite_past_wrap():
     cfg = get_config("llama3.2-1b").reduced()
     params = init_model(cfg, jax.random.PRNGKey(0))

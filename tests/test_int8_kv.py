@@ -4,11 +4,13 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.configs import get_config
 from repro.models import decode_step, init_caches, init_model
 
 
+@pytest.mark.slow
 def test_int8_kv_decode_tracks_bf16():
     cfg = get_config("qwen1.5-32b").reduced()
     cfg8 = dataclasses.replace(cfg, kv_cache_dtype="int8")

@@ -1,8 +1,14 @@
-"""Property-based tests (hypothesis) for system invariants."""
+"""Property-based tests (hypothesis) for system invariants.
+
+hypothesis is an OPTIONAL test dependency: the whole module skips
+cleanly when it is absent (CI installs it; a bare checkout need not)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip("hypothesis", reason="property sweeps need hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.direction import (
     choose_orthant,

@@ -2,6 +2,7 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.core import CTRBatch
 from repro.core.objective import nll
@@ -47,6 +48,7 @@ def test_sparse_grad_touches_only_active_rows():
     assert np.abs(g_np[np.asarray(sorted(active))]).max() > 0.0
 
 
+@pytest.mark.slow
 def test_lsplm_trains_on_million_column_sparse_features():
     """The production regime the dense path cannot touch: 1M columns.
     Theta is (1e6, 8) = 8M params; a dense x would be 2M x 1M = 8 TB."""
