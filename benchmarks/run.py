@@ -5,22 +5,28 @@ Prints ``name,us_per_call,derived`` CSV rows:
   * bench_regularization  — Table 2 (L1 / L2,1 sparsity + AUC)
   * bench_common_feature  — Table 3 (common-feature trick cost)
   * bench_lr_vs_lsplm     — Fig. 5 (LS-PLM vs LR over 7 datasets)
-  * bench_sparse_fused    — fused sparse kernel vs gather+einsum vs dense
+  * bench_sparse_fused    — fused sparse kernel fwd/bwd vs oracles
   * roofline_report       — §Roofline rows from the dry-run artifacts
 
 Usage:
-  PYTHONPATH=src python -m benchmarks.run [--only SUBSTR] [--smoke]
+  PYTHONPATH=src python -m benchmarks.run [--only SUBSTR] [--smoke] [--json]
 
 ``--only`` filters modules by name substring; ``--smoke`` asks modules
-that support it for tiny shapes (the CI smoke step runs
-``--only sparse_fused --smoke`` on CPU).
+that support it for tiny shapes; ``--json`` additionally writes
+``BENCH_sparse_fused.json`` — the machine-readable perf trajectory
+(shapes, fwd/bwd microseconds, speedups vs the take+einsum oracle and
+the chunked scatter) that CI archives as an artifact. The CI smoke step
+runs ``--only sparse_fused --smoke --json`` on CPU.
 """
 from __future__ import annotations
 
 import argparse
 import inspect
+import json
 import sys
 import traceback
+
+SPARSE_FUSED_JSON = "BENCH_sparse_fused.json"
 
 
 def main() -> None:
@@ -29,6 +35,9 @@ def main() -> None:
                     help="run only modules whose name contains this substring")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny shapes where supported (CI)")
+    ap.add_argument("--json", action="store_true",
+                    help=f"write {SPARSE_FUSED_JSON} with the sparse-kernel "
+                         "timings (CI artifact)")
     args = ap.parse_args()
 
     from benchmarks import (
@@ -52,14 +61,22 @@ def main() -> None:
     ok = True
     for mod in mods:
         kwargs = {}
-        if args.smoke and "smoke" in inspect.signature(mod.run).parameters:
+        params = inspect.signature(mod.run).parameters
+        if args.smoke and "smoke" in params:
             kwargs["smoke"] = True
+        collect: dict = {}
+        if args.json and mod is bench_sparse_fused:
+            kwargs["collect"] = collect
         try:
             mod.run(**kwargs)
         except Exception:  # noqa: BLE001
             ok = False
             print(f"{mod.__name__},0,ERROR", file=sys.stderr)
             traceback.print_exc()
+        if collect:
+            with open(SPARSE_FUSED_JSON, "w") as f:
+                json.dump(collect, f, indent=2, sort_keys=True)
+            print(f"wrote {SPARSE_FUSED_JSON}", file=sys.stderr)
     if not ok:
         raise SystemExit(1)
 

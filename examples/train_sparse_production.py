@@ -8,10 +8,16 @@ only active ids — exactly the paper's one-hot regime — and OWLQN+ trains
 Theta (1e6 x 8) with L1+L2,1 sparsity.
 
 Execution: the whole job rides the FUSED sparse kernel package
-(`repro.kernels.lsplm_sparse_fused`) — Pallas gather-matmul on TPU
-(Theta in HBM, active rows DMA'd to VMEM), K-chunked jnp accumulation on
-CPU/GPU, and a custom-VJP backward that scatter-adds only into active
-Theta rows. No (B, d) batch or (N, K, 2m) gather blob is ever built.
+(`repro.kernels.lsplm_sparse_fused`) — a pipelined block-DMA Pallas
+gather-matmul on TPU (scalar-prefetched ids, double-buffered K-row
+blocks, Theta in HBM), K-chunked `lax.scan` accumulation on CPU/GPU, and
+a custom-VJP backward scheduled by per-batch TRANSPOSE PLANS
+(`generate_sparse` attaches them): the id->entries sort happens once on
+the host, every optimizer step then runs sort-free, scatter-free segment
+sums into active Theta rows only. No (B, d) batch is ever built, and the
+(N, K, 2m) gather blob exists only below ``ROWS_REUSE_LIMIT`` — where it
+is deliberately kept as a VJP residual so the backward skips re-gathering
+— never at production batch sizes like this one.
 """
 import time
 
@@ -39,8 +45,10 @@ def main():
     n_samples = np.asarray(train.ad_ids).shape[0]
     backend = jax.default_backend()
     print(f"sparse execution path: fused kernel "
-          f"({'Pallas' if backend == 'tpu' else 'chunked-jnp fallback'}, "
-          f"backend={backend}), scatter-add custom VJP")
+          f"({'pipelined Pallas' if backend == 'tpu' else 'scan-jnp fallback'}, "
+          f"backend={backend}), transpose-plan custom VJP "
+          f"({train.ad_plan.num_unique:,} unique ad ids, "
+          f"{train.user_plan.num_unique:,} unique user ids)")
     print(f"features d = {D:,}; params = {theta0.size:,} "
           f"(this batch dense: {n_samples * D * 4 / 2**30:.1f} GiB; one of "
           f"the paper's 1.4e9-sample days dense: "

@@ -117,26 +117,32 @@ def predict_logits_stable(params: LSPLMParams, x: jax.Array) -> tuple[jax.Array,
 
 
 def predict_proba_sparse(
-    params: LSPLMParams, ids: jax.Array, vals: jax.Array, *, mode: str = "auto"
+    params: LSPLMParams, ids: jax.Array, vals: jax.Array, *,
+    mode: str = "auto", plan=None
 ) -> jax.Array:
     """p(y=1|x) per Eq. 2 from padded-COO (ids, vals) — the production
-    input format. Runs the fused sparse kernel (softmax-dot-sigmoid
-    in-register); ids use pad id == d. Returns (N,)."""
+    input format. Runs the fused sparse kernel (pipelined block-DMA
+    gather, softmax-dot-sigmoid in-register); ids use pad id == d. Pass
+    ``plan`` (``repro.data.sparse.build_transpose_plan``) when the call
+    will be differentiated to keep the backward sort-free. Returns (N,)."""
     from repro.kernels.lsplm_sparse_fused.ops import (
         lsplm_sparse_forward, pad_theta)
 
-    return lsplm_sparse_forward(ids, vals, pad_theta(params.theta), mode=mode)
+    return lsplm_sparse_forward(ids, vals, pad_theta(params.theta), mode=mode,
+                                plan=plan)
 
 
 def predict_logits_stable_sparse(
-    params: LSPLMParams, ids: jax.Array, vals: jax.Array, *, mode: str = "auto"
+    params: LSPLMParams, ids: jax.Array, vals: jax.Array, *,
+    mode: str = "auto", plan=None
 ) -> tuple[jax.Array, jax.Array]:
     """Sparse analogue of ``predict_logits_stable``: (log_p1, log_p0)
     from padded-COO inputs via the fused kernel's region logits."""
     from repro.kernels.lsplm_sparse_fused.ops import (
         lsplm_sparse_logps, pad_theta)
 
-    return lsplm_sparse_logps(ids, vals, pad_theta(params.theta), mode=mode)
+    return lsplm_sparse_logps(ids, vals, pad_theta(params.theta), mode=mode,
+                              plan=plan)
 
 
 def foe_mixture_proba(params: LSPLMParams, x: jax.Array) -> jax.Array:

@@ -96,11 +96,16 @@ def nll_sparse(theta: jax.Array, batch, *, mode: str = "auto") -> jax.Array:
     """Eq. 5 on padded-COO sparse features with the common-feature trick
     (Eq. 13): user region-logits once per session group, gathered per
     sample. Both gather-matmuls run on the fused sparse kernel, so the
-    backward is the transposed scatter-add into active Theta rows only.
+    backward is the transposed scatter into active Theta rows only —
+    sort-free when the batch carries precomputed transpose plans
+    (``repro.data.sparse.build_batch_plans``), scan-chunked otherwise.
     """
     tp = pad_theta(theta)
-    z_user = sparse_gather_matmul(batch.user_ids, batch.user_vals, tp, mode=mode)
-    z_ad = sparse_gather_matmul(batch.ad_ids, batch.ad_vals, tp, mode=mode)
+    z_user = sparse_gather_matmul(batch.user_ids, batch.user_vals, tp,
+                                  mode=mode,
+                                  plan=getattr(batch, "user_plan", None))
+    z_ad = sparse_gather_matmul(batch.ad_ids, batch.ad_vals, tp, mode=mode,
+                                plan=getattr(batch, "ad_plan", None))
     z = z_user[batch.session_id] + z_ad
     log_p1, log_p0 = logps_from_z(z)
     return _nll_from_logps(log_p1, log_p0, batch.y.astype(log_p1.dtype), None)

@@ -13,6 +13,9 @@ from repro.data.common_feature import (  # noqa: F401
 )
 from repro.data.sparse import (  # noqa: F401
     SparseCTRBatch,
+    TransposePlan,
+    build_batch_plans,
+    build_transpose_plan,
     generate_sparse,
     pad_theta,
     sparse_loss_and_grad,

@@ -15,12 +15,20 @@ This is TPU-native (dense gather + reductions — no hash maps, DESIGN.md
 §3), exactly how embedding lookups work in production CTR systems.
 
 Execution path: everything here rides the FUSED sparse kernel package
-(``repro.kernels.lsplm_sparse_fused``) — a Pallas gather-matmul on TPU
-that DMAs only the active Theta rows into VMEM, a K-chunked jnp
-accumulation elsewhere, and a ``jax.custom_vjp`` whose backward is the
-transposed scatter-add (segment-sum into Theta rows). The old
+(``repro.kernels.lsplm_sparse_fused``) — a pipelined block-DMA Pallas
+gather-matmul on TPU (scalar-prefetched ids, double-buffered K-row
+blocks), a K-chunked ``lax.scan`` accumulation elsewhere, and a
+``jax.custom_vjp`` whose backward is the transposed scatter. The old
 ``take``+einsum formulation, which materialises the (N, K, 2m) gather
 intermediate in HBM, lives on as the oracle in that package's ``ref.py``.
+
+Transpose plans: the backward's id->entries transposition (a sort) is
+data-dependent but BATCH-constant, so it is precomputed here, once per
+batch, as a :class:`TransposePlan` (``build_transpose_plan`` /
+``build_batch_plans``) and carried on the batch. With a plan attached
+the per-step backward is pure gathers + segment sums — no sort, no
+scatter — on every backend (``repro.kernels.lsplm_sparse_scatter``).
+Batches without plans still work (scan-chunked scatter fallback).
 
 The common-feature trick composes: user ids are stored once per session
 (G, Ku) and gathered per sample, ad ids per sample (B, Ka).
@@ -39,6 +47,10 @@ from repro.kernels.lsplm_sparse_fused.ops import (
     pad_theta,
     sparse_gather_matmul,
 )
+from repro.kernels.lsplm_sparse_scatter.ops import (  # noqa: F401 (re-export)
+    TransposePlan,
+    build_transpose_plan,
+)
 
 
 class SparseCTRBatch(NamedTuple):
@@ -51,18 +63,36 @@ class SparseCTRBatch(NamedTuple):
     session_id: jax.Array  # (B,)
     y: jax.Array  # (B,)
     num_features: int = 0  # d (static)
+    # precomputed backward transpose plans (None -> scan-chunked fallback)
+    user_plan: TransposePlan | None = None
+    ad_plan: TransposePlan | None = None
+
+
+def build_batch_plans(batch: "SparseCTRBatch") -> "SparseCTRBatch":
+    """Attach per-batch transpose plans (one argsort per id tensor, on
+    the host, once) so every optimizer step's backward is sort-free.
+    Plans address the PADDED Theta (d + 1 rows, pad id == d)."""
+    rows = batch.num_features + 1
+    return batch._replace(
+        user_plan=build_transpose_plan(
+            np.asarray(batch.user_ids), rows, pad_id=batch.num_features),
+        ad_plan=build_transpose_plan(
+            np.asarray(batch.ad_ids), rows, pad_id=batch.num_features),
+    )
 
 
 def sparse_matmul(ids: jax.Array, vals: jax.Array, theta: jax.Array,
-                  *, mode: str = "auto") -> jax.Array:
+                  *, mode: str = "auto",
+                  plan: TransposePlan | None = None) -> jax.Array:
     """(N, K) ids/vals  x  Theta (d+1, 2m) -> (N, 2m), FUSED.
 
     Theta must carry ONE trailing pad row (all zeros) so pad ids hit it
-    (``pad_theta``). Dispatches to the Pallas kernel on TPU and the
-    chunked jnp path elsewhere; differentiable via the scatter-add
-    custom VJP either way.
+    (``pad_theta``). Dispatches to the pipelined Pallas kernel on TPU
+    and the chunked jnp path elsewhere; differentiable via the
+    transposed-scatter custom VJP either way (plan-driven when ``plan``
+    is given).
     """
-    return sparse_gather_matmul(ids, vals, theta, mode=mode)
+    return sparse_gather_matmul(ids, vals, theta, mode=mode, plan=plan)
 
 
 def sparse_nll(theta: jax.Array, batch: SparseCTRBatch) -> jax.Array:
@@ -79,8 +109,10 @@ def sparse_loss_and_grad(theta: jax.Array, batch: SparseCTRBatch):
 def sparse_predict(theta: jax.Array, batch: SparseCTRBatch) -> jax.Array:
     """p(y=1|x) for a session-structured sparse batch (fused path)."""
     tp = pad_theta(theta)
-    z = (sparse_matmul(batch.user_ids, batch.user_vals, tp)[batch.session_id]
-         + sparse_matmul(batch.ad_ids, batch.ad_vals, tp))
+    z = (sparse_matmul(batch.user_ids, batch.user_vals, tp,
+                       plan=batch.user_plan)[batch.session_id]
+         + sparse_matmul(batch.ad_ids, batch.ad_vals, tp,
+                         plan=batch.ad_plan))
     m = theta.shape[-1] // 2
     gate = jax.nn.softmax(z[..., :m], axis=-1)
     fit = jax.nn.sigmoid(z[..., m:])
@@ -103,6 +135,7 @@ def generate_sparse(
     active_user: int = 24,
     active_ad: int = 12,
     seed: int = 0,
+    with_plans: bool = True,
 ) -> SparseCTRBatch:
     """Million-column sparse CTR batch with session structure. Ground
     truth: piecewise-linear over a planted low-dim projection of the
@@ -149,7 +182,7 @@ def generate_sparse(
     p = 1 / (1 + np.exp(-logits))
     y = (rng.random(B) < p).astype(np.float32)
 
-    return SparseCTRBatch(
+    batch = SparseCTRBatch(
         user_ids=jnp.asarray(user_ids, jnp.int32),
         user_vals=jnp.asarray(user_vals),
         ad_ids=jnp.asarray(ad_ids, jnp.int32),
@@ -158,6 +191,7 @@ def generate_sparse(
         y=jnp.asarray(y),
         num_features=d,
     )
+    return build_batch_plans(batch) if with_plans else batch
 
 
 def to_dense(batch: SparseCTRBatch) -> np.ndarray:

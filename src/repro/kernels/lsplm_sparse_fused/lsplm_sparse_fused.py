@@ -1,34 +1,57 @@
-"""Fused sparse LS-PLM forward kernel — padded-COO gather-matmul + Eq. 2.
+"""Fused sparse LS-PLM forward kernel — pipelined block-DMA gather + Eq. 2.
 
 The paper's production inputs are one-hot/multi-hot id lists over millions
-of columns (§2, §3.2); a dense (B, d) batch never exists. The jnp path
-(`ref.py`) gathers Theta rows with ``take`` — materialising an (N, K, 2m)
-intermediate in HBM — and reduces it with an einsum (a second HBM sweep).
-This kernel does the whole thing in one pass per batch tile:
+of columns (§2, §3.2); a dense (B, d) batch never exists. This kernel
+computes p(y=1|x) straight from padded-COO (ids, vals) in one pass per
+batch tile, with the row gathers organised as a true DMA pipeline:
 
-  * ids/vals tiles (BT, K) live in VMEM; Theta (D, 2m) STAYS IN HBM —
-    only the K active rows of each sample are DMA'd into a (K, 2m) VMEM
-    scratch (exactly how production embedding lookups work),
-  * each sample's z = vals_n . rows is one (K)x(K,2m) contraction,
-    accumulated straight into a (BT, 2m) VMEM buffer — the (N, K, 2m)
-    gather intermediate is never materialised anywhere,
-  * the softmax-dot-sigmoid fusion (Eq. 2) runs in-register on the z
-    tile; only (BT,) probabilities and the (BT, 2m) region logits are
-    written back to HBM (z is the residual the custom VJP needs).
+  * ids are a SCALAR-PREFETCH operand (``PrefetchScalarGridSpec``): they
+    land in SMEM before the kernel body runs, so every DMA's source row
+    is known without touching VMEM — the requirement for issuing copies
+    ahead of the compute that consumes them.
+  * Theta (D, 2m) stays in HBM; the K id slots of each sample are
+    processed in K-ROW BLOCKS of ``block_k`` rows. Two (block_k, 2m)
+    VMEM buffers double-buffer the stream: while block t is being
+    contracted against its vals chunk, the ``block_k`` row copies of
+    block t+1 are already in flight — gathers for the next block overlap
+    the matmul of the current one, across sample boundaries too (the
+    flat pipeline index runs over the whole tile).
+  * pad-id rows (id == D-1) are SKIPPED: no HBM DMA is issued; the
+    buffer row is zeroed in place instead, so a pad slot contracts
+    exactly like the zero pad row it aliases (even if its val is not 0,
+    matching the jnp path and the oracle). Combined with the runtime
+    dedup pre-pass in ``ops.dedup_tile_ids`` (duplicate ids within a
+    sample collapse onto their first slot with summed values, freed
+    slots become pad), hot features are fetched once per sample and
+    ragged tails cost nothing.
+  * the softmax-dot-sigmoid fusion (Eq. 2) runs in-register on the
+    accumulated z tile; only (BT,) probabilities and the (BT, 2m) region
+    logits are written back (z is the residual the custom VJP needs).
 
-Grid: (N/BT,) over batch tiles. Theta must carry the zero pad row
-(id == D-1) so pad slots contribute nothing; `ops.pad_theta` provides it.
+Grid: (N/block_n,) over batch tiles. Theta must carry the zero pad row
+(id == D-1); ``ops.pad_theta`` provides it.
 
-Scaling note: Theta lives in HBM so d is bounded by device HBM, not VMEM
-(a (1e6, 24) fp32 Theta is 96 MB — fine). Sharding Theta's rows across
-chips (the paper's parameter-server axis) is the next step; see ROADMAP.
+VMEM/SMEM sizing rule (what bounds the block sizes):
 
-Coverage caveat: CI validates this kernel in INTERPRET mode only (the
-runners have no TPU). The compiled Mosaic path — in particular driving
-the per-row DMA index from the VMEM-resident ids tile — has not been
-lowered on real hardware yet; first-TPU bring-up should start from
-``mode="interpret"`` parity and may need ids moved to scalar prefetch.
-See ROADMAP "Sparse kernel perf on real TPU".
+    VMEM  ~=  2 * block_k * 2m * 4        (double buffers)
+            + block_n * K_pad * 4          (vals tile)
+            + block_n * (2m + 1) * 4       (z + p tiles)
+    SMEM  ~=  N_pad * K_pad * 4            (prefetched ids, whole batch)
+
+so block_n * K and block_k * 2m are the knobs; ids SMEM residency bounds
+the rows per ``pallas_call`` — CALLERS must slice batches whose
+N_pad * K_pad * 4 bytes exceed SMEM into separate calls (no automatic
+slabbing exists yet; see ROADMAP's TPU bring-up item). Theta itself
+never enters VMEM (d is HBM-bounded: a (1e6, 24) fp32 Theta is 96 MB).
+
+Coverage: CI validates this kernel in INTERPRET mode (no TPU runners),
+which exercises the full pipeline logic — scalar-prefetched indexing,
+conditional skip DMAs, buffer rotation, cross-sample chunk flattening.
+The compiled Mosaic path follows the standard prefetch+double-buffer
+recipe (see the Pallas guide's "Double Buffering" pattern); first-TPU
+bring-up should confirm ``mode="kernel"`` parity against
+``mode="interpret"`` and then sweep (block_n, block_k) with
+``benchmarks/bench_sparse_fused.py``.
 """
 from __future__ import annotations
 
@@ -40,28 +63,77 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
-def _kernel(ids_ref, vals_ref, theta_ref, p_ref, z_ref, rows, sems, *, m: int):
-    block_n, K = ids_ref.shape
+def _kernel(ids_ref, vals_ref, theta_ref, p_ref, z_ref, bufs, sems, *,
+            m: int, block_n: int, block_k: int, nkb: int, skip_id: int):
+    """One batch tile: T = block_n * nkb pipelined K-row blocks."""
+    pid = pl.program_id(0)
+    T = block_n * nkb
 
-    def row_body(n, carry):
-        # start all K row-DMAs for this sample, then drain them: the
-        # gathers overlap each other (and, across rows, the contraction).
-        for k in range(K):
-            pltpu.make_async_copy(
-                theta_ref.at[ids_ref[n, k]], rows.at[k], sems.at[k]
-            ).start()
-        for k in range(K):
-            pltpu.make_async_copy(
-                theta_ref.at[ids_ref[n, k]], rows.at[k], sems.at[k]
-            ).wait()
-        z_ref[n, :] = jnp.dot(
-            vals_ref[n, :].astype(jnp.float32),
-            rows[...].astype(jnp.float32),
+    @pl.when(pid == 0)
+    def _zero_buffers():  # never read uninitialised VMEM on skipped slots
+        bufs[...] = jnp.zeros_like(bufs)
+
+    def row_dma(t, slot, j):
+        n = pid * block_n + t // nkb
+        k = jax.lax.rem(t, nkb) * block_k + j
+        return pltpu.make_async_copy(
+            theta_ref.at[ids_ref[n, k]], bufs.at[slot, j], sems.at[slot, j])
+
+    def start(t, slot):
+        for j in range(block_k):
+            n = pid * block_n + t // nkb
+            k = jax.lax.rem(t, nkb) * block_k + j
+
+            @pl.when(ids_ref[n, k] != skip_id)
+            def _():
+                row_dma(t, slot, j).start()
+
+            # skipped slots must still contract like the zero pad row —
+            # zero the buffer row (VMEM-only store; slot (t+1)%2 is idle
+            # while step t computes, so this never races the matmul)
+            @pl.when(ids_ref[n, k] == skip_id)
+            def _():
+                bufs[slot, j, :] = jnp.zeros_like(bufs[slot, j, :])
+
+    def wait(t, slot):
+        for j in range(block_k):
+            n = pid * block_n + t // nkb
+            k = jax.lax.rem(t, nkb) * block_k + j
+
+            @pl.when(ids_ref[n, k] != skip_id)
+            def _():
+                row_dma(t, slot, j).wait()
+
+    start(0, 0)
+
+    def pipeline_step(t, carry):
+        slot = jax.lax.rem(t, 2)
+
+        @pl.when(t + 1 < T)
+        def _prefetch_next():  # overlaps the contraction below
+            start(t + 1, jax.lax.rem(t + 1, 2))
+
+        wait(t, slot)
+        n = t // nkb
+        b = jax.lax.rem(t, nkb)
+        vchunk = vals_ref[n, pl.ds(b * block_k, block_k)]
+        partial = jnp.dot(
+            vchunk.astype(jnp.float32),
+            bufs[slot].astype(jnp.float32),
             preferred_element_type=jnp.float32,
         )
+
+        @pl.when(b == 0)
+        def _():
+            z_ref[n, :] = partial
+
+        @pl.when(b != 0)
+        def _():
+            z_ref[n, :] = z_ref[n, :] + partial
+
         return carry
 
-    jax.lax.fori_loop(0, block_n, row_body, 0)
+    jax.lax.fori_loop(0, T, pipeline_step, 0)
 
     z = z_ref[...]
     gate = jax.nn.softmax(z[:, :m], axis=-1)
@@ -69,20 +141,22 @@ def _kernel(ids_ref, vals_ref, theta_ref, p_ref, z_ref, rows, sems, *, m: int):
     p_ref[...] = jnp.sum(gate * fit, axis=-1, keepdims=True).astype(p_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+@functools.partial(jax.jit,
+                   static_argnames=("block_n", "block_k", "interpret"))
 def lsplm_sparse_fused_forward(
     ids: jax.Array,  # (N, K) int32, pad id == theta.shape[0] - 1
     vals: jax.Array,  # (N, K)
     theta: jax.Array,  # (D, 2m) with zero pad row at D-1
     *,
     block_n: int = 256,
+    block_k: int = 8,
     interpret: bool = False,
 ) -> tuple[jax.Array, jax.Array]:
-    """Fused sparse forward. Returns (p (N,), z (N, 2m)).
+    """Pipelined fused sparse forward. Returns (p (N,), z (N, 2m)).
 
-    Ragged N is handled by padding the batch with pad-id rows up to a
-    block multiple (those rows gather only the zero row) and slicing the
-    outputs back — real loaders never need to round their batch sizes.
+    Ragged N and K are handled by padding with pad-id slots up to block
+    multiples (skipped by the pipeline, zero-valued in the contraction)
+    and slicing the outputs back — loaders never round their shapes.
     """
     if ids.shape != vals.shape or ids.ndim != 2:
         raise ValueError(f"ids/vals must be (N, K), got {ids.shape}/{vals.shape}")
@@ -92,32 +166,44 @@ def lsplm_sparse_fused_forward(
     D, m2 = theta.shape
     m = m2 // 2
     block_n = max(1, min(block_n, N))
+    block_k = max(1, min(block_k, K))
     n_pad = pl.cdiv(N, block_n) * block_n
+    k_pad = pl.cdiv(K, block_k) * block_k
     if n_pad != N:
         ids = jnp.concatenate(
             [ids, jnp.full((n_pad - N, K), D - 1, ids.dtype)], axis=0)
         vals = jnp.concatenate(
             [vals, jnp.zeros((n_pad - N, K), vals.dtype)], axis=0)
+    if k_pad != K:
+        ids = jnp.concatenate(
+            [ids, jnp.full((n_pad, k_pad - K), D - 1, ids.dtype)], axis=1)
+        vals = jnp.concatenate(
+            [vals, jnp.zeros((n_pad, k_pad - K), vals.dtype)], axis=1)
+    nkb = k_pad // block_k
 
-    p, z = pl.pallas_call(
-        functools.partial(_kernel, m=m),
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
         grid=(n_pad // block_n,),
         in_specs=[
-            pl.BlockSpec((block_n, K), lambda i: (i, 0)),
-            pl.BlockSpec((block_n, K), lambda i: (i, 0)),
-            pl.BlockSpec(memory_space=pl.ANY),  # Theta stays in HBM
+            pl.BlockSpec((block_n, k_pad), lambda i, *_: (i, 0)),
+            pl.BlockSpec(memory_space=pltpu.ANY),  # Theta stays in HBM
         ],
         out_specs=[
-            pl.BlockSpec((block_n, 1), lambda i: (i, 0)),
-            pl.BlockSpec((block_n, m2), lambda i: (i, 0)),
+            pl.BlockSpec((block_n, 1), lambda i, *_: (i, 0)),
+            pl.BlockSpec((block_n, m2), lambda i, *_: (i, 0)),
         ],
+        scratch_shapes=[
+            pltpu.VMEM((2, block_k, m2), theta.dtype),
+            pltpu.SemaphoreType.DMA((2, block_k)),
+        ],
+    )
+    p, z = pl.pallas_call(
+        functools.partial(_kernel, m=m, block_n=block_n, block_k=block_k,
+                          nkb=nkb, skip_id=D - 1),
+        grid_spec=grid_spec,
         out_shape=[
             jax.ShapeDtypeStruct((n_pad, 1), theta.dtype),
             jax.ShapeDtypeStruct((n_pad, m2), jnp.float32),
-        ],
-        scratch_shapes=[
-            pltpu.VMEM((K, m2), theta.dtype),
-            pltpu.SemaphoreType.DMA((K,)),
         ],
         interpret=interpret,
     )(ids, vals, theta)

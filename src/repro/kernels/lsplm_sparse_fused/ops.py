@@ -1,11 +1,11 @@
 """Public fused sparse LS-PLM ops: dispatch + ``jax.custom_vjp``.
 
-Two differentiable entry points, both backed by the Pallas kernel on TPU
-(or in interpret mode) and by a K-chunked accumulation elsewhere — the
-chunked path keeps the live intermediate at (N, chunk, 2m) instead of the
-(N, K, 2m) HBM blob the ``take``+einsum oracle materialises, which is
-what makes it win at production sparsity (K << d; see
-``benchmarks/bench_sparse_fused.py``):
+Two differentiable entry points, both backed by the pipelined Pallas
+kernel on TPU (or in interpret mode) and by a K-chunked ``lax.scan``
+accumulation elsewhere — the chunked path keeps the live intermediate at
+(N, chunk, 2m) instead of the (N, K, 2m) HBM blob the ``take``+einsum
+oracle materialises, which is what makes it win at production sparsity
+(K << d; see ``benchmarks/bench_sparse_fused.py``):
 
   * ``sparse_gather_matmul(ids, vals, theta) -> z (N, 2m)`` — the region
     logits. The stable-NLL training path (log-space Eq. 5) builds on this,
@@ -13,20 +13,31 @@ what makes it win at production sparsity (K << d; see
   * ``lsplm_sparse_forward(ids, vals, theta) -> p (N,)`` — fully fused
     probabilities (softmax-dot-sigmoid in-register on the kernel path).
 
-Both VJPs share one backward: the transposed scatter-add
+Both VJPs share one backward: the transposed scatter
 
     dTheta[r] = sum_{(n,k): ids[n,k]=r} vals[n,k] * dz[n]     (segment-sum)
     dvals[n,k] = theta[ids[n,k]] . dz[n]                      (gather-dot)
 
-emitted as K-chunked ``jax.ops.segment_sum`` into Theta rows — the exact
-transpose of the forward gather, and TPU-native (sorted scatter / one-hot
-matmul under XLA). ids are integer primals and get float0 cotangents.
+With a precomputed :class:`TransposePlan` (``plan=`` — built once per
+batch by ``repro.data.sparse.build_transpose_plan``) the dTheta half runs
+on ``repro.kernels.lsplm_sparse_scatter``: race-free segment sums with NO
+sort and NO scatter inside the step — the Pallas run-length kernel on
+TPU, plan-scheduled class gathers elsewhere. Without a plan it falls back
+to a ``lax.scan`` of K-chunked ``.at[].add`` scatters (constant trace
+size in K). The dvals half reuses the forward-gathered Theta rows when
+they were small enough to keep as residuals (``ROWS_REUSE_LIMIT``), else
+re-gathers through the plan's id-sorted layout (duplicates adjacent). ids
+are integer primals and get float0 cotangents; so does every plan leaf.
 
-``mode`` selects the forward implementation:
-    "auto"      Pallas kernel on TPU, chunked jnp elsewhere (default)
-    "kernel"    force the compiled Pallas kernel
-    "interpret" force the Pallas kernel in interpret mode (tests/CI)
-    "jnp"       force the chunked jnp path
+``mode`` selects the implementation on both sides of the VJP:
+    "auto"      Pallas kernels on TPU, chunked/plan jnp elsewhere (default)
+    "kernel"    force the compiled Pallas kernels
+    "interpret" force the Pallas kernels in interpret mode (tests/CI)
+    "jnp"       force the jnp paths
+
+Tunables (module-level, overridable per call):
+    DEFAULT_CHUNK     K-chunk of the scan fallbacks (``chunk=`` kwarg)
+    ROWS_REUSE_LIMIT  max ids.size * 2m kept as (N, K, 2m) residual rows
 """
 from __future__ import annotations
 
@@ -39,12 +50,23 @@ import numpy as np
 from repro.kernels.lsplm_sparse_fused.lsplm_sparse_fused import (
     lsplm_sparse_fused_forward,
 )
+from repro.kernels.lsplm_sparse_scatter.ops import (
+    TransposePlan,
+    dvals_planned,
+    scatter_add_planned,
+)
 
-_CHUNK = 8  # K-chunk for the jnp fallback and the scatter backward
+DEFAULT_CHUNK = 8     # K-chunk for the scan fallbacks (public tunable)
+ROWS_REUSE_LIMIT = 1 << 22  # save fwd rows as residuals up to this many floats
 
 
 def pad_theta(theta: jax.Array) -> jax.Array:
-    """Append the zero pad row (pad id == d == theta.shape[0])."""
+    """Append the zero pad row (pad id == d == theta.shape[0]).
+
+    The trailing row is RESERVED: every consumer in this package treats
+    id D-1 as the pad slot (skipped by the kernel pipeline, dropped by
+    transpose plans); its values must be 0.
+    """
     return jnp.concatenate(
         [theta, jnp.zeros((1, theta.shape[1]), theta.dtype)], axis=0)
 
@@ -66,15 +88,75 @@ def logps_from_z(z: jax.Array) -> tuple[jax.Array, jax.Array]:
     return log_p1, log_p0
 
 
-def _chunked_zmap(ids, vals, theta, chunk: int = _CHUNK) -> jax.Array:
-    """Fused-style jnp forward: accumulate z in K-chunks so the live
-    gather intermediate is (N, chunk, 2m), never (N, K, 2m)."""
+def dedup_tile_ids(ids: jax.Array, vals: jax.Array,
+                   pad_id: int) -> tuple[jax.Array, jax.Array]:
+    """Collapse duplicate ids within each sample onto one slot.
+
+    Repeated ids (hot features, multi-valued slots) are merged: the
+    shared slot carries the SUM of their values, freed slots become
+    (pad_id, 0). z is unchanged (sum_k v_k * theta[i_k] groups by id);
+    the kernel pipeline then fetches each hot row once per sample and
+    skips the freed slots entirely.
+
+    This is a RUNTIME pre-pass on the kernel path (an (N, K) per-row
+    argsort + two small scatters per call), worth it when id traffic is
+    hot/duplicated; pass ``dedup=False`` to the public ops for batches
+    known to be duplicate-free (e.g. pre-coalesced serving traffic).
+    """
     N, K = ids.shape
-    z = jnp.zeros((N, theta.shape[1]), jnp.float32)
-    for k0 in range(0, K, chunk):
-        rows = jnp.take(theta, ids[:, k0:k0 + chunk], axis=0)
-        z = z + jnp.einsum(
-            "nk,nkm->nm", vals[:, k0:k0 + chunk].astype(rows.dtype), rows)
+    order = jnp.argsort(ids, axis=1)
+    ids_s = jnp.take_along_axis(ids, order, axis=1)
+    vals_s = jnp.take_along_axis(vals, order, axis=1)
+    first = jnp.concatenate(
+        [jnp.ones((N, 1), bool), ids_s[:, 1:] != ids_s[:, :-1]], axis=1)
+    seg = jnp.cumsum(first.astype(jnp.int32), axis=1) - 1
+    row = jnp.broadcast_to(jnp.arange(N)[:, None], (N, K))
+    vals_d = jnp.zeros_like(vals).at[row, seg].add(vals_s)
+    ids_d = jnp.full_like(ids, pad_id).at[row, seg].min(ids_s)
+    return ids_d, vals_d
+
+
+def _pad_k(ids, vals, pad_id, multiple):
+    """Right-pad the K axis with (pad_id, 0) slots to a block multiple."""
+    N, K = ids.shape
+    k_pad = -(-K // multiple) * multiple
+    if k_pad == K:
+        return ids, vals
+    return (
+        jnp.concatenate(
+            [ids, jnp.full((N, k_pad - K), pad_id, ids.dtype)], axis=1),
+        jnp.concatenate(
+            [vals, jnp.zeros((N, k_pad - K), vals.dtype)], axis=1),
+    )
+
+
+def _chunk_blocks(ids, vals, pad_id, chunk):
+    """Shared K-blocking for the scan paths: clamp chunk, pad K, reshape
+    to (kb, N, chunk) scan order."""
+    K = ids.shape[1]
+    chunk = DEFAULT_CHUNK if chunk is None else chunk
+    chunk = max(1, min(chunk, K))
+    ids_p, vals_p = _pad_k(ids, vals, pad_id, chunk)
+    kb = ids_p.shape[1] // chunk
+    N = ids.shape[0]
+    return (ids_p.reshape(N, kb, chunk).transpose(1, 0, 2),
+            vals_p.reshape(N, kb, chunk).transpose(1, 0, 2), chunk, kb)
+
+
+def _chunked_zmap(ids, vals, theta, chunk: int | None = None) -> jax.Array:
+    """Fused-style jnp forward: ``lax.scan`` over K-chunks so the live
+    gather intermediate is (N, chunk, 2m) and the TRACE is constant in K
+    (a python loop would grow the program linearly with K)."""
+    N = ids.shape[0]
+    ids_r, vals_r, _, _ = _chunk_blocks(ids, vals, theta.shape[0] - 1, chunk)
+
+    def body(z, xs):
+        i, v = xs
+        rows = jnp.take(theta, i, axis=0)
+        return z + jnp.einsum("nk,nkm->nm", v.astype(rows.dtype), rows), None
+
+    z0 = jnp.zeros((N, theta.shape[1]), jnp.float32)
+    z, _ = jax.lax.scan(body, z0, (ids_r, vals_r))
     return z
 
 
@@ -88,87 +170,152 @@ def _use_kernel(mode: str) -> bool:
     raise ValueError(f"unknown mode {mode!r}")
 
 
-def _zmap(mode: str, block_n: int, ids, vals, theta) -> jax.Array:
+def _save_rows(ids, theta) -> bool:
+    return ids.size * theta.shape[-1] <= ROWS_REUSE_LIMIT
+
+
+def _kernel_forward(mode, block_n, block_k, dedup, ids, vals, theta):
+    if dedup:
+        ids, vals = dedup_tile_ids(ids, vals, theta.shape[0] - 1)
+    return lsplm_sparse_fused_forward(
+        ids, vals, theta, block_n=block_n, block_k=block_k,
+        interpret=mode == "interpret")
+
+
+def _zmap(mode, block_n, block_k, chunk, dedup, ids, vals, theta):
+    """Primal forward z — NEVER materialises the (N, K, 2m) rows."""
     if _use_kernel(mode):
-        _, z = lsplm_sparse_fused_forward(
-            ids, vals, theta, block_n=block_n, interpret=mode == "interpret")
+        _, z = _kernel_forward(mode, block_n, block_k, dedup, ids, vals, theta)
         return z
-    return _chunked_zmap(ids, vals, theta)
+    return _chunked_zmap(ids, vals, theta, chunk)
 
 
-def _scatter_bwd(ids, vals, theta, dz):
-    """Shared VJP tail: dz (N, 2m) -> (dvals, dtheta), K-chunked."""
+def _zmap_with_rows(mode, block_n, block_k, chunk, dedup, ids, vals, theta):
+    """VJP-forward z plus (optionally) the gathered rows kept as the
+    residual. Only DIFFERENTIATED calls come through here: when the
+    batch is small enough (``ROWS_REUSE_LIMIT``) the (N, K, 2m) rows are
+    gathered once, reused for z now and for dvals in the backward —
+    inference calls take ``_zmap`` and never build the blob."""
+    if _use_kernel(mode):
+        _, z = _kernel_forward(mode, block_n, block_k, dedup, ids, vals, theta)
+        return z, None
+    if _save_rows(ids, theta):
+        rows = jnp.take(theta, ids, axis=0)
+        z = jnp.einsum("nk,nkm->nm", vals.astype(rows.dtype), rows)
+        return z.astype(jnp.float32), rows
+    return _chunked_zmap(ids, vals, theta, chunk), None
+
+
+def _dtheta_chunked(ids, vals, theta, dz, chunk):
+    """``lax.scan`` of K-chunked scatter-adds (constant trace size in K)."""
     m2 = theta.shape[1]
-    dz = dz.astype(jnp.float32)
-    dtheta = jnp.zeros(theta.shape, jnp.float32)
-    dvals_parts = []
-    for k0 in range(0, ids.shape[1], _CHUNK):
-        i = ids[:, k0:k0 + _CHUNK]
-        v = vals[:, k0:k0 + _CHUNK].astype(jnp.float32)
-        data = (v[..., None] * dz[:, None, :]).reshape(-1, m2)
+    ids_r, vals_r, _, _ = _chunk_blocks(ids, vals, theta.shape[0] - 1, chunk)
+
+    def body(dtheta, xs):
+        i, v = xs
+        data = (v.astype(jnp.float32)[..., None] * dz[:, None, :]).reshape(-1, m2)
         # scatter straight into the one accumulator (duplicate ids sum) —
         # a per-chunk segment_sum would build a full (D, 2m) temp each time
-        dtheta = dtheta.at[i.reshape(-1)].add(data)
+        return dtheta.at[i.reshape(-1)].add(data), None
+
+    dtheta, _ = jax.lax.scan(
+        body, jnp.zeros(theta.shape, jnp.float32), (ids_r, vals_r))
+    return dtheta
+
+
+def _dvals_chunked(ids, vals, theta, dz, chunk):
+    """``lax.scan`` of K-chunked gather-dots (the no-plan/no-rows case)."""
+    N, K = ids.shape
+    ids_r, vals_r, chunk, kb = _chunk_blocks(ids, vals, theta.shape[0] - 1, chunk)
+
+    def body(_, xs):
+        i, _v = xs
         rows = jnp.take(theta, i, axis=0).astype(jnp.float32)
-        dvals_parts.append(jnp.einsum("nkm,nm->nk", rows, dz))
-    dvals = jnp.concatenate(dvals_parts, axis=1).astype(vals.dtype)
-    return dvals, dtheta.astype(theta.dtype)
+        return 0, jnp.einsum("nkm,nm->nk", rows, dz)
+
+    _, dv = jax.lax.scan(body, 0, (ids_r, vals_r))
+    return dv.transpose(1, 0, 2).reshape(N, kb * chunk)[:, :K]
 
 
-def _float0_like(ids):
-    return np.zeros(ids.shape, dtype=jax.dtypes.float0)
+def _scatter_bwd(mode, chunk, ids, vals, theta, dz, plan, rows):
+    """Shared VJP tail: dz (N, 2m) -> (dvals, dtheta)."""
+    dz = dz.astype(jnp.float32)
+    if plan is not None:
+        plan.validate(ids.shape, theta.shape[0])
+        dtheta = scatter_add_planned(plan, vals, dz, mode=mode)
+    else:
+        dtheta = _dtheta_chunked(ids, vals, theta, dz, chunk)
+    if rows is not None:  # reuse the forward's gathered rows (no re-gather)
+        dvals = jnp.einsum("nkm,nm->nk", rows.astype(jnp.float32), dz)
+    elif plan is not None:
+        dvals = dvals_planned(plan, theta, dz, ids.shape)
+    else:
+        dvals = _dvals_chunked(ids, vals, theta, dz, chunk)
+    return dvals.astype(vals.dtype), dtheta.astype(theta.dtype)
+
+
+def _float0_like(x):
+    return jax.tree.map(
+        lambda a: np.zeros(a.shape, dtype=jax.dtypes.float0), x)
 
 
 # ------------------------------------------------------- z-level custom VJP
-@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1))
-def _gather_matmul(mode: str, block_n: int, ids, vals, theta):
-    return _zmap(mode, block_n, ids, vals, theta)
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3, 4))
+def _gather_matmul(mode, block_n, block_k, chunk, dedup, ids, vals, theta,
+                   plan):
+    return _zmap(mode, block_n, block_k, chunk, dedup, ids, vals, theta)
 
 
-def _gather_matmul_fwd(mode, block_n, ids, vals, theta):
-    return _zmap(mode, block_n, ids, vals, theta), (ids, vals, theta)
+def _gather_matmul_fwd(mode, block_n, block_k, chunk, dedup, ids, vals, theta,
+                       plan):
+    z, rows = _zmap_with_rows(mode, block_n, block_k, chunk, dedup, ids, vals,
+                              theta)
+    return z, (ids, vals, theta, plan, rows)
 
 
-def _gather_matmul_bwd(mode, block_n, res, dz):
-    ids, vals, theta = res
-    dvals, dtheta = _scatter_bwd(ids, vals, theta, dz)
-    return _float0_like(ids), dvals, dtheta
+def _gather_matmul_bwd(mode, block_n, block_k, chunk, dedup, res, dz):
+    ids, vals, theta, plan, rows = res
+    dvals, dtheta = _scatter_bwd(mode, chunk, ids, vals, theta, dz, plan, rows)
+    return _float0_like(ids), dvals, dtheta, _float0_like(plan)
 
 
 _gather_matmul.defvjp(_gather_matmul_fwd, _gather_matmul_bwd)
 
 
 # ------------------------------------------------------- p-level custom VJP
-@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1))
-def _forward_p(mode: str, block_n: int, ids, vals, theta):
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3, 4))
+def _forward_p(mode, block_n, block_k, chunk, dedup, ids, vals, theta, plan):
     if _use_kernel(mode):
-        p, _ = lsplm_sparse_fused_forward(
-            ids, vals, theta, block_n=block_n, interpret=mode == "interpret")
+        p, _ = _kernel_forward(mode, block_n, block_k, dedup, ids, vals, theta)
         return p
-    return _finalize_p(_chunked_zmap(ids, vals, theta))
+    return _finalize_p(_zmap(mode, block_n, block_k, chunk, dedup, ids, vals,
+                             theta))
 
 
-def _forward_p_fwd(mode, block_n, ids, vals, theta):
+def _forward_p_fwd(mode, block_n, block_k, chunk, dedup, ids, vals, theta,
+                   plan):
     if _use_kernel(mode):
-        p, z = lsplm_sparse_fused_forward(
-            ids, vals, theta, block_n=block_n, interpret=mode == "interpret")
+        p, z = _kernel_forward(mode, block_n, block_k, dedup, ids, vals, theta)
+        rows = None
     else:
-        z = _chunked_zmap(ids, vals, theta)
+        z, rows = _zmap_with_rows(mode, block_n, block_k, chunk, dedup, ids,
+                                  vals, theta)
         p = _finalize_p(z)
-    return p, (ids, vals, theta, z, p)
+    return p, (ids, vals, theta, z, p, plan, rows)
 
 
-def _forward_p_bwd(mode, block_n, res, dp):
-    ids, vals, theta, z, p = res
+def _forward_p_bwd(mode, block_n, block_k, chunk, dedup, res, dp):
+    ids, vals, theta, z, p, plan, rows = res
     m = z.shape[-1] // 2
     gate = jax.nn.softmax(z[:, :m], axis=-1)
     fit = jax.nn.sigmoid(z[:, m:])
     dp = dp.astype(jnp.float32)[:, None]
     dzu = dp * gate * (fit - p.astype(jnp.float32)[:, None])
     dzw = dp * gate * fit * (1.0 - fit)
-    dvals, dtheta = _scatter_bwd(ids, vals, theta,
-                                 jnp.concatenate([dzu, dzw], axis=-1))
-    return _float0_like(ids), dvals, dtheta
+    dvals, dtheta = _scatter_bwd(
+        mode, chunk, ids, vals, theta,
+        jnp.concatenate([dzu, dzw], axis=-1), plan, rows)
+    return _float0_like(ids), dvals, dtheta, _float0_like(plan)
 
 
 _forward_p.defvjp(_forward_p_fwd, _forward_p_bwd)
@@ -176,19 +323,41 @@ _forward_p.defvjp(_forward_p_fwd, _forward_p_bwd)
 
 # ------------------------------------------------------------- public API
 def sparse_gather_matmul(ids, vals, theta, *, mode: str = "auto",
-                         block_n: int = 256) -> jax.Array:
-    """z = x @ Theta from padded COO, fused, custom-VJP'd. (N, K) -> (N, 2m)."""
-    return _gather_matmul(mode, block_n, ids, vals, theta)
+                         block_n: int = 256, block_k: int = 8,
+                         chunk: int | None = None, dedup: bool = True,
+                         plan: TransposePlan | None = None) -> jax.Array:
+    """z = x @ Theta from padded COO, fused, custom-VJP'd. (N, K) -> (N, 2m).
+
+    Pass ``plan`` (one ``build_transpose_plan`` per batch) to run the
+    backward on the precomputed transpose layout — no sort/scatter in
+    the step. Without it the backward scans K-chunked scatter-adds.
+    ``dedup=False`` skips the kernel path's per-call duplicate-id
+    collapse for batches known to be duplicate-free.
+    """
+    if plan is not None:
+        plan.validate(ids.shape, theta.shape[0])
+    return _gather_matmul(mode, block_n, block_k, chunk, dedup, ids, vals,
+                          theta, plan)
 
 
 def lsplm_sparse_forward(ids, vals, theta, *, mode: str = "auto",
-                         block_n: int = 256) -> jax.Array:
+                         block_n: int = 256, block_k: int = 8,
+                         chunk: int | None = None, dedup: bool = True,
+                         plan: TransposePlan | None = None) -> jax.Array:
     """p(y=1|x) per Eq. 2 from padded COO, fully fused. Returns (N,)."""
-    return _forward_p(mode, block_n, ids, vals, theta)
+    if plan is not None:
+        plan.validate(ids.shape, theta.shape[0])
+    return _forward_p(mode, block_n, block_k, chunk, dedup, ids, vals, theta,
+                      plan)
 
 
 def lsplm_sparse_logps(ids, vals, theta, *, mode: str = "auto",
-                       block_n: int = 256) -> tuple[jax.Array, jax.Array]:
+                       block_n: int = 256, block_k: int = 8,
+                       chunk: int | None = None, dedup: bool = True,
+                       plan: TransposePlan | None = None
+                       ) -> tuple[jax.Array, jax.Array]:
     """Stable (log_p1, log_p0) for Eq. 5 on padded COO — the training path."""
-    z = sparse_gather_matmul(ids, vals, theta, mode=mode, block_n=block_n)
+    z = sparse_gather_matmul(ids, vals, theta, mode=mode, block_n=block_n,
+                             block_k=block_k, chunk=chunk, dedup=dedup,
+                             plan=plan)
     return logps_from_z(z)

@@ -1,0 +1,124 @@
+"""Pallas scatter kernel for the sparse LS-PLM backward (dTheta).
+
+Consumes the transpose plan (`plan.py`): entries pre-sorted by column id,
+so the scatter degenerates into a RUN-LENGTH SEGMENT SUM — walk the
+sorted entries once, accumulate ``vals[e] * dz[sample[e]]`` into a VMEM
+accumulator while the id stays the same, and flush the accumulator to
+the next compact output row when it changes. No sort inside the step, no
+read-modify-write on HBM (each compact row is written exactly once), and
+no cross-program races: the grid is sequential on TPU and the
+accumulator/cursor live in scratch, which persists across grid steps.
+
+The kernel emits the COMPACT (U+1, 2m) result — one row per distinct id
+in plan order plus a trailing zero row — and the caller densifies it
+with the plan's ``inv_compact`` gather. That keeps the kernel free of
+(D, 2m) traffic entirely: HBM cost is O(U) writes, not O(D).
+
+Scalar-prefetched operands (``row_ids``, ``sample_sorted``) live in SMEM
+so the flush target and the dz row index are known without touching
+VMEM. dz rides in VMEM whole: (N, 2m) fp32 is ~3 MB at N=32k, m=12 —
+well under budget; for larger batches slice the batch before planning.
+
+The plan pads the sorted entries with at least one trailing sentinel
+(id == num_rows, never a real id): the sentinel both triggers the final
+flush of the last real run and absorbs the tail of the last grid block.
+
+CI exercises this kernel in interpret mode; the compiled Mosaic path
+follows the same sequential-grid contract (see the package README note
+in ops.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(row_ids_ref, sample_ref, vals_ref, dz_ref, out_ref,
+            acc, cursor, sem, *, block_e: int, num_kept: int, total: int):
+    pid = pl.program_id(0)
+
+    @pl.when(pid == 0)
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+        cursor[0] = row_ids_ref[0]   # id of the first run
+        cursor[1] = 0                # next compact row to write
+
+    def entry(e, carry):
+        gid = pid * block_e + e
+        rid = row_ids_ref[gid]
+
+        @pl.when(rid != cursor[0])
+        def _flush():
+            pltpu.make_async_copy(acc.at[0], out_ref.at[cursor[1]], sem).start()
+            pltpu.make_async_copy(acc.at[0], out_ref.at[cursor[1]], sem).wait()
+            acc[...] = jnp.zeros_like(acc)
+            cursor[0] = rid
+            cursor[1] = cursor[1] + 1
+
+        @pl.when(gid < num_kept)
+        def _accumulate():
+            n = sample_ref[gid]
+            acc[0, :] = acc[0, :] + vals_ref[e].astype(jnp.float32) * dz_ref[n, :]
+
+        # last entry overall: the sentinel tail flushed the final real run
+        # above and accumulated nothing since, so acc is zero — write it to
+        # the trailing zero row that inv_sorted points untouched ids at.
+        @pl.when(gid == total - 1)
+        def _zero_row():
+            pltpu.make_async_copy(acc.at[0], out_ref.at[cursor[1]], sem).start()
+            pltpu.make_async_copy(acc.at[0], out_ref.at[cursor[1]], sem).wait()
+
+        return carry
+
+    jax.lax.fori_loop(0, block_e, entry, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("num_unique", "num_kept",
+                                             "block_e", "interpret"))
+def lsplm_sparse_scatter_compact(
+    row_ids: jax.Array,        # (E_pad,) int32 sorted ids + sentinel tail
+    sample_sorted: jax.Array,  # (E_pad,) int32 entry -> sample
+    vals_sorted: jax.Array,    # (E_pad,) f32 entry values (0 on sentinels)
+    dz: jax.Array,             # (N, 2m) f32 upstream cotangent
+    *,
+    num_unique: int,
+    num_kept: int,
+    block_e: int = 1024,
+    interpret: bool = False,
+) -> jax.Array:
+    """Segment-sum sorted entries into the compact (U+1, 2m) result.
+
+    The inputs must come from ``ops.pad_plan_entries`` (sentinel-padded to
+    a block multiple). Returns compact rows in plan order with a trailing
+    zero row; densify with ``compact[plan.inv_compact]``.
+    """
+    E_pad = row_ids.shape[0]
+    if E_pad % block_e:
+        raise ValueError(f"E_pad={E_pad} not a multiple of block_e={block_e}")
+    N, m2 = dz.shape
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(E_pad // block_e,),
+        in_specs=[
+            pl.BlockSpec((block_e,), lambda i, *_: (i,)),
+            pl.BlockSpec((N, m2), lambda i, *_: (0, 0)),  # dz whole, VMEM
+        ],
+        out_specs=pl.BlockSpec(memory_space=pltpu.ANY),
+        scratch_shapes=[
+            pltpu.VMEM((1, m2), jnp.float32),
+            pltpu.SMEM((2,), jnp.int32),
+            pltpu.SemaphoreType.DMA(()),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_kernel, block_e=block_e, num_kept=num_kept,
+                          total=E_pad),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((num_unique + 1, m2), jnp.float32),
+        interpret=interpret,
+    )(row_ids, sample_sorted, vals_sorted, dz.astype(jnp.float32))

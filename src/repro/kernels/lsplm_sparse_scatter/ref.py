@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for the plan-driven scatter backward.
+
+The direct transposed scatter-add that both the class-gather jnp path and
+the Pallas run-length kernel must reproduce bit-for-bit up to summation
+order:
+
+    dTheta[r] = sum_{(n,k): ids[n,k]=r} vals[n,k] * dz[n]
+    dvals[n,k] = theta[ids[n,k]] . dz[n]
+
+Conventions match the fused forward package (``lsplm_sparse_fused``):
+ids (N, K) with pad id == D-1, vals 0 on pad slots, theta (D, 2m) with
+the zero pad row last.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def scatter_bwd_ref(
+    ids: jax.Array, vals: jax.Array, theta: jax.Array, dz: jax.Array
+) -> tuple[jax.Array, jax.Array]:
+    """(dvals, dTheta) by direct gather/scatter — the comparison oracle."""
+    m2 = theta.shape[-1]
+    dz = dz.astype(jnp.float32)
+    data = (vals.astype(jnp.float32)[..., None] * dz[:, None, :]).reshape(-1, m2)
+    dtheta = jnp.zeros(theta.shape, jnp.float32).at[ids.reshape(-1)].add(data)
+    rows = jnp.take(theta, ids, axis=0).astype(jnp.float32)
+    dvals = jnp.einsum("nkm,nm->nk", rows, dz)
+    return dvals.astype(vals.dtype), dtheta.astype(theta.dtype)

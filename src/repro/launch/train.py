@@ -41,7 +41,9 @@ from repro.optim import OWLQNPlus
 def train_sparse(args) -> int:
     """Production-format training: padded-COO ids/vals over d columns,
     OWLQN+ on the fused sparse kernel's custom-VJP loss. Dense (B, d)
-    matrices never exist; the backward touches only active Theta rows."""
+    matrices never exist; the backward touches only active Theta rows,
+    scheduled by per-batch transpose plans (built once, host-side — no
+    sort or scatter inside the optimizer step)."""
     from repro.data import auc as auc_fn
     from repro.data.sparse import generate_sparse, sparse_predict
 
@@ -54,9 +56,14 @@ def train_sparse(args) -> int:
     theta0 = jnp.asarray(
         0.01 * np.random.default_rng(args.seed).normal(size=(d, 2 * m)),
         jnp.float32)
+    kern = ("pipelined block-DMA kernel" if jax.default_backend() == "tpu"
+            else "scan-chunked jnp fallback")
     print(f"sparse mode: d={d:,} columns, Theta {theta0.shape} "
-          f"({theta0.size:,} params), backend={jax.default_backend()} "
-          f"(fused kernel {'ON' if jax.default_backend() == 'tpu' else 'chunked-jnp fallback'})")
+          f"({theta0.size:,} params), backend={jax.default_backend()} ({kern})")
+    for side, plan in (("user", train.user_plan), ("ad", train.ad_plan)):
+        print(f"  {side} transpose plan: {plan.num_kept:,} entries, "
+              f"{plan.num_unique:,} unique ids, "
+              f"{len(plan.class_width)} popularity classes")
 
     opt = OWLQNPlus(lambda t: smooth_loss_and_grad(t, train),
                     lam=args.lam, beta=args.beta)

@@ -142,6 +142,191 @@ def test_grad_touches_only_active_rows():
     assert np.abs(g[active[active < theta.shape[0]]]).max() > 0.0
 
 
+# ------------------------------------------------- block-size edge cases
+@pytest.mark.parametrize("mode", ["jnp", "interpret"])
+@pytest.mark.parametrize("N,K,d,m,block_n,block_k", [
+    (17, 5, 128, 3, 64, 8),    # block_n >= N (clamped to one tile)
+    (50, 7, 200, 4, 16, 4),    # N not a block multiple, ragged K chunk
+    (33, 1, 96, 2, 8, 8),      # K = 1 (block_k clamped)
+    (12, 9, 64, 2, 5, 2),      # odd block_n, K not a block_k multiple
+])
+def test_block_edge_cases_forward_and_grad(mode, N, K, d, m, block_n, block_k):
+    ids, vals, tp, theta = _coo(N, K, d, m, 0.2, seed=N + K)
+    z = sparse_gather_matmul(ids, vals, tp, mode=mode, block_n=block_n,
+                             block_k=block_k)
+    np.testing.assert_allclose(np.asarray(z),
+                               np.asarray(sparse_matmul_ref(ids, vals, tp)),
+                               rtol=1e-4, atol=1e-5)
+
+    def s_fused(theta):
+        return jnp.sum(sparse_gather_matmul(
+            ids, vals, pad_theta(theta), mode=mode, block_n=block_n,
+            block_k=block_k) ** 2)
+
+    def s_oracle(theta):
+        return jnp.sum(sparse_matmul_ref(ids, vals, pad_theta(theta)) ** 2)
+
+    np.testing.assert_allclose(np.asarray(jax.grad(s_fused)(theta)),
+                               np.asarray(jax.grad(s_oracle)(theta)),
+                               rtol=2e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("mode", ["jnp", "interpret"])
+def test_duplicate_ids_within_sample(mode):
+    """Tile dedup (hot features fetched once) must not change z or the
+    gradients — duplicates collapse onto one slot with summed values."""
+    rng = np.random.default_rng(13)
+    N, K, d, m = 24, 8, 64, 3
+    ids = rng.integers(0, d, (N, K))
+    ids[:, 1] = ids[:, 0]                      # forced duplicate
+    ids[:, 3] = ids[:, 2]
+    vals = rng.normal(size=(N, K)).astype(np.float32)
+    theta = (rng.normal(size=(d, 2 * m)) * 0.3).astype(np.float32)
+    ids, vals, theta = (jnp.asarray(ids, jnp.int32), jnp.asarray(vals),
+                        jnp.asarray(theta))
+    tp = pad_theta(theta)
+    z = sparse_gather_matmul(ids, vals, tp, mode=mode, block_n=8, block_k=4)
+    np.testing.assert_allclose(np.asarray(z),
+                               np.asarray(sparse_matmul_ref(ids, vals, tp)),
+                               rtol=1e-4, atol=1e-5)
+
+    def s(theta, vals):
+        return jnp.sum(sparse_gather_matmul(
+            ids, vals, pad_theta(theta), mode=mode, block_n=8, block_k=4) ** 2)
+
+    def s_ref(theta, vals):
+        return jnp.sum(sparse_matmul_ref(ids, vals, pad_theta(theta)) ** 2)
+
+    g = jax.grad(s, argnums=(0, 1))(theta, vals)
+    g_ref = jax.grad(s_ref, argnums=(0, 1))(theta, vals)
+    for a, b in zip(g, g_ref):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-4, atol=1e-5)
+
+
+def test_pad_slot_with_nonzero_val_still_contracts_as_zero_row():
+    """Contract robustness: a pad-id slot carrying a (convention-breaking)
+    nonzero value must still contract against the ZERO pad row on the
+    kernel path — the skip-DMA pipeline zeroes the buffer row in place,
+    matching the oracle's actual gather of theta[D-1] == 0."""
+    rng = np.random.default_rng(17)
+    N, K, d, m = 16, 6, 80, 2
+    ids = rng.integers(0, d, (N, K))
+    ids[:, -2:] = d                              # pad ids ...
+    vals = rng.normal(size=(N, K)).astype(np.float32)  # ... nonzero vals
+    theta = (rng.normal(size=(d, 2 * m)) * 0.3).astype(np.float32)
+    ids, vals = jnp.asarray(ids, jnp.int32), jnp.asarray(vals)
+    tp = pad_theta(jnp.asarray(theta))
+    for dedup in (True, False):
+        z = sparse_gather_matmul(ids, vals, tp, mode="interpret", block_n=8,
+                                 block_k=2, dedup=dedup)
+        np.testing.assert_allclose(
+            np.asarray(z), np.asarray(sparse_matmul_ref(ids, vals, tp)),
+            rtol=1e-4, atol=1e-5)
+
+
+# ------------------------------------------------- pad-slot gradients
+@pytest.mark.parametrize("mode", ["jnp", "interpret"])
+@pytest.mark.parametrize("use_plan", [False, True])
+def test_pad_row_cotangent_exactly_zero(mode, use_plan):
+    """Pad-id slots (value 0 by convention) must give the pad Theta row
+    an EXACTLY zero cotangent, plan or no plan."""
+    from repro.data.sparse import build_transpose_plan
+
+    ids, vals, _, theta = _coo(32, 8, 120, 3, pad_frac=0.5, seed=21)
+    d = theta.shape[0]
+    plan = (build_transpose_plan(np.asarray(ids), d + 1, pad_id=d)
+            if use_plan else None)
+
+    def s(tp):
+        return jnp.sum(sparse_gather_matmul(
+            ids, vals, tp, mode=mode, block_n=16, block_k=4, plan=plan) ** 2)
+
+    g = np.asarray(jax.grad(s)(pad_theta(theta)))   # grad w.r.t. PADDED Theta
+    assert (g[d] == 0.0).all()
+    # pad slots' dvals are exactly zero too (theta pad row is zero)
+    dv = np.asarray(jax.grad(
+        lambda v: jnp.sum(sparse_gather_matmul(
+            ids, vals, pad_theta(theta), mode=mode, block_n=16, block_k=4,
+            plan=plan) ** 2))(vals))
+    assert (dv[np.asarray(ids) == d] == 0.0).all()
+
+
+def test_pad_row_stays_zero_through_owlqn_step():
+    """An OWLQN+ step on the sparse loss never moves untouched feature
+    rows off exact zero: their smooth gradient is exactly 0, so the
+    L1 orthant logic keeps them pinned (the property that makes 1e6-
+    column training sparse in practice). The conceptual pad row (id d)
+    is rebuilt as zero by pad_theta every evaluation by construction."""
+    from repro.optim import OWLQNPlus
+
+    b = generate_sparse(num_features=300, num_user_features_range=(200, 300),
+                        sessions=8, seed=23)
+    d, m = b.num_features, 2
+    theta0 = jnp.zeros((d, 2 * m), jnp.float32)
+    active = (set(np.asarray(b.user_ids).ravel().tolist())
+              | set(np.asarray(b.ad_ids).ravel().tolist())) - {d}
+    untouched = np.setdiff1d(np.arange(d), np.asarray(sorted(active)))
+    assert untouched.size > 0
+
+    opt = OWLQNPlus(lambda t: smooth_loss_and_grad(t, b), lam=0.2, beta=0.2)
+    st = opt.init(theta0)
+    for _ in range(2):
+        st, _ = jax.jit(opt.step)(st)
+    theta = np.asarray(st.theta)
+    assert (theta[untouched] == 0.0).all()
+    assert np.abs(theta).max() > 0.0            # the step did move something
+
+
+# ------------------------------------------------- plan/no-plan parity
+@pytest.mark.parametrize("mode", ["jnp", "interpret"])
+def test_plan_and_noplan_backwards_agree(mode):
+    from repro.data.sparse import build_transpose_plan
+
+    ids, vals, _, theta = _coo(48, 9, 500, 4, 0.3, seed=31)
+    d = theta.shape[0]
+    plan = build_transpose_plan(np.asarray(ids), d + 1, pad_id=d)
+
+    def loss(theta, vals, plan):
+        lp1, lp0 = lsplm_sparse_logps(ids, vals, pad_theta(theta), mode=mode,
+                                      block_n=16, plan=plan)
+        return jnp.sum(lp1 - 0.5 * lp0)
+
+    g_plan = jax.grad(loss, argnums=(0, 1))(theta, vals, plan)
+    g_none = jax.grad(loss, argnums=(0, 1))(theta, vals, None)
+    for a, b in zip(g_plan, g_none):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-4, atol=1e-5)
+
+
+def test_generated_batches_carry_plans_and_train_identically():
+    """generate_sparse attaches transpose plans; training with them must
+    match a plan-free batch exactly (same objective trace, same Theta)."""
+    from repro.optim import OWLQNPlus
+
+    b_plan = generate_sparse(num_features=250, sessions=8,
+                             num_user_features_range=(150, 250), seed=41)
+    assert b_plan.user_plan is not None and b_plan.ad_plan is not None
+    b_none = b_plan._replace(user_plan=None, ad_plan=None)
+
+    def run(batch):
+        theta0 = jnp.asarray(
+            0.05 * np.random.default_rng(42).normal(size=(250, 4)), jnp.float32)
+        opt = OWLQNPlus(lambda t: smooth_loss_and_grad(t, batch),
+                        lam=0.3, beta=0.3)
+        st = opt.init(theta0)
+        fs = []
+        for _ in range(2):
+            st, stats = jax.jit(opt.step)(st)
+            fs.append(float(stats.f_new))
+        return np.asarray(st.theta), fs
+
+    t_p, f_p = run(b_plan)
+    t_n, f_n = run(b_none)
+    np.testing.assert_allclose(f_p, f_n, rtol=2e-4)
+    np.testing.assert_allclose(t_p, t_n, rtol=2e-3, atol=2e-5)
+
+
 # ------------------------------------------------- end-to-end training
 def test_sparse_train_step_parity_vs_dense():
     """One smooth_loss_and_grad on a SparseCTRBatch (fused path) must

@@ -1,0 +1,154 @@
+"""Transpose plan + plan-driven scatter backward: plan structure
+invariants, class-gather jnp path and Pallas run-length kernel (interpret)
+vs the direct scatter oracle, pad-entry dropping, and degenerate shapes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.lsplm_sparse_scatter.ops import (
+    build_transpose_plan,
+    dvals_planned,
+    pad_plan_entries,
+    scatter_add_planned,
+)
+from repro.kernels.lsplm_sparse_scatter.ref import scatter_bwd_ref
+
+
+def _batch(N, K, d, m, pad_frac=0.0, zipf=False, seed=0):
+    rng = np.random.default_rng(seed)
+    if zipf:
+        ids = (d * (rng.random((N, K)) ** 6)).astype(np.int64)
+    else:
+        ids = rng.integers(0, d, (N, K))
+    vals = rng.normal(size=(N, K)).astype(np.float32)
+    n_pad = int(round(pad_frac * K))
+    if n_pad:
+        ids[:, K - n_pad:] = d
+        vals[:, K - n_pad:] = 0.0
+    theta = np.concatenate(
+        [(rng.normal(size=(d, 2 * m)) * 0.3).astype(np.float32),
+         np.zeros((1, 2 * m), np.float32)], axis=0)
+    dz = rng.normal(size=(N, 2 * m)).astype(np.float32)
+    return ids, vals, theta, dz
+
+
+# ---------------------------------------------------------- plan structure
+def test_plan_is_a_permutation_sorted_by_id():
+    ids, _, _, _ = _batch(32, 6, 100, 3, seed=1)
+    plan = build_transpose_plan(ids, 101)
+    order = np.asarray(plan.order)
+    assert sorted(order.tolist()) == list(range(ids.size))  # a permutation
+    srt = np.asarray(plan.row_ids)
+    assert (np.diff(srt) >= 0).all()                        # sorted by id
+    np.testing.assert_array_equal(srt, ids.reshape(-1)[order])
+    np.testing.assert_array_equal(np.asarray(plan.sample_sorted), order // 6)
+    np.testing.assert_array_equal(np.asarray(plan.slot_sorted), order % 6)
+    # rank is the inverse permutation
+    rank = np.asarray(plan.rank)
+    np.testing.assert_array_equal(rank[order], np.arange(ids.size))
+
+
+def test_plan_classes_partition_entries_with_bounded_padding():
+    ids, _, _, _ = _batch(64, 8, 50, 2, zipf=True, seed=2)  # heavy duplicates
+    plan = build_transpose_plan(ids, 51)
+    covered = []
+    padded_slots = 0
+    for src, mask, width in zip(plan.class_src, plan.class_mask,
+                                plan.class_width):
+        mask = np.asarray(mask).astype(bool)
+        covered.append(np.asarray(src)[mask])
+        padded_slots += mask.size
+        assert mask.size % width == 0
+    covered = np.concatenate(covered)
+    # every entry appears exactly once across all classes
+    assert sorted(covered.tolist()) == list(range(ids.size))
+    # power-of-two class padding never doubles the work
+    assert padded_slots <= 2 * ids.size + len(plan.class_width)
+
+
+def test_plan_drops_pad_entries():
+    ids, _, _, _ = _batch(16, 8, 40, 2, pad_frac=0.5, seed=3)
+    plan = build_transpose_plan(ids, 41, pad_id=40)
+    assert plan.num_kept == (np.asarray(ids) != 40).sum()
+    assert (np.asarray(plan.row_ids) != 40).all()
+    # dropped entries' rank points at the appended zero slot
+    rank = np.asarray(plan.rank).reshape(16, 8)
+    assert (rank[ids == 40] == plan.num_kept).all()
+
+
+def test_plan_validate_rejects_mismatched_shapes():
+    ids, _, _, _ = _batch(8, 4, 30, 2, seed=4)
+    plan = build_transpose_plan(ids, 31)
+    with pytest.raises(ValueError):
+        plan.validate((8, 5), 31)
+    with pytest.raises(ValueError):
+        plan.validate((8, 4), 32)
+    with pytest.raises(ValueError):
+        build_transpose_plan(ids, 20)  # ids out of range
+
+
+# ------------------------------------------------- scatter vs the oracle
+@pytest.mark.parametrize("mode", ["jnp", "interpret"])
+@pytest.mark.parametrize("N,K,d,m,pad_frac,zipf", [
+    (40, 6, 200, 4, 0.25, False),
+    (64, 8, 256, 4, 0.0, True),    # hot-id duplicates across samples
+    (33, 1, 100, 2, 0.0, False),   # K=1
+    (8, 4, 64, 3, 0.5, False),     # heavy padding
+    (16, 5, 50, 2, 1.0, False),    # ALL pad (empty plan)
+])
+def test_planned_scatter_matches_oracle(mode, N, K, d, m, pad_frac, zipf):
+    ids, vals, theta, dz = _batch(N, K, d, m, pad_frac, zipf, seed=N + K)
+    idsj = jnp.asarray(ids, jnp.int32)
+    valsj, thetaj, dzj = map(jnp.asarray, (vals, theta, dz))
+    dv_ref, dt_ref = scatter_bwd_ref(idsj, valsj, thetaj, dzj)
+    for pad_id in (None, d):
+        plan = build_transpose_plan(ids, d + 1, pad_id=pad_id)
+        dt = scatter_add_planned(plan, valsj, dzj, mode=mode, block_e=32)
+        dv = dvals_planned(plan, thetaj, dzj, (N, K))
+        np.testing.assert_allclose(np.asarray(dt), np.asarray(dt_ref),
+                                   rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(dv), np.asarray(dv_ref),
+                                   rtol=1e-4, atol=1e-5)
+
+
+def test_planned_scatter_pad_row_cotangent_is_exactly_zero():
+    """Pad-id entries carry value 0, so the pad row's gradient must be
+    EXACTLY zero — with and without plan-side pad dropping."""
+    ids, vals, theta, dz = _batch(24, 8, 60, 3, pad_frac=0.375, seed=7)
+    valsj, dzj = jnp.asarray(vals), jnp.asarray(dz)
+    for pad_id in (None, 60):
+        plan = build_transpose_plan(ids, 61, pad_id=pad_id)
+        dt = np.asarray(scatter_add_planned(plan, valsj, dzj, mode="jnp"))
+        assert (dt[60] == 0.0).all()
+
+
+def test_planned_scatter_under_jit_with_plan_argument():
+    ids, vals, theta, dz = _batch(20, 5, 80, 2, seed=8)
+    plan = build_transpose_plan(ids, 81)
+
+    @jax.jit
+    def f(plan, vals, dz):
+        return scatter_add_planned(plan, vals, dz, mode="jnp")
+
+    dt = f(plan, jnp.asarray(vals), jnp.asarray(dz))
+    _, dt_ref = scatter_bwd_ref(jnp.asarray(ids, jnp.int32),
+                                jnp.asarray(vals), jnp.asarray(theta),
+                                jnp.asarray(dz))
+    np.testing.assert_allclose(np.asarray(dt), np.asarray(dt_ref),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_pad_plan_entries_appends_sentinels():
+    ids, vals, _, _ = _batch(8, 4, 30, 2, seed=9)
+    plan = build_transpose_plan(ids, 31)
+    row_ids, sample, vals_sorted = pad_plan_entries(
+        plan, jnp.asarray(vals), block_e=16)
+    assert row_ids.shape[0] % 16 == 0
+    assert row_ids.shape[0] > plan.num_kept          # >= 1 sentinel
+    tail = np.asarray(row_ids)[plan.num_kept:]
+    assert (tail == 31).all()                        # sentinel id == num_rows
+    assert (np.asarray(vals_sorted)[plan.num_kept:] == 0).all()
+    np.testing.assert_array_equal(
+        np.asarray(vals_sorted)[:plan.num_kept],
+        vals.reshape(-1)[np.asarray(plan.order)])
