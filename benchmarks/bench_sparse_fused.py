@@ -28,6 +28,14 @@ uniform production shapes when REPRO_BENCH_ENFORCE is set (the perf
 trajectory gate, also recorded in BENCH_sparse_fused.json via
 ``benchmarks/run.py --json``).
 
+Sharded rows: with >= 8 devices (``REPRO_DEVICES=8`` forces host
+devices; ``benchmarks/run.py`` honors it), the sweep adds
+``sharded_fwd`` / ``sharded_fwd_bwd`` rows — the ``repro.shard``
+(data x model) mesh step on a session batch vs the same loss/grad
+single-device — with a parity assert. On forced HOST devices these
+numbers measure orchestration overhead, not speedup (8 "devices" share
+the CPU); the rows exist to track the trajectory and gate correctness.
+
 CSV rows: sparse_fused/<path>/<tag>,us,<speedup vs baseline>.
 
 Smoke mode (CI): tiny shapes; the interpret-mode Pallas kernels are
@@ -172,6 +180,73 @@ def _bench_backward(ids_np, ids, vals, tp, tag, rows, results):
     return speedup
 
 
+SHARD_MESHES = [(2, 4), (4, 2)]
+# (sessions, d, m) for the sharded rows; ads/session, K come from defaults
+SHARD_SHAPES = [(256, 100_000, 4)]
+SHARD_SMOKE_SHAPES = [(64, 4_096, 4)]
+
+
+def _bench_sharded(rows, results, smoke):
+    """Sharded step vs single-device on a session batch (needs devices)."""
+    need = max(a * b for a, b in SHARD_MESHES)
+    if jax.device_count() < need:
+        rows.append((f"sparse_fused/sharded/skipped_devices_"
+                     f"{jax.device_count()}_of_{need}", 0.0, "set_REPRO_DEVICES"))
+        return
+    from repro.data.sparse import (
+        generate_sparse,
+        sparse_loss_and_grad,
+        sparse_nll,
+    )
+    from repro.dist import shard_sparse_batch
+    from repro.launch.mesh import make_debug_mesh
+    from repro.shard import (
+        make_partition,
+        route_batch,
+        sharded_sparse_loss_and_grad,
+        sharded_sparse_nll,
+    )
+
+    for (G, d, m) in (SHARD_SMOKE_SHAPES if smoke else SHARD_SHAPES):
+        batch = generate_sparse(
+            num_features=d, num_user_features_range=(int(0.6 * d), d),
+            sessions=G, seed=7)
+        theta = jnp.asarray(np.random.default_rng(0).normal(
+            size=(d, 2 * m)).astype(np.float32) * 0.05)
+        lg_single = jax.jit(lambda t: sparse_loss_and_grad(t, batch))
+        nll_single = jax.jit(lambda t: sparse_nll(t, batch))
+        l_ref, g_ref = lg_single(theta)
+        t_fwd_1 = time_fn(nll_single, theta)
+        t_bwd_1 = time_fn(lg_single, theta)
+        for (dd, dm) in SHARD_MESHES:
+            tag = f"G{G}_d{d}_m{m}_mesh{dd}x{dm}"
+            mesh = make_debug_mesh(data=dd, model=dm)
+            part = make_partition(d, dm)
+            sb = shard_sparse_batch(mesh, route_batch(batch, part,
+                                                      data_shards=dd))
+            theta_p = jax.device_put(part.pad_rows(theta))
+            fwd = jax.jit(lambda t: sharded_sparse_nll(t, sb, mesh))
+            bwd = jax.jit(lambda t: sharded_sparse_loss_and_grad(t, sb, mesh))
+            l_sh, g_sh = bwd(theta_p)
+            np.testing.assert_allclose(float(l_sh), float(l_ref), rtol=2e-5)
+            scale = max(1.0, float(jnp.abs(g_ref).max()))
+            np.testing.assert_allclose(
+                np.asarray(part.unpad_rows(jax.device_get(g_sh))) / scale,
+                np.asarray(g_ref) / scale, atol=3e-5)
+            t_fwd = time_fn(fwd, theta_p)
+            t_bwd = time_fn(bwd, theta_p)
+            rows.append((f"sparse_fused/sharded_fwd/{tag}", t_fwd,
+                         f"{t_fwd_1 / t_fwd:.2f}x_vs_single"))
+            rows.append((f"sparse_fused/sharded_fwd_bwd/{tag}", t_bwd,
+                         f"{t_bwd_1 / t_bwd:.2f}x_vs_single"))
+            results[tag] = {
+                "G": G, "d": d, "m": m, "mesh_data": dd, "mesh_model": dm,
+                "sharded_fwd_us": t_fwd, "sharded_fwd_bwd_us": t_bwd,
+                "single_fwd_us": t_fwd_1, "single_fwd_bwd_us": t_bwd_1,
+                "parity": "ok",
+            }
+
+
 def run(smoke: bool | None = None, collect: dict | None = None):
     if smoke is None:
         smoke = os.environ.get("REPRO_BENCH_SMOKE", "") == "1"
@@ -242,6 +317,8 @@ def run(smoke: bool | None = None, collect: dict | None = None):
                 f"plan-based backward geomean only {geomean:.2f}x vs the "
                 f"chunked scatter (target {BWD_TARGET_SPEEDUP}x); "
                 f"per-shape: {[round(u, 2) for u in ups]}")
+
+    _bench_sharded(rows, results, smoke)
 
     if smoke:
         # exercise the actual Pallas kernels (interpret mode) for parity

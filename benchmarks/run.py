@@ -20,6 +20,16 @@ runs ``--only sparse_fused --smoke --json`` on CPU.
 """
 from __future__ import annotations
 
+import os
+
+if "REPRO_DEVICES" in os.environ:  # must precede any jax import: the
+    # sharded sparse rows need forced host devices (same knob as
+    # repro.launch.train and the CI shard job)
+    os.environ["XLA_FLAGS"] = " ".join(filter(None, [
+        os.environ.get("XLA_FLAGS"),
+        f"--xla_force_host_platform_device_count={os.environ['REPRO_DEVICES']}",
+    ]))
+
 import argparse
 import inspect
 import json

@@ -1,0 +1,101 @@
+"""Distributed sparse LS-PLM: the paper's worker/server split, end to end.
+
+    PYTHONPATH=src python examples/train_sparse_sharded.py
+
+Simulates the paper's §4 cluster on 8 forced host devices as a
+(data=2, model=4) mesh and trains the padded-COO sparse path on it:
+
+  * workers ('data')  — each data shard holds 1/2 of the sessions;
+  * servers ('model') — each model shard owns a contiguous id RANGE of
+    Theta rows (``repro.shard.make_partition``); ids are bucketed per
+    shard on the host (``route_batch``), so every gather and every
+    plan-driven scatter in the backward is shard-local, and the only
+    tensor crossing shards is one psum of the (B, 2m) region-logit
+    partials per step.
+
+The per-batch transpose plans are NOT rebuilt per shard: the full
+batch's id sort is sliced at the id-range boundaries
+(``repro.shard.plan_slicing`` — sorted-by-id layouts split into
+contiguous slices), restacked, and handed to ``shard_map`` as sharded
+operands. OWLQN+ runs through the same ``repro.dist`` machinery as the
+dense path: Theta rows are the L2,1 groups, so the orthant algebra never
+crosses a shard boundary.
+
+On real TPU meshes replace ``make_debug_mesh`` with
+``launch.mesh.make_production_mesh``; everything else is identical.
+"""
+import os
+
+os.environ.setdefault(
+    "XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.sparse import generate_sparse, sparse_predict
+from repro.dist import make_distributed_step, shard_sparse_batch, shard_state
+from repro.eval import report
+from repro.launch.mesh import make_debug_mesh
+from repro.optim import OWLQNPlus
+from repro.shard import make_partition, make_sharded_sparse_loss, route_batch
+
+D = 200_000
+M = 4
+MESH_DATA, MESH_MODEL = 2, 4
+
+
+def main():
+    user_range = (int(0.6 * D), D)
+    train = generate_sparse(num_features=D, num_user_features_range=user_range,
+                            sessions=512, seed=1)
+    test = generate_sparse(num_features=D, num_user_features_range=user_range,
+                           sessions=64, seed=2)
+    theta0 = jnp.asarray(
+        0.01 * np.random.default_rng(0).normal(size=(D, 2 * M)), jnp.float32)
+
+    mesh = make_debug_mesh(data=MESH_DATA, model=MESH_MODEL)
+    part = make_partition(D, MESH_MODEL)
+    sbatch = shard_sparse_batch(
+        mesh, route_batch(train, part, data_shards=MESH_DATA))
+    print(f"mesh: data={MESH_DATA} x model={MESH_MODEL} on "
+          f"{jax.device_count()} devices; Theta ({D:,} x {2 * M}) id-range "
+          f"sharded at {part.rows_per_shard:,} rows/shard")
+    print(f"routed: user ids (S,G,K)={tuple(sbatch.user_ids.shape)}, "
+          f"ad ids={tuple(sbatch.ad_ids.shape)}; plan cells "
+          f"(data,model)={tuple(sbatch.ad_plan.row_ids.shape[:2])}, "
+          f"{sbatch.ad_plan.num_kept:,} padded entries/cell")
+
+    opt = OWLQNPlus(make_sharded_sparse_loss(sbatch, mesh),
+                    lam=0.05, beta=0.05)
+    state = shard_state(opt.init(part.pad_rows(theta0)), mesh)
+    step = make_distributed_step(opt, mesh)
+
+    t0 = time.perf_counter()
+    iters = 30
+    for k in range(iters):
+        state, stats = step(state)
+        if k % 5 == 0 or k == iters - 1:
+            print(f"iter {k:3d}  f={float(stats.f_new):12.2f} "
+                  f"alpha={float(stats.alpha):.3g} nnz={int(stats.nnz):8d}")
+    dt = time.perf_counter() - t0
+
+    shard_shapes = {s.data.shape for s in state.theta.addressable_shards}
+    assert shard_shapes == {(D // MESH_MODEL, 2 * M)}, shard_shapes
+    theta = part.unpad_rows(jnp.asarray(jax.device_get(state.theta)))
+    p = np.asarray(sparse_predict(theta, test))
+    r = report(np.asarray(test.y), p)
+    print(f"trained {iters} sharded iters in {dt:.1f}s — theta stayed "
+          f"row-sharded over 'model' the whole run: {shard_shapes}")
+    print(f"test: AUC={r['auc']:.4f} NE={r['normalized_entropy']:.4f} "
+          f"calibration={r['calibration']:.3f}")
+    print("note: on forced host devices the mesh demonstrates the "
+          "DISTRIBUTION PLAN, not speed — all 8 'devices' share this CPU; "
+          "parity with the single-device path is proven in "
+          "tests/test_shard_step.py")
+
+
+if __name__ == "__main__":
+    main()

@@ -32,6 +32,13 @@ Batches without plans still work (scan-chunked scatter fallback).
 
 The common-feature trick composes: user ids are stored once per session
 (G, Ku) and gathered per sample, ad ids per sample (B, Ka).
+
+Distribution composes too: ``build_batch_plans(shards=...)`` /
+``generate_sparse(shards=...)`` route the batch for a (data x model)
+mesh — ids bucketed per id-range Theta shard, plans sliced per shard
+from the one sort already paid — returning a
+``repro.shard.ShardedSparseBatch`` for the ``shard_map`` training step
+(``repro.shard.step``).
 """
 from __future__ import annotations
 
@@ -68,17 +75,40 @@ class SparseCTRBatch(NamedTuple):
     ad_plan: TransposePlan | None = None
 
 
-def build_batch_plans(batch: "SparseCTRBatch") -> "SparseCTRBatch":
+def _route(batch: "SparseCTRBatch", shards, data_shards: int):
+    """Coerce ``shards`` (count or Partition) and route the batch for a
+    (data x model) mesh — the one place the shards= paths share."""
+    # local import: repro.shard builds on this module
+    from repro.shard.partition import Partition, make_partition, route_batch
+
+    part = shards if isinstance(shards, Partition) else make_partition(
+        batch.num_features, int(shards))
+    return route_batch(batch, part, data_shards=data_shards)
+
+
+def build_batch_plans(batch: "SparseCTRBatch", *, shards=None,
+                      data_shards: int = 1):
     """Attach per-batch transpose plans (one argsort per id tensor, on
     the host, once) so every optimizer step's backward is sort-free.
-    Plans address the PADDED Theta (d + 1 rows, pad id == d)."""
+    Plans address the PADDED Theta (d + 1 rows, pad id == d).
+
+    With ``shards`` (a shard count or a ``repro.shard.Partition``) the
+    planned batch is additionally ROUTED for a (data x model) mesh and a
+    ``repro.shard.ShardedSparseBatch`` is returned instead: ids bucketed
+    per id-range shard, the freshly built plans sliced per (data block,
+    id range) — the argsort is NOT redone per shard — and stacked for
+    ``shard_map`` (see ``repro.shard``).
+    """
     rows = batch.num_features + 1
-    return batch._replace(
+    batch = batch._replace(
         user_plan=build_transpose_plan(
             np.asarray(batch.user_ids), rows, pad_id=batch.num_features),
         ad_plan=build_transpose_plan(
             np.asarray(batch.ad_ids), rows, pad_id=batch.num_features),
     )
+    if shards is None:
+        return batch
+    return _route(batch, shards, data_shards)
 
 
 def sparse_matmul(ids: jax.Array, vals: jax.Array, theta: jax.Array,
@@ -136,10 +166,17 @@ def generate_sparse(
     active_ad: int = 12,
     seed: int = 0,
     with_plans: bool = True,
+    shards=None,
+    data_shards: int = 1,
 ) -> SparseCTRBatch:
     """Million-column sparse CTR batch with session structure. Ground
     truth: piecewise-linear over a planted low-dim projection of the
-    active ids (so LS-PLM has signal without densifying anything)."""
+    active ids (so LS-PLM has signal without densifying anything).
+
+    ``shards`` (a model-shard count or ``repro.shard.Partition``) routes
+    the batch for a (data x model) mesh and returns a
+    ``repro.shard.ShardedSparseBatch`` — see ``build_batch_plans``.
+    """
     rng = np.random.default_rng(seed)
     d = num_features
     G, A = sessions, ads_per_session
@@ -191,7 +228,12 @@ def generate_sparse(
         y=jnp.asarray(y),
         num_features=d,
     )
-    return build_batch_plans(batch) if with_plans else batch
+    if with_plans:
+        return build_batch_plans(batch, shards=shards,
+                                 data_shards=data_shards)
+    if shards is not None:  # routed, scan-chunked fallback backward
+        return _route(batch, shards, data_shards)
+    return batch
 
 
 def to_dense(batch: SparseCTRBatch) -> np.ndarray:

@@ -13,9 +13,15 @@ GSPMD (data, model) mesh.
 Multi-pod meshes add a leading 'pod' axis to the data split
 (``launch.mesh.data_axes``).
 
-Sparse padded-COO batches currently train single-device (the fused
-gather kernel needs whole Theta rows per id); sharding Theta rows over
-'model' with id-range routing is the recorded next step — see ROADMAP.
+Sparse padded-COO batches shard the same way through the
+``repro.shard`` subsystem: Theta rows over 'model' with id-range
+routing (each server shard owns a contiguous id range; ids are bucketed
+per shard by ``shard.route_batch``, gathers and the plan-driven scatter
+backward run shard-local, z partials psum once). ``sparse_batch_specs``
+/ ``shard_sparse_batch`` below are the sparse analogues of the dense
+spec helpers; the step itself lives in ``repro.shard.step`` and
+composes with ``make_distributed_step`` unchanged — the padded
+row-sharded Theta is an ordinary ``P('model', None)`` array.
 """
 from __future__ import annotations
 
@@ -78,6 +84,33 @@ def shard_batch(mesh, batch, *, common_feature: bool = False):
     put = lambda x, s: None if x is None else jax.device_put(
         x, NamedSharding(mesh, s))
     return type(batch)(*(put(x, s) for x, s in zip(batch, specs)))
+
+
+def sparse_batch_specs(mesh, sbatch):
+    """PartitionSpec tree for a routed ``shard.ShardedSparseBatch``:
+    routed id/val tensors (model, batch, K) split over ('model', data),
+    per-sample rows over the data axes, stacked plan leaves over their
+    leading (data, model) axes, static metadata untouched (None)."""
+    row = _row_axes(mesh)
+    coo = P("model", row, None)
+    plan = lambda p: None if p is None else jax.tree.map(
+        lambda _: P(row, "model"), p)
+    return type(sbatch)(
+        user_ids=coo, user_vals=coo, ad_ids=coo, ad_vals=coo,
+        session_id=P(row), y=P(row),
+        num_features=None, rows_per_shard=None, data_shards=None,
+        bounds=None,
+        user_plan=plan(sbatch.user_plan), ad_plan=plan(sbatch.ad_plan))
+
+
+def shard_sparse_batch(mesh, sbatch):
+    """device_put a routed sparse batch onto the mesh per
+    ``sparse_batch_specs`` (static int/tuple metadata passes through)."""
+    specs = sparse_batch_specs(mesh, sbatch)
+    put = lambda x, s: x if s is None else jax.tree.map(
+        lambda leaf, sp: jax.device_put(leaf, NamedSharding(mesh, sp)),
+        x, s, is_leaf=_is_spec)
+    return type(sbatch)(*(put(x, s) for x, s in zip(sbatch, specs)))
 
 
 def shard_state(state: OWLQNState, mesh) -> OWLQNState:

@@ -116,44 +116,38 @@ class TransposePlan:
                 f"{theta_rows}")
 
 
-def build_transpose_plan(
-    ids: Any,
-    num_rows: int,
+def assemble_plan_from_sorted(
+    srt: np.ndarray,
+    order: np.ndarray,
     *,
-    pad_id: int | None = None,
+    num_rows: int,
+    num_entries: int,
+    num_cols: int,
 ) -> TransposePlan:
-    """Build the per-batch transpose plan on the host (numpy, no jit).
+    """Assemble a :class:`TransposePlan` from already-sorted entries.
+
+    The data-dependent SORT is the only part of plan construction that is
+    expensive; everything after it (popularity classes, inverse maps,
+    rank) is determined by the sorted layout alone. Factoring it out lets
+    ``repro.shard.plan_slicing`` slice a full-batch plan at id-range /
+    sample-range boundaries and rebuild shard-local plans that are
+    bit-identical to ``build_transpose_plan`` on the shard-local ids —
+    WITHOUT re-sorting them.
 
     Args:
-      ids: (N, K) int column ids of the padded-COO batch.
-      num_rows: D, the number of rows of the PADDED Theta the batch will
-        be contracted against (``d + 1`` with the zero pad row appended).
-      pad_id: if given, entries with this id are dropped from the plan —
-        their values are 0 by the padded-COO convention, so they
-        contribute nothing and hot pad slots stop costing segment work.
-        The pad row's cotangent is exactly 0 either way.
-
-    Cost: one argsort + unique over N*K int32 — tens of ms at production
-    batch sizes, paid once per batch (not per optimizer step).
+      srt: (E',) kept column ids sorted ascending (stable w.r.t. flat
+        entry order within equal ids).
+      order: (E',) sorted position -> flat entry index in the (N, K)
+        grid the plan addresses (``num_entries == N * num_cols``).
+      num_rows: D, rows of the padded Theta the plan addresses.
+      num_entries: N * K of the addressed ids grid.
+      num_cols: K of the addressed ids grid (recovers n = order // K).
     """
-    ids = np.asarray(ids)
-    if ids.ndim != 2:
-        raise ValueError(f"ids must be (N, K), got {ids.shape}")
-    N, K = ids.shape
-    E = N * K
-    flat = ids.reshape(-1).astype(np.int64)
-    if flat.size and (flat.min() < 0 or flat.max() >= num_rows):
-        raise ValueError(
-            f"ids out of range [0, {num_rows}): [{flat.min()}, {flat.max()}]")
-
-    keep_flat = np.arange(E, dtype=np.int64)
-    if pad_id is not None:
-        keep_flat = keep_flat[flat != pad_id]
-    kept_ids = flat[keep_flat]
-    order_kept = np.argsort(kept_ids, kind="stable")
-    order = keep_flat[order_kept]            # sorted pos -> original entry
-    srt = kept_ids[order_kept]               # sorted column ids
+    srt = np.asarray(srt, np.int64)
+    order = np.asarray(order, np.int64)
     E_kept = int(srt.size)
+    K = int(num_cols)
+    E = int(num_entries)
 
     uniq, counts = np.unique(srt, return_counts=True)
     U = int(uniq.size)
@@ -207,3 +201,45 @@ def build_transpose_plan(
         inv_sorted=jnp.asarray(inv_sorted.astype(np.int32)),
         num_rows=int(num_rows), num_entries=E, num_kept=E_kept,
         num_unique=U)
+
+
+def build_transpose_plan(
+    ids: Any,
+    num_rows: int,
+    *,
+    pad_id: int | None = None,
+) -> TransposePlan:
+    """Build the per-batch transpose plan on the host (numpy, no jit).
+
+    Args:
+      ids: (N, K) int column ids of the padded-COO batch.
+      num_rows: D, the number of rows of the PADDED Theta the batch will
+        be contracted against (``d + 1`` with the zero pad row appended).
+      pad_id: if given, entries with this id are dropped from the plan —
+        their values are 0 by the padded-COO convention, so they
+        contribute nothing and hot pad slots stop costing segment work.
+        The pad row's cotangent is exactly 0 either way.
+
+    Cost: one argsort + unique over N*K int32 — tens of ms at production
+    batch sizes, paid once per batch (not per optimizer step).
+    """
+    ids = np.asarray(ids)
+    if ids.ndim != 2:
+        raise ValueError(f"ids must be (N, K), got {ids.shape}")
+    N, K = ids.shape
+    E = N * K
+    flat = ids.reshape(-1).astype(np.int64)
+    if flat.size and (flat.min() < 0 or flat.max() >= num_rows):
+        raise ValueError(
+            f"ids out of range [0, {num_rows}): [{flat.min()}, {flat.max()}]")
+
+    keep_flat = np.arange(E, dtype=np.int64)
+    if pad_id is not None:
+        keep_flat = keep_flat[flat != pad_id]
+    kept_ids = flat[keep_flat]
+    order_kept = np.argsort(kept_ids, kind="stable")
+    order = keep_flat[order_kept]            # sorted pos -> original entry
+    srt = kept_ids[order_kept]               # sorted column ids
+
+    return assemble_plan_from_sorted(
+        srt, order, num_rows=num_rows, num_entries=E, num_cols=K)

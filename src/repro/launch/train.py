@@ -14,6 +14,13 @@ Sparse production mode (padded-COO ids over --sparse-features columns,
 running on the fused sparse kernel — Pallas on TPU, chunked jnp on CPU):
   PYTHONPATH=src python -m repro.launch.train --sparse \
       --sparse-features 1000000 --sessions 1024 --regions 4 --iters 30
+
+Distributed sparse mode (the paper's worker/server split on the sparse
+path: samples over 'data', Theta rows over 'model' with id-range
+routing via repro.shard):
+  PYTHONPATH=src REPRO_DEVICES=8 python -m repro.launch.train --sparse \
+      --sessions 512 --sparse-features 100000 --regions 4 \
+      --mesh-data 2 --mesh-model 4 --iters 30
 """
 import os
 if "REPRO_DEVICES" in os.environ:  # must precede jax import
@@ -43,16 +50,27 @@ def train_sparse(args) -> int:
     OWLQN+ on the fused sparse kernel's custom-VJP loss. Dense (B, d)
     matrices never exist; the backward touches only active Theta rows,
     scheduled by per-batch transpose plans (built once, host-side — no
-    sort or scatter inside the optimizer step)."""
+    sort or scatter inside the optimizer step).
+
+    With --mesh-data/--mesh-model the job runs the paper's worker/server
+    split end to end (repro.shard): samples over 'data', Theta rows over
+    'model' by id range, plan slices per shard, one z psum per step."""
     from repro.data import auc as auc_fn
     from repro.data.sparse import generate_sparse, sparse_predict
+
+    distributed = args.mesh_data > 0 and args.mesh_model > 0
+    if (args.mesh_data > 0) != (args.mesh_model > 0):
+        raise SystemExit(
+            "--mesh-data and --mesh-model must be set together (sparse "
+            "mode shards samples x Theta rows as one (data, model) mesh)")
 
     d, m = args.sparse_features, args.regions
     user_range = (max(1, int(0.6 * d)), d)
     train = generate_sparse(num_features=d, num_user_features_range=user_range,
-                            sessions=args.sessions, seed=1)
+                            sessions=args.sessions, seed=args.seed + 1)
     test = generate_sparse(num_features=d, num_user_features_range=user_range,
-                           sessions=max(args.sessions // 5, 32), seed=2)
+                           sessions=max(args.sessions // 5, 32),
+                           seed=args.seed + 2)
     theta0 = jnp.asarray(
         0.01 * np.random.default_rng(args.seed).normal(size=(d, 2 * m)),
         jnp.float32)
@@ -65,22 +83,56 @@ def train_sparse(args) -> int:
               f"{plan.num_unique:,} unique ids, "
               f"{len(plan.class_width)} popularity classes")
 
-    opt = OWLQNPlus(lambda t: smooth_loss_and_grad(t, train),
-                    lam=args.lam, beta=args.beta)
-    state = opt.init(theta0)
-    step = jax.jit(opt.step)
+    part = None
+    if distributed:
+        from repro.dist import shard_sparse_batch
+        from repro.shard import (
+            make_partition,
+            make_sharded_sparse_loss,
+            route_batch,
+        )
+
+        assert jax.device_count() >= args.mesh_data * args.mesh_model, (
+            f"need {args.mesh_data * args.mesh_model} devices, "
+            f"have {jax.device_count()} (set REPRO_DEVICES)")
+        if args.sessions % args.mesh_data:
+            raise SystemExit(f"--sessions {args.sessions} must divide by "
+                             f"--mesh-data {args.mesh_data}")
+        mesh = make_debug_mesh(data=args.mesh_data, model=args.mesh_model)
+        part = make_partition(d, args.mesh_model)
+        sbatch = shard_sparse_batch(
+            mesh, route_batch(train, part, data_shards=args.mesh_data))
+        opt = OWLQNPlus(make_sharded_sparse_loss(sbatch, mesh),
+                        lam=args.lam, beta=args.beta)
+        state = shard_state(opt.init(part.pad_rows(theta0)), mesh)
+        step = make_distributed_step(opt, mesh)
+        print(f"mesh: data={args.mesh_data} x model={args.mesh_model} "
+              f"(PS mapping: workers x servers); Theta rows id-range "
+              f"sharded, {part.rows_per_shard:,} rows/shard, routed "
+              f"K user={sbatch.user_ids.shape[-1]} "
+              f"ad={sbatch.ad_ids.shape[-1]}")
+    else:
+        opt = OWLQNPlus(lambda t: smooth_loss_and_grad(t, train),
+                        lam=args.lam, beta=args.beta)
+        state = opt.init(theta0)
+        step = jax.jit(opt.step)
+
     for k in range(args.iters):
         t0 = time.perf_counter()
         state, stats = step(state)
         dt = time.perf_counter() - t0
         if k % 5 == 0 or k == args.iters - 1:
-            p = np.asarray(sparse_predict(state.theta, test))
+            theta_eval = state.theta if part is None else part.unpad_rows(
+                jnp.asarray(jax.device_get(state.theta)))
+            p = np.asarray(sparse_predict(theta_eval, test))
             a = auc_fn(np.asarray(test.y), p)
             print(f"iter {k:3d}  f={float(stats.f_new):12.2f} "
                   f"alpha={float(stats.alpha):.3g} nnz={int(stats.nnz):8d} "
                   f"test_auc={a:.4f}  ({dt * 1e3:.0f} ms/iter)")
     if args.ckpt:
-        checkpoint.save(args.ckpt, {"theta": state.theta})
+        theta = state.theta if part is None else part.unpad_rows(
+            jnp.asarray(jax.device_get(state.theta)))
+        checkpoint.save(args.ckpt, {"theta": theta})
         print(f"checkpoint -> {args.ckpt}")
     return 0
 

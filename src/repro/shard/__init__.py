@@ -1,0 +1,26 @@
+"""Sharded sparse subsystem: id-range routed Theta shards (§4, Fig. 5).
+
+``partition``     id-range partitioner + host-side batch routing
+``plan_slicing``  TransposePlan slicing at id-range / sample boundaries
+``step``          shard_map sparse loss/grad over a (data, model) mesh
+"""
+from repro.shard.partition import (  # noqa: F401
+    Partition,
+    ShardedSparseBatch,
+    balanced_partition,
+    make_partition,
+    route_batch,
+    route_ids,
+    shard_slot_width,
+)
+from repro.shard.plan_slicing import (  # noqa: F401
+    restrict_plan,
+    shard_plan_grid,
+    slice_plan,
+    stack_plans,
+)
+from repro.shard.step import (  # noqa: F401
+    make_sharded_sparse_loss,
+    sharded_sparse_loss_and_grad,
+    sharded_sparse_nll,
+)

@@ -1,0 +1,306 @@
+"""Slice a full-batch :class:`TransposePlan` for a (data x model) mesh.
+
+The plan's layout is sorted by column id, so an id-range partition cuts
+it into CONTIGUOUS slices — two ``searchsorted`` calls find shard s's
+entries, and the expensive argsort is never repeated:
+
+  * ``slice_plan``    — model axis: per-id-range shard-local plans with
+    re-based ids (global minus range start) and re-bucketed popularity
+    classes. Bit-identical to ``build_transpose_plan`` on the routed
+    shard-local ids (tests/test_shard_plan.py proves it), because both
+    feed the same ``assemble_plan_from_sorted`` and the slice inherits
+    the full plan's stable id order.
+  * ``restrict_plan`` — data axis: a sample-range sub-plan. Restriction
+    by sample is a stable subset of the sorted entries (order preserved),
+    again sort-free.
+  * ``stack_plans``   — pack a (data_shards x num_shards) grid of cell
+    plans into ONE plan whose every leaf has leading (Dd, S) axes and
+    uniform padded shapes, so ``shard_map`` can pass it as a sharded
+    operand and each device picks out its own cell. Padding is inert on
+    BOTH scatter paths by construction: padded sorted entries carry the
+    shard's zero-pad-row id (``num_rows - 1``) and gather their value
+    from an unkept (zero-valued) slot of the routed grid, so the
+    class-gather path masks them and the run-length kernel's pad run
+    flushes exact zeros onto the compact row absent ids densify from;
+    padded class slots are mask-0. The per-cell ``inv_sorted`` leaves
+    keep their cell-local meaning, matching the kernel's flush order.
+
+Why slice instead of rebuilding per shard: the argsort over N*K entries
+is the only super-linear piece of plan construction. Slicing re-uses it
+across all (data, model) cells — the grid costs one linear pass per
+cell — and, more importantly, it is the paper's §4 observation made
+executable: the parameter-server split of Theta is a SPLIT of the
+transpose, not a new transpose.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.kernels.lsplm_sparse_scatter.plan import (
+    TransposePlan,
+    assemble_plan_from_sorted,
+)
+from repro.shard.partition import Partition
+
+
+def _host(plan: TransposePlan):
+    """Pull the plan's sorted-layout leaves back to host numpy (they are
+    small int32 arrays built on the host in the first place)."""
+    return (np.asarray(plan.row_ids, np.int64),
+            np.asarray(plan.sample_sorted, np.int64),
+            np.asarray(plan.slot_sorted, np.int64))
+
+
+def _group_offsets(keys: np.ndarray) -> np.ndarray:
+    """Per-element offset within runs of equal consecutive keys."""
+    if keys.size == 0:
+        return keys.copy()
+    starts = np.nonzero(np.diff(np.concatenate([[-1], keys])))[0]
+    lens = np.diff(np.concatenate([starts, [keys.size]]))
+    return np.arange(keys.size) - np.repeat(starts, lens)
+
+
+def default_shard_k(plan: TransposePlan, part: Partition,
+                    num_samples: int, *, k_multiple: int = 1) -> int:
+    """Uniform per-shard K from the plan itself — same rule as
+    ``partition.shard_slot_width`` on the raw ids (max in-shard entry
+    count over all (sample, shard) cells, rounded up to ``k_multiple``,
+    at least 1), so independently computed plan and tensor widths agree."""
+    row_ids, sample_sorted, _ = _host(plan)
+    owned = row_ids < part.num_rows  # a kept global pad id owns no shard
+    k = 0
+    if np.any(owned):
+        sh = part.shard_of(row_ids[owned])
+        per_cell = np.bincount(
+            sh * np.int64(num_samples) + sample_sorted[owned])
+        k = int(per_cell.max())
+    return max(1, -(-k // k_multiple) * k_multiple)
+
+
+def slice_plan(plan: TransposePlan, part: Partition, *, num_cols: int,
+               shard_k: int | None = None,
+               k_multiple: int = 1) -> list[TransposePlan]:
+    """Per-model-shard plans as contiguous slices of a full-batch plan.
+
+    Shard s's plan addresses the ROUTED local grid
+    (N, shard_k) with local ids in [0, sizes[s]) and
+    ``num_rows = rows_per_shard + 1`` (the per-shard padded row block
+    plus its ``pad_theta`` zero row) — exactly what
+    ``build_transpose_plan(routed_ids[s], rows_per_shard + 1,
+    pad_id=rows_per_shard)`` would build, without re-sorting.
+
+    Args:
+      plan: full-batch plan (pad entries already dropped at build time).
+      part: the id-range partition; must cover the ids the plan indexes.
+      num_cols: K of the ORIGINAL (N, K) ids grid the plan was built on
+        (plans only record N*K; the split needs N).
+      shard_k: uniform routed K (defaults to the same max-cell +
+        ``k_multiple`` rule ``route_ids`` uses, so independent calls
+        agree — pass the same ``k_multiple`` given to routing).
+    """
+    row_ids, sample_sorted, slot_sorted = _host(plan)
+    if plan.num_entries % num_cols:
+        raise ValueError(f"num_cols={num_cols} does not divide "
+                         f"num_entries={plan.num_entries}")
+    N = plan.num_entries // num_cols
+    Ks = default_shard_k(plan, part, N, k_multiple=k_multiple) \
+        if shard_k is None else int(shard_k)
+    num_rows_local = part.rows_per_shard + 1
+
+    out = []
+    for (lo, hi) in part.ranges():
+        a = int(np.searchsorted(row_ids, lo, side="left"))
+        b = int(np.searchsorted(row_ids, hi, side="left"))
+        srt_l = row_ids[a:b] - lo
+        n_l = sample_sorted[a:b]
+        # routed slot = rank of the entry's original k among the sample's
+        # in-shard entries; recovered by a stable grouping on (n, k) —
+        # the id sort itself is inherited, not redone
+        perm = np.argsort(n_l * np.int64(num_cols) + slot_sorted[a:b],
+                          kind="stable")
+        k_local = np.empty(b - a, np.int64)
+        k_local[perm] = _group_offsets(n_l[perm])
+        if k_local.size and k_local.max() >= Ks:
+            raise ValueError(
+                f"shard_k={Ks} too small for range [{lo}, {hi}): a sample "
+                f"holds {int(k_local.max()) + 1} in-range entries")
+        out.append(assemble_plan_from_sorted(
+            srt_l, n_l * np.int64(Ks) + k_local,
+            num_rows=num_rows_local, num_entries=N * Ks, num_cols=Ks))
+    return out
+
+
+def restrict_plan(plan: TransposePlan, n0: int, n1: int, *,
+                  num_cols: int) -> TransposePlan:
+    """Sample-range restriction: the plan of ``ids[n0:n1]`` (sort-free —
+    a stable subset of sorted entries stays sorted)."""
+    row_ids, sample_sorted, slot_sorted = _host(plan)
+    if plan.num_entries % num_cols:
+        raise ValueError(f"num_cols={num_cols} does not divide "
+                         f"num_entries={plan.num_entries}")
+    if not (0 <= n0 <= n1 <= plan.num_entries // num_cols):
+        raise ValueError(f"bad sample range [{n0}, {n1}) for "
+                         f"{plan.num_entries // num_cols} samples")
+    keep = (sample_sorted >= n0) & (sample_sorted < n1)
+    order = (sample_sorted[keep] - n0) * np.int64(num_cols) + slot_sorted[keep]
+    return assemble_plan_from_sorted(
+        row_ids[keep], order, num_rows=plan.num_rows,
+        num_entries=(n1 - n0) * num_cols, num_cols=num_cols)
+
+
+def shard_plan_grid(plan: TransposePlan, part: Partition, *, num_cols: int,
+                    data_shards: int = 1,
+                    shard_k: int | None = None,
+                    k_multiple: int = 1) -> list[list[TransposePlan]]:
+    """(data_shards x num_shards) grid of cell plans: restrict per data
+    block, then slice per id range. ``shard_k`` must be the routed K when
+    tensors were routed with an explicit/global one."""
+    N = plan.num_entries // num_cols
+    if N % data_shards:
+        raise ValueError(f"data_shards={data_shards} does not divide "
+                         f"N={N} samples")
+    N_l = N // data_shards
+    if shard_k is None:
+        shard_k = default_shard_k(plan, part, N, k_multiple=k_multiple)
+    return [
+        slice_plan(restrict_plan(plan, b * N_l, (b + 1) * N_l,
+                                 num_cols=num_cols),
+                   part, num_cols=num_cols, shard_k=shard_k)
+        for b in range(data_shards)
+    ]
+
+
+def _pad1(a: np.ndarray, size: int, fill: int) -> np.ndarray:
+    if a.size == size:
+        return a
+    return np.concatenate([a, np.full(size - a.size, fill, a.dtype)])
+
+
+def stack_plans(grid: list[list[TransposePlan]]) -> TransposePlan:
+    """Stack a (Dd x S) grid of cell plans into one uniform plan.
+
+    Every leaf gains leading (Dd, S) axes; ragged cell shapes are padded:
+
+      * sorted entries to the max kept count — pad entries carry
+        ``row_ids = num_rows - 1`` (each shard's zero pad row), sample 0,
+        and an ``order`` aimed at an unkept slot of the routed grid
+        (value 0 by the routing convention): they contribute exactly 0
+        through every consumer — class gathers, the run-length kernel,
+        ``dvals_planned`` — and a cell's ``rank`` zero-slot (position
+        ``num_kept``) lands on one of them, which reads 0 as required;
+      * popularity classes to the UNION of class widths with per-width
+        max id counts — padded class rows are mask-0;
+      * ``inv_compact`` is RECOMPUTED for the padded class-major layout
+        (padding shifts compact row offsets); absent ids point at the
+        appended zero row ``num_unique``.
+
+    The stacked aux (num_rows/num_entries/num_kept/num_unique and the
+    width union) is uniform across cells, which is what lets the whole
+    plan ride through ``shard_map`` as one sharded pytree operand.
+    """
+    cells = [p for row in grid for p in row]
+    if not cells:
+        raise ValueError("empty plan grid")
+    for p in cells:
+        if p.num_kept > p.num_entries:
+            raise ValueError("cell plan keeps more entries than its grid")
+    Dd, S = len(grid), len(grid[0])
+    if any(len(row) != S for row in grid):
+        raise ValueError("ragged plan grid")
+    num_rows = cells[0].num_rows
+    num_entries = cells[0].num_entries
+    if any(p.num_rows != num_rows or p.num_entries != num_entries
+           for p in cells):
+        raise ValueError("cell plans disagree on num_rows/num_entries — "
+                         "route with a uniform shard_k")
+
+    E_pad = max(p.num_kept for p in cells)
+    widths = sorted({w for p in cells for w in p.class_width})
+    u_max = {c: max((p.class_src[p.class_width.index(c)].shape[0] // c
+                     if c in p.class_width else 0) for p in cells)
+             for c in widths}
+    U_stack = sum(u_max.values())
+    base = {}
+    off = 0
+    for c in widths:
+        base[c] = off
+        off += u_max[c]
+
+    row_ids, samp, slot, order, rank = [], [], [], [], []
+    inv_compact, inv_sorted = [], []
+    class_src = {c: [] for c in widths}
+    class_samp = {c: [] for c in widths}
+    class_mask = {c: [] for c in widths}
+    for p in cells:
+        r = np.asarray(p.row_ids, np.int32)
+        o = np.asarray(p.order, np.int32)
+        # padded sorted entries must be inert on EVERY scatter path, the
+        # run-length kernel included: point their `order` at a flat slot
+        # the cell does not keep — in a routed grid that is a pad slot
+        # carrying value 0 (one exists whenever padding is needed, since
+        # num_kept < E_pad <= num_entries), so the pad run accumulates
+        # exact zeros and its flush lands them on the compact row absent
+        # ids densify from
+        if p.num_kept < E_pad:
+            free = np.ones(num_entries, bool)
+            free[o] = False
+            pad_slot = int(np.flatnonzero(free)[0])
+        else:
+            pad_slot = 0  # no padding -> value never read
+        row_ids.append(_pad1(r, E_pad, num_rows - 1))
+        samp.append(_pad1(np.asarray(p.sample_sorted, np.int32), E_pad, 0))
+        slot.append(_pad1(np.asarray(p.slot_sorted, np.int32), E_pad, 0))
+        order.append(_pad1(o, E_pad, pad_slot))
+        rank.append(np.asarray(p.rank, np.int32))
+        inv_sorted.append(np.asarray(p.inv_sorted, np.int32))
+
+        # padded class-major layout + matching inverse densification map
+        uniq, counts = np.unique(r[: p.num_kept], return_counts=True)
+        cls = np.ones_like(counts)
+        if uniq.size:
+            cls = np.where(counts <= 1, 1,
+                           1 << np.ceil(np.log2(counts)).astype(np.int64))
+        inv = np.full(num_rows, U_stack, np.int32)
+        for c in widths:
+            if c in p.class_width:
+                j = p.class_width.index(c)
+                src = np.asarray(p.class_src[j], np.int32)
+                sp = np.asarray(p.class_samp[j], np.int32)
+                mk = np.asarray(p.class_mask[j], np.int32)
+            else:
+                src = sp = mk = np.zeros(0, np.int32)
+            size = u_max[c] * c
+            class_src[c].append(_pad1(src, size, 0))
+            class_samp[c].append(_pad1(sp, size, 0))
+            class_mask[c].append(_pad1(mk, size, 0))
+            sel = uniq[cls == c]
+            inv[sel] = base[c] + np.arange(sel.size, dtype=np.int32)
+        inv_compact.append(inv)
+
+    import jax.numpy as jnp
+
+    def stk(parts):
+        return jnp.asarray(
+            np.stack(parts).reshape((Dd, S) + parts[0].shape))
+
+    return TransposePlan(
+        class_src=[stk(class_src[c]) for c in widths],
+        class_samp=[stk(class_samp[c]) for c in widths],
+        class_mask=[stk(class_mask[c]) for c in widths],
+        class_width=widths,
+        row_ids=stk(row_ids), sample_sorted=stk(samp), slot_sorted=stk(slot),
+        order=stk(order), rank=stk(rank),
+        inv_compact=stk(inv_compact), inv_sorted=stk(inv_sorted),
+        num_rows=num_rows, num_entries=num_entries, num_kept=E_pad,
+        num_unique=U_stack)
+
+
+def cell_plan(stacked: TransposePlan | None) -> TransposePlan | None:
+    """Strip the leading (data, model) axes off a stacked plan — used
+    INSIDE ``shard_map``, where each device's block has both leading
+    dims of size 1."""
+    if stacked is None:
+        return None
+    import jax
+
+    return jax.tree.map(lambda a: a[0, 0], stacked)

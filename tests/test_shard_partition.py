@@ -1,0 +1,197 @@
+"""Id-range partitioner + host-side routing (repro.shard.partition).
+
+Routing must be a lossless re-arrangement: every (id, val) entry lands on
+exactly one shard with a re-based id, order within a sample preserved,
+pads dropped — so the sum of shard-local gather-matmuls equals the global
+one, which is the invariant the sharded step's single psum relies on.
+"""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.data.sparse import generate_sparse
+from repro.shard.partition import (
+    Partition,
+    balanced_partition,
+    make_partition,
+    route_batch,
+    route_ids,
+    shard_slot_width,
+)
+
+
+def _zipf_ids(rng, n, k, d, power=8.0):
+    return (d * (rng.random((n, k)) ** power)).astype(np.int64)
+
+
+# ------------------------------------------------------------- partitions
+def test_make_partition_equal_and_remainder():
+    p = make_partition(100, 4)
+    assert p.ranges() == [(0, 25), (25, 50), (50, 75), (75, 100)]
+    assert p.is_uniform and p.rows_per_shard == 25
+    q = make_partition(10, 3)
+    assert q.sizes.tolist() == [4, 3, 3]
+    assert not q.is_uniform and q.rows_per_shard == 4
+    assert q.num_rows == 10 and q.num_shards == 3
+
+
+def test_partition_validation():
+    with pytest.raises(ValueError):
+        Partition([1, 5, 10])  # must start at 0
+    with pytest.raises(ValueError):
+        Partition([0, 7, 5])  # decreasing
+    with pytest.raises(ValueError):
+        make_partition(3, 4)  # more shards than rows
+
+
+def test_shard_of_edges():
+    p = Partition([0, 3, 3, 10])  # middle shard empty
+    ids = np.array([0, 2, 3, 9, 10, 11])
+    np.testing.assert_array_equal(p.shard_of(ids), [0, 0, 2, 2, 3, 3])
+    assert p.sizes.tolist() == [3, 0, 7]
+
+
+def test_balanced_partition_flattens_zipf_head():
+    rng = np.random.default_rng(0)
+    d, S = 10_000, 8
+    ids = _zipf_ids(rng, 512, 24, d, power=4.0)
+    part = balanced_partition(d, S, ids)
+    counts = np.bincount(part.shard_of(ids.reshape(-1)), minlength=S)
+    mean = counts.mean()
+    # quantile cuts keep every shard within ~2x of the mean...
+    assert counts.max() <= 2.0 * mean, counts
+    # ...whereas equal ranges drown shard 0 under the hot head
+    eq = np.bincount(make_partition(d, S).shard_of(ids.reshape(-1)),
+                     minlength=S)
+    assert eq.max() > 4.0 * mean, eq
+    assert part.num_rows == d and part.num_shards == S
+
+
+def test_balanced_partition_no_signal_falls_back_equal():
+    part = balanced_partition(100, 4, np.full((4, 3), 100), pad_id=100)
+    assert part == make_partition(100, 4)
+
+
+def test_pad_unpad_roundtrip():
+    rng = np.random.default_rng(1)
+    theta = jnp.asarray(rng.normal(size=(10, 4)).astype(np.float32))
+    part = Partition([0, 1, 5, 10])  # sizes 1, 4, 5 -> rows_per_shard 5
+    padded = part.pad_rows(theta)
+    assert padded.shape == (15, 4)
+    np.testing.assert_array_equal(np.asarray(part.unpad_rows(padded)),
+                                  np.asarray(theta))
+    # shard s's rows live at [s*R, s*R+size): pad rows are zero
+    pn = np.asarray(padded)
+    assert np.all(pn[1:5] == 0) and np.all(pn[9:10] == 0)
+    np.testing.assert_array_equal(pn[0:1], np.asarray(theta)[0:1])
+    np.testing.assert_array_equal(pn[5:9], np.asarray(theta)[1:5])
+    np.testing.assert_array_equal(pn[10:15], np.asarray(theta)[5:10])
+    # uniform partitions pad as the identity
+    u = make_partition(10, 2)
+    assert u.pad_rows(theta) is theta
+
+
+# --------------------------------------------------------------- routing
+@pytest.mark.parametrize("seed,zipf", [(0, False), (1, True), (2, True)])
+def test_route_ids_lossless(seed, zipf):
+    rng = np.random.default_rng(seed)
+    N, K, d, S = 32, 9, 500, 4
+    ids = _zipf_ids(rng, N, K, d) if zipf else rng.integers(0, d, (N, K))
+    ids[rng.random((N, K)) < 0.25] = d  # pad entries
+    vals = rng.normal(size=(N, K)).astype(np.float32)
+    vals[ids == d] = 0.0
+    part = make_partition(d, S)
+    ids_r, vals_r, Ks = route_ids(part, ids, vals, pad_id=d)
+    assert ids_r.shape == (S, N, Ks) == vals_r.shape
+    assert Ks == shard_slot_width(part, ids, pad_id=d)
+
+    R = part.rows_per_shard
+    for n in range(N):
+        want = sorted((int(i), float(v)) for i, v in zip(ids[n], vals[n])
+                      if i != d)
+        got = []
+        for s in range(S):
+            keep = ids_r[s, n] != R
+            # local ids are in the shard's range, re-based
+            assert np.all(ids_r[s, n][keep] < part.sizes[s])
+            got += [(int(i) + int(part.bounds[s]), float(v))
+                    for i, v in zip(ids_r[s, n][keep], vals_r[s, n][keep])]
+            # pad slots carry zero values
+            assert np.all(vals_r[s, n][~keep] == 0.0)
+        assert sorted(got) == want
+
+
+def test_route_ids_preserves_sample_order_and_k_multiple():
+    part = make_partition(100, 2)
+    ids = np.array([[70, 3, 60, 5, 50]])
+    vals = np.arange(5, dtype=np.float32)[None] + 1
+    ids_r, vals_r, Ks = route_ids(part, ids, vals, pad_id=100, k_multiple=4)
+    assert Ks == 4  # 3 entries on shard 1, rounded up to the multiple
+    np.testing.assert_array_equal(ids_r[0, 0], [3, 5, 50, 50])
+    np.testing.assert_array_equal(vals_r[0, 0], [2, 4, 0, 0])
+    np.testing.assert_array_equal(ids_r[1, 0], [20, 10, 0, 50])
+    np.testing.assert_array_equal(vals_r[1, 0], [1, 3, 5, 0])
+
+
+def test_route_ids_rejects_out_of_range_and_small_k():
+    part = make_partition(10, 2)
+    with pytest.raises(ValueError, match="outside partition"):
+        route_ids(part, np.array([[11]]), np.ones((1, 1), np.float32),
+                  pad_id=99)
+    with pytest.raises(ValueError, match="too small"):
+        route_ids(part, np.array([[1, 2, 3]]), np.ones((1, 3), np.float32),
+                  pad_id=10, shard_k=2)
+
+
+def test_route_batch_z_parity_and_session_rebase():
+    """Sum of shard-local gather-matmuls == the global one (the psum
+    invariant), sessions re-based per data block."""
+    d, Dd = 300, 2
+    batch = generate_sparse(num_features=d, num_user_features_range=(180, d),
+                            sessions=16, ads_per_session=3, active_user=6,
+                            active_ad=4, seed=5)
+    part = balanced_partition(
+        d, 3, np.asarray(batch.user_ids), np.asarray(batch.ad_ids), pad_id=d)
+    sb = route_batch(batch, part, data_shards=Dd)
+    assert sb.num_shards == 3 and sb.data_shards == Dd
+    assert sb.partition == part
+
+    rng = np.random.default_rng(0)
+    theta = rng.normal(size=(d, 4)).astype(np.float32)
+    R = part.rows_per_shard
+
+    def z_of(ids, vals):  # global padded-COO matmul, numpy
+        tp = np.concatenate([theta, np.zeros((1, 4), np.float32)])
+        return np.einsum("nk,nkm->nm", vals, tp[ids])
+
+    for glob_ids, glob_vals, loc_ids, loc_vals in (
+            (batch.ad_ids, batch.ad_vals, sb.ad_ids, sb.ad_vals),
+            (batch.user_ids, batch.user_vals, sb.user_ids, sb.user_vals)):
+        want = z_of(np.asarray(glob_ids), np.asarray(glob_vals))
+        got = np.zeros_like(want)
+        for s, (lo, hi) in enumerate(part.ranges()):
+            tp_l = np.concatenate([theta[lo:hi],
+                                   np.zeros((R - (hi - lo) + 1, 4),
+                                            np.float32)])
+            got += np.einsum("nk,nkm->nm", np.asarray(loc_vals)[s],
+                             tp_l[np.asarray(loc_ids)[s]])
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    G_l = 16 // Dd
+    sid = np.asarray(batch.session_id)
+    np.testing.assert_array_equal(np.asarray(sb.session_id), sid % G_l)
+    # plans rode along, stacked over (data blocks, shards)
+    assert sb.ad_plan.row_ids.shape[:2] == (Dd, 3)
+    assert sb.user_plan.row_ids.shape[:2] == (Dd, 3)
+
+
+def test_route_batch_divisibility_errors():
+    batch = generate_sparse(num_features=100,
+                            num_user_features_range=(60, 100), sessions=6,
+                            ads_per_session=2, active_user=3, active_ad=2,
+                            seed=0, with_plans=False)
+    with pytest.raises(ValueError, match="divide"):
+        route_batch(batch, make_partition(100, 2), data_shards=4)
+    with pytest.raises(ValueError, match="partition covers"):
+        route_batch(batch, make_partition(99, 3))

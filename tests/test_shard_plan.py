@@ -1,0 +1,186 @@
+"""Plan-slicing invariants (repro.shard.plan_slicing).
+
+The TransposePlan's sorted-by-id layout must split at id-range
+boundaries into per-shard plans that are BIT-IDENTICAL to plans built
+from scratch on the routed shard-local ids — same stable entry order,
+same popularity classes, same inverse maps — and the per-shard segment
+sums must reassemble the full plan's scatter exactly. Seeded-grid
+parametrization (the repo's hypothesis-free property style).
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.lsplm_sparse_scatter.ops import (
+    build_transpose_plan,
+    dvals_planned,
+    scatter_add_planned,
+    scatter_add_ref,
+)
+from repro.shard.partition import Partition, make_partition, route_ids
+from repro.shard.plan_slicing import (
+    cell_plan,
+    restrict_plan,
+    shard_plan_grid,
+    slice_plan,
+    stack_plans,
+)
+
+GRID = [
+    # (seed, N, K, d, S, zipf_power or None, pad_frac)
+    (0, 24, 6, 200, 4, None, 0.0),
+    (1, 32, 9, 500, 3, 6.0, 0.25),
+    (2, 16, 4, 120, 5, 3.0, 0.5),
+    (3, 8, 3, 64, 2, None, 0.9),   # nearly all pad
+    (4, 40, 12, 1000, 7, 8.0, 0.1),  # hot head, many shards
+    (5, 6, 2, 50, 6, None, 1.0),   # all pad: every shard empty
+]
+
+
+def _make(seed, N, K, d, power, pad_frac):
+    rng = np.random.default_rng(seed)
+    if power is None:
+        ids = rng.integers(0, d, (N, K))
+    else:
+        ids = (d * (rng.random((N, K)) ** power)).astype(np.int64)
+    ids[rng.random((N, K)) < pad_frac] = d
+    vals = rng.normal(size=(N, K)).astype(np.float32)
+    vals[ids == d] = 0.0
+    return ids, vals, rng
+
+
+def _random_partition(rng, d, S):
+    cuts = np.sort(rng.choice(np.arange(1, d), S - 1, replace=False))
+    return Partition(np.concatenate([[0], cuts, [d]]))
+
+
+def _assert_plans_equal(a, b):
+    la, auxa = jax.tree.flatten(a)
+    lb, auxb = jax.tree.flatten(b)
+    assert auxa == auxb
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+@pytest.mark.parametrize("seed,N,K,d,S,power,pad_frac", GRID)
+def test_slice_plan_equals_build_on_routed_ids(seed, N, K, d, S, power,
+                                               pad_frac):
+    ids, vals, rng = _make(seed, N, K, d, power, pad_frac)
+    plan = build_transpose_plan(ids, d + 1, pad_id=d)
+    part = _random_partition(rng, d, S)
+    ids_r, _, Ks = route_ids(part, ids, vals, pad_id=d)
+    sliced = slice_plan(plan, part, num_cols=K)
+    assert len(sliced) == S
+    for s in range(S):
+        ref = build_transpose_plan(ids_r[s], part.rows_per_shard + 1,
+                                   pad_id=part.rows_per_shard)
+        assert sliced[s].num_entries == N * Ks == ref.num_entries
+        _assert_plans_equal(sliced[s], ref)
+
+
+@pytest.mark.parametrize("seed,N,K,d,S,power,pad_frac", GRID[:4])
+def test_restrict_plan_equals_build_on_sample_range(seed, N, K, d, S, power,
+                                                    pad_frac):
+    ids, _, rng = _make(seed, N, K, d, power, pad_frac)
+    plan = build_transpose_plan(ids, d + 1, pad_id=d)
+    n0, n1 = N // 4, N - N // 4
+    _assert_plans_equal(
+        restrict_plan(plan, n0, n1, num_cols=K),
+        build_transpose_plan(ids[n0:n1], d + 1, pad_id=d))
+
+
+@pytest.mark.parametrize("seed,N,K,d,S,power,pad_frac", GRID)
+def test_sliced_segment_sums_reassemble_full_scatter(seed, N, K, d, S, power,
+                                                     pad_frac):
+    ids, vals, rng = _make(seed, N, K, d, power, pad_frac)
+    m2 = 6
+    dz = jnp.asarray(rng.normal(size=(N, m2)).astype(np.float32))
+    plan = build_transpose_plan(ids, d + 1, pad_id=d)
+    part = _random_partition(rng, d, S)
+    ids_r, vals_r, Ks = route_ids(part, ids, vals, pad_id=d)
+    sliced = slice_plan(plan, part, num_cols=K, shard_k=Ks)
+
+    full = np.asarray(scatter_add_planned(plan, jnp.asarray(vals), dz,
+                                          mode="jnp"))
+    oracle = np.asarray(scatter_add_ref(jnp.asarray(ids), jnp.asarray(vals),
+                                        dz, d + 1))
+    assembled = np.zeros((d + 1, m2), np.float32)
+    R = part.rows_per_shard
+    for s, (lo, hi) in enumerate(part.ranges()):
+        loc = np.asarray(scatter_add_planned(
+            sliced[s], jnp.asarray(vals_r[s]), dz, mode="jnp"))
+        assert loc.shape == (R + 1, m2)
+        # rows past the shard's true range and its pad row stay zero
+        assert np.all(loc[hi - lo:] == 0.0)
+        assembled[lo:hi] += loc[: hi - lo]
+    scale = max(1.0, np.abs(full).max())
+    np.testing.assert_allclose(assembled / scale, full / scale, atol=2e-6)
+    np.testing.assert_allclose(full / scale, oracle / scale, atol=2e-6)
+
+
+@pytest.mark.parametrize("seed,N,K,d,S,power,pad_frac", GRID[:5])
+def test_stacked_plan_cells_match_unpadded(seed, N, K, d, S, power, pad_frac):
+    """stack_plans pads cells to uniform shapes; padding must be inert:
+    each extracted cell's scatter AND dvals equal the unpadded cell
+    plan's, for every (data block, shard)."""
+    Dd = 2
+    if N % Dd:
+        N += N % Dd
+    ids, vals, rng = _make(seed, N, K, d, power, pad_frac)
+    m2 = 4
+    plan = build_transpose_plan(ids, d + 1, pad_id=d)
+    part = _random_partition(rng, d, S)
+    ids_r, vals_r, Ks = route_ids(part, ids, vals, pad_id=d)
+    grid = shard_plan_grid(plan, part, num_cols=K, data_shards=Dd,
+                           shard_k=Ks)
+    stacked = stack_plans(grid)
+    R = part.rows_per_shard
+    N_l = N // Dd
+    assert stacked.num_rows == R + 1
+    assert stacked.num_entries == N_l * Ks
+
+    for b in range(Dd):
+        dz = jnp.asarray(rng.normal(size=(N_l, m2)).astype(np.float32))
+        for s in range(S):
+            cell = jax.tree.map(lambda a: a[b, s], stacked)
+            ref = grid[b][s]
+            vloc = jnp.asarray(vals_r[s, b * N_l: (b + 1) * N_l])
+            iloc = ids_r[s, b * N_l: (b + 1) * N_l]
+            want = np.asarray(scatter_add_planned(ref, vloc, dz, mode="jnp"))
+            got = np.asarray(scatter_add_planned(cell, vloc, dz, mode="jnp"))
+            np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-7)
+            # the run-length KERNEL must tolerate the padded entries too
+            # (pad run flushes exact zeros onto the absent-id compact row)
+            if b == 0 and s < 2:  # interpret mode is slow: spot-check
+                got_k = np.asarray(scatter_add_planned(
+                    cell, vloc, dz, mode="interpret", block_e=64))
+                np.testing.assert_allclose(got_k, want, rtol=1e-6,
+                                           atol=1e-6)
+            tp = jnp.asarray(
+                rng.normal(size=(R + 1, m2)).astype(np.float32)
+            ).at[R].set(0.0)  # local pad row is zero by construction
+            dv_ref = np.asarray(dvals_planned(ref, tp, dz, iloc.shape))
+            dv_got = np.asarray(dvals_planned(cell, tp, dz, iloc.shape))
+            np.testing.assert_allclose(dv_got, dv_ref, rtol=1e-6, atol=1e-7)
+
+
+def test_cell_plan_roundtrip_and_none():
+    assert cell_plan(None) is None
+    ids = np.array([[0, 3, 1], [2, 3, 0]])
+    plan = build_transpose_plan(ids, 5, pad_id=4)
+    stacked = stack_plans([[plan]])
+    _assert_plans_equal(cell_plan(stacked), plan)
+
+
+def test_slice_plan_errors():
+    ids = np.array([[0, 1], [2, 3]])
+    plan = build_transpose_plan(ids, 5, pad_id=4)
+    with pytest.raises(ValueError, match="does not divide"):
+        slice_plan(plan, make_partition(4, 2), num_cols=3)
+    with pytest.raises(ValueError, match="too small"):
+        slice_plan(plan, make_partition(4, 1), num_cols=2, shard_k=1)
+    with pytest.raises(ValueError, match="disagree"):
+        stack_plans([[plan, build_transpose_plan(ids, 6, pad_id=5)]])
