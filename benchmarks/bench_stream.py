@@ -1,0 +1,158 @@
+"""Streaming trainer benchmark — overlapped host re-planner vs
+synchronous re-planning.
+
+Per window, the streaming trainer pays host-side plan construction
+(+ routing on a mesh) AND recompilation (plan shapes are
+data-dependent) before the device can step. ``repro.stream.planner``
+hides both behind the previous window's device iterations; this bench
+runs the SAME drifted stream twice — ``overlap=False`` (everything
+serial, the baseline) and ``overlap=True`` — and reports end-to-end
+steps/sec across windows plus the planner's measured overlap ratio.
+
+The trajectory is identical in both modes (the planner changes WHEN
+host work happens, never WHAT), so the bench asserts final-Theta parity
+before timing counts.
+
+Enforcement: with REPRO_BENCH_ENFORCE=1 (and not --smoke) the
+overlapped mode must BEAT synchronous on the geomean, and must reach
+STREAM_TARGET_SPEEDUP (1.3x) when the host has the parallel slack the
+overlap design assumes (>= MIN_CPUS_FOR_TARGET cpus — on a 2-core box
+the background build and the foreground step fight for the same two
+cores, which caps the achievable speedup around 1.25x even at overlap
+ratio 1.0; on a real accelerator host the step does not consume host
+cores at all). The enforced target is recorded alongside the measured
+numbers in BENCH_stream.json via ``benchmarks/run.py --json``.
+
+CSV rows: stream/<mode>/<tag>,us_per_step,steps_per_sec and a
+stream/overlap_speedup/<tag> summary row.
+"""
+from __future__ import annotations
+
+import os
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+
+# production sparsity: K active ids out of d columns, K << d. Windows
+# slide over a drifted day stream; inner_iters is set so device work
+# roughly balances host build (the regime streaming runs in — compile +
+# plan per window amortised over a bounded iteration budget).
+CONFIGS = [  # (days, sessions/day, d, m, active_user, active_ad, W, inner)
+    (6, 256, 200_000, 4, 24, 12, 3, 3),
+    (6, 384, 300_000, 4, 24, 12, 2, 3),
+]
+SMOKE_CONFIGS = [(3, 32, 5_000, 2, 8, 5, 2, 2)]
+STREAM_TARGET_SPEEDUP = 1.3
+# below this many cpus the full target is unreachable by construction
+# (hidden host work steals the step's own cores); the enforced floor is
+# then TWO_CORE_FLOOR — the packing win that 2 cores do sustain
+MIN_CPUS_FOR_TARGET = 4
+TWO_CORE_FLOOR = 1.1
+# wall-clock on shared/small boxes jitters (the overlapped mode's
+# background compile contends with the device step for cores): measure
+# each mode REPS times and keep the best steps/sec, like time_fn's
+# median does for the kernel benches
+REPS = 2
+
+
+def _run_mode(stream, theta0, *, window, inner, overlap):
+    from repro.stream import StreamTrainer
+
+    tr = StreamTrainer(stream, lam=1.0, beta=1.0, window=window,
+                       inner_iters=inner, overlap=overlap)
+    t0 = time.perf_counter()
+    state, trace = tr.run(tr.init(theta0))
+    wall = time.perf_counter() - t0
+    steps = stream.num_days * inner
+    return {
+        "wall_s": wall,
+        "steps_per_sec": steps / wall,
+        "build_s": tr.planner_stats.build_seconds,
+        "exposed_s": tr.planner_stats.wait_seconds,
+        "overlap_ratio": tr.planner_stats.overlap_ratio,
+        "theta": np.asarray(tr.theta(state)),
+        "fs": [f for w in trace for f in w.fs],
+    }
+
+
+def run(smoke: bool | None = None, collect: dict | None = None):
+    from repro.stream import DayStream
+
+    if smoke is None:
+        smoke = os.environ.get("REPRO_BENCH_SMOKE", "") == "1"
+    enforce = os.environ.get("REPRO_BENCH_ENFORCE", "") == "1"
+    configs = SMOKE_CONFIGS if smoke else CONFIGS
+    rows = []
+    results: dict = {}
+    if collect is not None:  # bind BEFORE the sweep: a failing run still
+        import jax                        # leaves partial data for CI
+        collect["backend"] = jax.default_backend()
+        collect["smoke"] = smoke
+        collect["target_speedup"] = STREAM_TARGET_SPEEDUP
+        collect["configs"] = results
+
+    speedups = []
+    for (days, G, d, m, au, ad, W, inner) in configs:
+        tag = f"days{days}_G{G}_d{d}_m{m}_w{W}_i{inner}"
+        stream = DayStream(days, sessions_per_day=G, num_features=d,
+                           active_user=au, active_ad=ad, seed=9)
+        for t in range(days):  # warm the day cache so the first timed
+            stream.day(t)      # mode doesn't pay one-time generation
+        theta0 = jnp.asarray(
+            0.01 * np.random.default_rng(0).normal(size=(d, 2 * m)),
+            jnp.float32)
+        reps = 1 if smoke else REPS
+        best = {}
+        for mode in (False, True):
+            runs = [_run_mode(stream, theta0, window=W, inner=inner,
+                              overlap=mode) for _ in range(reps)]
+            best[mode] = max(runs, key=lambda r: r["steps_per_sec"])
+        sync, over = best[False], best[True]
+        # the planner must not change the trajectory
+        assert sync["fs"] == over["fs"], (sync["fs"], over["fs"])
+        np.testing.assert_array_equal(sync["theta"], over["theta"])
+        speedup = over["steps_per_sec"] / sync["steps_per_sec"]
+        speedups.append(speedup)
+        steps = days * inner
+        rows.append((f"stream/sync/{tag}", sync["wall_s"] * 1e6 / steps,
+                     f"{sync['steps_per_sec']:.2f}steps_per_sec"))
+        rows.append((f"stream/overlap/{tag}", over["wall_s"] * 1e6 / steps,
+                     f"{over['steps_per_sec']:.2f}steps_per_sec"))
+        rows.append((f"stream/overlap_speedup/{tag}", 0.0,
+                     f"{speedup:.2f}x_vs_sync_ratio{over['overlap_ratio']:.2f}"))
+        results[tag] = {
+            "days": days, "sessions_per_day": G, "d": d, "m": m,
+            "active_user": au, "active_ad": ad, "window": W,
+            "inner_iters": inner,
+            "sync_wall_s": sync["wall_s"],
+            "sync_steps_per_sec": sync["steps_per_sec"],
+            "overlap_wall_s": over["wall_s"],
+            "overlap_steps_per_sec": over["steps_per_sec"],
+            "overlap_build_s": over["build_s"],
+            "overlap_exposed_s": over["exposed_s"],
+            "overlap_ratio": over["overlap_ratio"],
+            "speedup": speedup,
+            "parity": "ok",
+        }
+
+    geomean = float(np.exp(np.mean(np.log(speedups))))
+    cpus = os.cpu_count() or 1
+    enforced = STREAM_TARGET_SPEEDUP if cpus >= MIN_CPUS_FOR_TARGET \
+        else TWO_CORE_FLOOR
+    rows.append(("stream/overlap_speedup/geomean", 0.0,
+                 f"{geomean:.2f}x_vs_sync"))
+    if collect is not None:
+        collect["geomean_speedup"] = geomean
+        collect["cpus"] = cpus
+        collect["enforced_target"] = enforced
+    if enforce and not smoke and geomean < enforced:
+        raise AssertionError(
+            f"overlapped planner geomean only {geomean:.2f}x vs synchronous "
+            f"re-planning (enforced target {enforced}x on {cpus} cpus, "
+            f"design target {STREAM_TARGET_SPEEDUP}x); per-config: "
+            f"{[round(s, 2) for s in speedups]}")
+    emit(rows)
+    return results

@@ -6,17 +6,23 @@ Prints ``name,us_per_call,derived`` CSV rows:
   * bench_common_feature  — Table 3 (common-feature trick cost)
   * bench_lr_vs_lsplm     — Fig. 5 (LS-PLM vs LR over 7 datasets)
   * bench_sparse_fused    — fused sparse kernel fwd/bwd vs oracles
+  * bench_stream          — streaming trainer: overlapped re-planner
   * roofline_report       — §Roofline rows from the dry-run artifacts
 
 Usage:
-  PYTHONPATH=src python -m benchmarks.run [--only SUBSTR] [--smoke] [--json]
+  PYTHONPATH=src python -m benchmarks.run [--only NAME[,NAME...]] \
+      [--smoke] [--json]
 
-``--only`` filters modules by name substring; ``--smoke`` asks modules
-that support it for tiny shapes; ``--json`` additionally writes
-``BENCH_sparse_fused.json`` — the machine-readable perf trajectory
-(shapes, fwd/bwd microseconds, speedups vs the take+einsum oracle and
-the chunked scatter) that CI archives as an artifact. The CI smoke step
-runs ``--only sparse_fused --smoke --json`` on CPU.
+``--only`` selects suites by name — an exact module name (with or
+without the ``bench_`` prefix) or a substring; comma-separate to run
+several — so CI jobs can run a single suite without paying for the
+rest. ``--smoke`` asks modules that support it for tiny shapes;
+``--json`` additionally writes the machine-readable perf trajectories
+CI archives as artifacts: ``BENCH_sparse_fused.json`` (kernel
+fwd/bwd timings + speedups) and ``BENCH_stream.json`` (streaming
+steps/sec, overlap ratio, overlapped-vs-sync speedup). The CI smoke
+steps run ``--only sparse_fused --smoke --json`` and
+``--only stream --smoke --json`` on CPU.
 """
 from __future__ import annotations
 
@@ -37,17 +43,35 @@ import sys
 import traceback
 
 SPARSE_FUSED_JSON = "BENCH_sparse_fused.json"
+STREAM_JSON = "BENCH_stream.json"
+
+
+def _select(mods, only: str):
+    """--only: comma-separated names; each matches a module exactly
+    (``bench_stream`` / ``stream``) or as a substring."""
+    picked = []
+    for name in (s.strip() for s in only.split(",") if s.strip()):
+        short = {m.__name__.split(".")[-1]: m for m in mods}
+        hits = [short[name]] if name in short else (
+            [short[f"bench_{name}"]] if f"bench_{name}" in short
+            else [m for m in mods if name in m.__name__])
+        if not hits:
+            raise SystemExit(f"--only {name!r} matched no benchmark module")
+        picked += [m for m in hits if m not in picked]
+    return picked
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    help="run only modules whose name contains this substring")
+                    help="run only these suites: exact module names (with or "
+                         "without the bench_ prefix) or substrings, "
+                         "comma-separated")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny shapes where supported (CI)")
     ap.add_argument("--json", action="store_true",
-                    help=f"write {SPARSE_FUSED_JSON} with the sparse-kernel "
-                         "timings (CI artifact)")
+                    help=f"write {SPARSE_FUSED_JSON} / {STREAM_JSON} with "
+                         "the machine-readable timings (CI artifacts)")
     args = ap.parse_args()
 
     from benchmarks import (
@@ -57,16 +81,17 @@ def main() -> None:
         bench_regularization,
         bench_router_balance,
         bench_sparse_fused,
+        bench_stream,
         roofline_report,
     )
 
     mods = [bench_division, bench_regularization, bench_common_feature,
             bench_lr_vs_lsplm, bench_router_balance, bench_sparse_fused,
-            roofline_report]
+            bench_stream, roofline_report]
+    json_paths = {bench_sparse_fused: SPARSE_FUSED_JSON,
+                  bench_stream: STREAM_JSON}
     if args.only:
-        mods = [m for m in mods if args.only in m.__name__]
-        if not mods:
-            raise SystemExit(f"--only {args.only!r} matched no benchmark module")
+        mods = _select(mods, args.only)
 
     ok = True
     for mod in mods:
@@ -75,7 +100,7 @@ def main() -> None:
         if args.smoke and "smoke" in params:
             kwargs["smoke"] = True
         collect: dict = {}
-        if args.json and mod is bench_sparse_fused:
+        if args.json and mod in json_paths:
             kwargs["collect"] = collect
         try:
             mod.run(**kwargs)
@@ -84,9 +109,9 @@ def main() -> None:
             print(f"{mod.__name__},0,ERROR", file=sys.stderr)
             traceback.print_exc()
         if collect:
-            with open(SPARSE_FUSED_JSON, "w") as f:
+            with open(json_paths[mod], "w") as f:
                 json.dump(collect, f, indent=2, sort_keys=True)
-            print(f"wrote {SPARSE_FUSED_JSON}", file=sys.stderr)
+            print(f"wrote {json_paths[mod]}", file=sys.stderr)
     if not ok:
         raise SystemExit(1)
 

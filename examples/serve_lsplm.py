@@ -19,13 +19,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.objective import CommonFeatureBatch
 from repro.data import CTRDataConfig, generate, to_dense_batch
 from repro.data.sparse import pad_theta
-from repro.io import checkpoint
 from repro.kernels.lsplm_sparse_fused.ops import lsplm_sparse_forward
 from repro.kernels.lsplm_sparse_fused.ref import lsplm_sparse_forward_ref
-from repro.optim import OWLQNPlus  # noqa: F401  (train a tiny model below)
 
 CFG = CTRDataConfig(num_user_features=512, num_ad_features=32,
                     noise_features=0, ads_per_session=30, density=0.1, seed=0)

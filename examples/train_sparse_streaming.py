@@ -1,0 +1,93 @@
+"""Streaming day-by-day LS-PLM training: the paper's production cadence.
+
+    PYTHONPATH=src python examples/train_sparse_streaming.py
+
+The full-batch OWLQN+ of the paper is how ONE retrain runs; Alibaba's
+system retrains as new days of impressions arrive. This example runs
+that loop on a synthetic drifted day stream (``repro.stream``):
+
+  * a :class:`DayStream` yields per-day padded-COO batches whose
+    Zipf-hot id head ROTATES a little every day (real CTR traffic:
+    new ads/users heat up, old ones cool off);
+  * per day, the trainer re-plans the sliding window of the last W days
+    on the host — transpose plans + (re)compilation — OVERLAPPED with
+    the previous window's device iterations (``WindowPlanner``), then
+    runs a bounded budget of warm-started OWLQN+ steps;
+  * Theta carries across windows bit-exactly (exact zeros stay exact
+    zeros), the L-BFGS history resets at boundaries by default
+    (``history="carry"`` keeps it — useful at small drift);
+  * every window ends in a resumable checkpoint
+    (Theta + OWLQN+ history + day cursor, ``repro.io.checkpoint``).
+
+The punchline printed at the end: held-out NEXT-day NLL of the streamed
+model vs a train-once model given the same total iteration budget on
+day 0 — under drift, the stream wins — plus the planner's measured
+overlap ratio. ``benchmarks/bench_stream.py`` measures the
+overlapped-vs-synchronous steps/sec speedup on production shapes.
+"""
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.objective import nll_sparse
+from repro.data import auc
+from repro.data.sparse import sparse_predict
+from repro.stream import DayStream, StreamTrainer
+
+D, M = 400, 4
+DAYS, WINDOW, INNER = 6, 2, 5
+LAM = BETA = 0.25
+
+
+def main():
+    # DAYS of training traffic + one held-out next day
+    # sized so ids repeat enough for a CPU demo to LEARN the drifting
+    # head (production-width shapes are bench_stream's job)
+    stream = DayStream(DAYS + 1, sessions_per_day=192, num_features=D,
+                       active_user=8, active_ad=5, drift=0.06,
+                       head_width=0.06, head_frac=0.85, seed=11)
+    theta0 = jnp.asarray(
+        0.01 * np.random.default_rng(0).normal(size=(D, 2 * M)), jnp.float32)
+    held = stream.day(DAYS)
+    B = held.y.shape[0]
+
+    def next_day(theta):
+        p = np.asarray(sparse_predict(theta, held))
+        return (float(nll_sparse(theta, held)) / B,
+                auc(np.asarray(held.y), p))
+
+    trainer = StreamTrainer(stream, lam=LAM, beta=BETA, window=WINDOW,
+                            inner_iters=INNER)
+    print(f"stream: {DAYS} days x {stream.sessions_per_day} sessions, "
+          f"d={D:,}, window={WINDOW} days, {INNER} OWLQN+ iters/window, "
+          f"overlapped re-planner")
+    t0 = time.perf_counter()
+    state, trace = trainer.run(
+        trainer.init(theta0), days=DAYS,
+        callback=lambda t, ws, st: print(
+            f"  day {t}  window={ws.days_in_window}d f={ws.fs[-1]:9.2f} "
+            f"nnz={ws.nnz:6d} plan={ws.build_seconds * 1e3:5.0f}ms "
+            f"step={ws.step_seconds * 1e3:5.0f}ms"))
+    dt = time.perf_counter() - t0
+    ps = trainer.planner_stats
+    print(f"streamed {DAYS} windows in {dt:.1f}s — host re-planning "
+          f"{ps.build_seconds:.1f}s, only {ps.wait_seconds:.1f}s exposed "
+          f"(overlap ratio {ps.overlap_ratio:.2f})")
+
+    # train-once baseline: the SAME total iteration budget, all on day 0
+    base = StreamTrainer(stream, lam=LAM, beta=BETA, window=1,
+                         inner_iters=INNER * DAYS)
+    base_state, _ = base.run(base.init(theta0), days=1)
+
+    nll_s, auc_s = next_day(trainer.theta(state))
+    nll_b, auc_b = next_day(base.theta(base_state))
+    print(f"\nheld-out day {DAYS} (next day after the stream):")
+    print(f"  train-once on day 0 : NLL {nll_b:.4f}  AUC {auc_b:.4f}")
+    print(f"  streamed (window={WINDOW}): NLL {nll_s:.4f}  AUC {auc_s:.4f}")
+    print(f"  drift makes the stale model pay "
+          f"{(nll_b - nll_s) / nll_s * 100:+.1f}% NLL")
+
+
+if __name__ == "__main__":
+    main()

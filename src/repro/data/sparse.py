@@ -157,6 +157,39 @@ def sparse_predict_flat(theta: jax.Array, ids: jax.Array, vals: jax.Array,
 
 
 # ----------------------------------------------------------------- generator
+def planted_id_weight(ids: np.ndarray, salt: int) -> np.ndarray:
+    """Deterministic latent weight per feature id (hash of the id), so a
+    hot id keeps stable semantics across batches, splits and DAYS — the
+    invariant that makes drifted multi-day streams learnable."""
+    h = (np.asarray(ids).astype(np.uint64) * np.uint64(2654435761)
+         + np.uint64(salt))
+    return (((h % np.uint64(10007)).astype(np.float64) / 10007.0) * 4.0
+            - 2.0).astype(np.float32)
+
+
+def planted_ctr_labels(user_ids, user_vals, ad_ids, ad_vals, session_id,
+                       rng: np.random.Generator) -> np.ndarray:
+    """Sample click labels from the shared piecewise-linear ground truth
+    (Eq. 2 family): every id carries a latent hashed weight
+    (:func:`planted_id_weight`); the USER side selects one of 4 latent
+    regions which modulates the ad-side weights. Used by both the
+    full-batch generator (``generate_sparse``) and the day-sliced stream
+    (``repro.stream.source.DayStream``) so their labels agree wherever
+    their id draws do."""
+    regions = 4
+    session_id = np.asarray(session_id)
+    region_score = np.stack([
+        (user_vals * planted_id_weight(user_ids, 31 * (r + 1))).sum(-1)
+        for r in range(regions)], axis=-1)  # (G, regions)
+    region = np.argmax(region_score, axis=-1)[session_id]  # (B,)
+    gains = np.asarray([2.5, -2.5, 1.0, -1.0], np.float32)[region]
+    base = (ad_vals * planted_id_weight(ad_ids, 7)).sum(-1) \
+        + 0.5 * (user_vals * planted_id_weight(user_ids, 13)).sum(-1)[session_id]
+    logits = gains * base
+    p = 1 / (1 + np.exp(-logits))
+    return (rng.random(session_id.shape[0]) < p).astype(np.float32)
+
+
 def generate_sparse(
     num_features: int = 1_000_000,
     num_user_features_range: tuple[int, int] = (600_000, 1_000_000),
@@ -197,27 +230,10 @@ def generate_sparse(
     ad_vals = rng.normal(size=(B, active_ad)).astype(np.float32) / np.sqrt(active_ad)
     session_id = np.repeat(np.arange(G, dtype=np.int32), A)
 
-    # planted truth: every id carries a latent weight (deterministic hash
-    # of the id, so hot ids have stable semantics across splits); the
-    # USER side selects one of `regions` latent regions which modulates
-    # the ad-side weights — exactly the piecewise-linear family (Eq. 2).
-    regions = 4
-
-    def id_weight(ids, salt):
-        h = (ids.astype(np.uint64) * np.uint64(2654435761) + np.uint64(salt))
-        return (((h % np.uint64(10007)).astype(np.float64) / 10007.0) * 4.0
-                - 2.0).astype(np.float32)
-
-    region_score = np.stack([
-        (user_vals * id_weight(user_ids, 31 * (r + 1))).sum(-1)
-        for r in range(regions)], axis=-1)  # (G, regions)
-    region = np.argmax(region_score, axis=-1)[session_id]  # (B,)
-    gains = np.asarray([2.5, -2.5, 1.0, -1.0], np.float32)[region]
-    base = (ad_vals * id_weight(ad_ids, 7)).sum(-1) \
-        + 0.5 * (user_vals * id_weight(user_ids, 13)).sum(-1)[session_id]
-    logits = gains * base
-    p = 1 / (1 + np.exp(-logits))
-    y = (rng.random(B) < p).astype(np.float32)
+    # planted truth shared with the streaming generator (see
+    # planted_ctr_labels): hashed per-id weights + 4 user-selected regions
+    y = planted_ctr_labels(user_ids, user_vals, ad_ids, ad_vals,
+                           session_id, rng)
 
     batch = SparseCTRBatch(
         user_ids=jnp.asarray(user_ids, jnp.int32),

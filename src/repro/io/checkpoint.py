@@ -1,9 +1,13 @@
 """Checkpointing substrate: flat-npz pytree save/restore.
 
-Works for LS-PLM Theta, OWLQN state (incl. LBFGS history) and transformer
-param trees. Arrays are gathered to host (production note: on a real pod
-each host writes its addressable shards; the npz format is the CPU-sim
-stand-in for that)."""
+Works for LS-PLM Theta, OWLQN state (incl. LBFGS history), transformer
+param trees, and the streaming trainer's :class:`~repro.stream.trainer.
+StreamState` (Theta + OWLQN+ history + day cursor — an interrupted
+stream resumes exactly; python-scalar leaves such as the day cursor are
+restored to python scalars, not 0-d arrays, see ``save_stream`` /
+``load_stream``). Arrays are gathered to host (production note: on a
+real pod each host writes its addressable shards; the npz format is the
+CPU-sim stand-in for that)."""
 from __future__ import annotations
 
 import os
@@ -34,7 +38,10 @@ def save(path: str, tree) -> None:
 
 
 def load(path: str, like):
-    """Restore into the structure of `like` (same treedef)."""
+    """Restore into the structure of `like` (same treedef). Leaves that
+    are python scalars in `like` (static metadata like a stream's day
+    cursor) come back as the same python type, so restored states are
+    drop-in equal to what was saved — not 0-d arrays."""
     data = np.load(path)
     flat = dict(data.items())
 
@@ -47,6 +54,31 @@ def load(path: str, like):
         if isinstance(tree, (list, tuple)):
             return type(tree)(rebuild(v, f"{prefix}{i}/")
                               for i, v in enumerate(tree))
-        return flat[prefix.rstrip("/")]
+        key = prefix.rstrip("/")
+        leaf = flat[key]
+        if isinstance(tree, (bool, int, float)) and not isinstance(
+                tree, np.ndarray):
+            return type(tree)(leaf.item())
+        want = getattr(tree, "shape", None)
+        if want is not None and tuple(leaf.shape) != tuple(want):
+            raise ValueError(
+                f"checkpoint leaf {key!r} has shape {tuple(leaf.shape)}, "
+                f"expected {tuple(want)} — the checkpoint was saved under a "
+                f"different configuration; refusing to restore silently")
+        return leaf
 
     return rebuild(like)
+
+
+def save_stream(path: str, stream_state) -> None:
+    """Checkpoint a streaming trainer state (Theta + OWLQN+ history +
+    day cursor). Plain :func:`save` — named for the call sites."""
+    save(path, stream_state)
+
+
+def load_stream(path: str, like):
+    """Restore a streaming trainer state saved by :func:`save_stream`
+    into the structure of ``like`` (e.g. ``StreamTrainer.init(theta0)``);
+    the day cursor comes back as a python int so the resumed stream
+    continues from exactly the next unconsumed day."""
+    return load(path, like)

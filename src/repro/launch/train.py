@@ -21,6 +21,14 @@ routing via repro.shard):
   PYTHONPATH=src REPRO_DEVICES=8 python -m repro.launch.train --sparse \
       --sessions 512 --sparse-features 100000 --regions 4 \
       --mesh-data 2 --mesh-model 4 --iters 30
+
+Streaming mode (production cadence: day-sliced stream, sliding-window
+minibatch OWLQN+ warm-started across windows, host re-planning +
+compilation overlapped with the device step; composes with the mesh
+flags for the sharded path):
+  PYTHONPATH=src python -m repro.launch.train --stream \
+      --days 8 --window 2 --inner-iters 5 --sessions 256 \
+      --sparse-features 100000 --regions 4 --ckpt /tmp/stream.npz
 """
 import os
 if "REPRO_DEVICES" in os.environ:  # must precede jax import
@@ -137,6 +145,84 @@ def train_sparse(args) -> int:
     return 0
 
 
+def train_stream(args) -> int:
+    """Day-by-day streaming training (repro.stream): per day, the last
+    --window days are re-planned on the host — overlapped with the
+    previous window's device iterations — and OWLQN+ runs --inner-iters
+    warm-started steps. --mesh-data/--mesh-model runs every window on
+    the sharded path (fixed equal id-range partition). --ckpt saves the
+    resumable stream state (Theta + history + day cursor); --resume
+    continues from it."""
+    from repro.core.objective import nll_sparse
+    from repro.data import auc as auc_fn
+    from repro.data.sparse import sparse_predict
+    from repro.stream import DayStream, StreamTrainer
+
+    distributed = args.mesh_data > 0 and args.mesh_model > 0
+    if (args.mesh_data > 0) != (args.mesh_model > 0):
+        raise SystemExit("--mesh-data and --mesh-model must be set together")
+    # np.savez appends .npz to suffix-less paths; normalize up front so
+    # the --resume existence probe and the printed path match the file
+    ckpt = args.ckpt and (args.ckpt if args.ckpt.endswith(".npz")
+                          else args.ckpt + ".npz")
+    d, m = args.sparse_features, args.regions
+    stream = DayStream(args.days, sessions_per_day=args.sessions,
+                       num_features=d, drift=args.drift, seed=args.seed)
+    theta0 = jnp.asarray(
+        0.01 * np.random.default_rng(args.seed).normal(size=(d, 2 * m)),
+        jnp.float32)
+    mesh = None
+    if distributed:
+        assert jax.device_count() >= args.mesh_data * args.mesh_model, (
+            f"need {args.mesh_data * args.mesh_model} devices, "
+            f"have {jax.device_count()} (set REPRO_DEVICES)")
+        mesh = make_debug_mesh(data=args.mesh_data, model=args.mesh_model)
+    trainer = StreamTrainer(
+        stream, lam=args.lam, beta=args.beta, window=args.window,
+        inner_iters=args.inner_iters, history=args.history, mesh=mesh,
+        overlap=not args.sync_planner)
+    print(f"stream: {args.days} days x {args.sessions} sessions, d={d:,}, "
+          f"window={args.window}, {args.inner_iters} inner iters/window, "
+          f"history={args.history}, planner="
+          f"{'synchronous' if args.sync_planner else 'overlapped'}"
+          + (f", mesh data={args.mesh_data} x model={args.mesh_model}"
+             if mesh is not None else ""))
+
+    if args.resume and ckpt and os.path.exists(ckpt):
+        state = trainer.load(ckpt, theta0)
+        print(f"resumed from {ckpt} at day {state.day}")
+    else:
+        state = trainer.init(theta0)
+
+    def cb(t, ws, st):
+        msg = (f"day {t:3d}  window={ws.days_in_window}d "
+               f"f={ws.fs[-1]:12.2f} alpha={ws.alpha:.3g} "
+               f"nnz={ws.nnz:8d} plan={ws.build_seconds * 1e3:6.0f}ms "
+               f"step={ws.step_seconds * 1e3:6.0f}ms")
+        if t + 1 < stream.num_days:  # held-out NEXT-day quality
+            nxt = stream.day(t + 1)
+            theta = trainer.theta(st)
+            nll = float(nll_sparse(theta, nxt)) / nxt.y.shape[0]
+            a = auc_fn(np.asarray(nxt.y),
+                       np.asarray(sparse_predict(theta, nxt)))
+            msg += f"  next-day nll={nll:.4f} auc={a:.4f}"
+        print(msg)
+        if ckpt:  # every window is a resumable checkpoint
+            trainer.save(ckpt, st)
+
+    t0 = time.perf_counter()
+    days_left = stream.num_days - state.day
+    state, _trace = trainer.run(state, callback=cb)
+    dt = time.perf_counter() - t0
+    ps = trainer.planner_stats
+    print(f"trained {days_left} windows in {dt:.1f}s; planner: "
+          f"{ps.build_seconds:.2f}s host build, {ps.wait_seconds:.2f}s "
+          f"exposed, overlap ratio {ps.overlap_ratio:.2f}")
+    if ckpt:
+        print(f"stream checkpoint -> {ckpt} (resume with --resume)")
+    return 0
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--sessions", type=int, default=4000)
@@ -156,8 +242,30 @@ def main():
                          "fused sparse kernel (the paper's input format)")
     ap.add_argument("--sparse-features", type=int, default=1_000_000,
                     help="d for --sparse mode (feature columns)")
+    ap.add_argument("--stream", action="store_true",
+                    help="streaming day-by-day training on the sparse path "
+                         "(repro.stream): sliding-window minibatch OWLQN+ "
+                         "with an overlapped host re-planner")
+    ap.add_argument("--days", type=int, default=8,
+                    help="--stream: days in the synthetic stream")
+    ap.add_argument("--window", type=int, default=2,
+                    help="--stream: sliding window width (days)")
+    ap.add_argument("--inner-iters", type=int, default=5,
+                    help="--stream: OWLQN+ iterations per window")
+    ap.add_argument("--history", choices=("reset", "carry"), default="reset",
+                    help="--stream: L-BFGS history policy at window "
+                         "boundaries (Theta always carries)")
+    ap.add_argument("--drift", type=float, default=0.02,
+                    help="--stream: per-day id-traffic drift fraction")
+    ap.add_argument("--sync-planner", action="store_true",
+                    help="--stream: disable the overlapped background "
+                         "re-planner (synchronous fallback)")
+    ap.add_argument("--resume", action="store_true",
+                    help="--stream: resume from --ckpt if it exists")
     args = ap.parse_args()
 
+    if args.stream:
+        return train_stream(args)
     if args.sparse:
         return train_sparse(args)
 

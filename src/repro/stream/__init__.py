@@ -1,0 +1,19 @@
+"""Streaming training subsystem — the paper's production cadence.
+
+``source``   day-sliced sparse CTR stream with id-traffic drift
+``planner``  double-buffered host re-planner (plans + routing + compile
+             overlapped with the device step)
+``trainer``  warm-started minibatch OWLQN+ across sliding windows
+"""
+from repro.stream.planner import (  # noqa: F401
+    PlannerStats,
+    PreparedWindow,
+    WindowPlanner,
+    plan_window,
+)
+from repro.stream.source import DayStream, concat_batches  # noqa: F401
+from repro.stream.trainer import (  # noqa: F401
+    StreamState,
+    StreamTrainer,
+    WindowStats,
+)

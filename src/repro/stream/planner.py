@@ -1,0 +1,170 @@
+"""Overlapped host re-planner — double-buffer the next window's plans
+(and compile) behind the current window's device steps.
+
+Per window the streaming trainer pays three host-side costs before the
+device can step:
+
+  1. transpose-plan construction (one argsort + linear passes per id
+     tensor — ``data/sparse.build_batch_plans``);
+  2. with a mesh: routing + plan slicing + stacking for the
+     (data x model) grid (``repro.shard.partition`` /
+     ``repro.shard.plan_slicing``) and the device_put;
+  3. (re)compilation of the window's step — plan shapes are
+     data-dependent, so a new window is a new executable (see
+     ``kernels/lsplm_sparse_scatter/plan.py``: re-plan per day is the
+     intended trade).
+
+All three are independent of the CURRENT window's device work, so
+:class:`WindowPlanner` runs them on one background thread
+(``ThreadPoolExecutor``): while the device grinds window t's inner
+OWLQN+ iterations, the host builds window t+1. ``overlap=False`` is the
+synchronous fallback (same results, serial timing) — the bench
+(``benchmarks/bench_stream.py``) measures the speedup between the two.
+
+The planner is generic over what a "prepared window" is: the trainer
+hands it a ``build(day) -> PreparedWindow`` callable; :func:`plan_window`
+is the batch-preparation piece (plans, and routing when a partition /
+mesh is configured).
+
+Overlap accounting: every build is timed inside the worker; every
+``get`` times how long the trainer actually BLOCKED. The overlap ratio
+is the fraction of prefetched build time hidden behind device work —
+``1 - wait / build`` over prefetched windows (the first window of a run
+has nothing to hide behind and is excluded).
+"""
+from __future__ import annotations
+
+import time
+from concurrent.futures import Future, ThreadPoolExecutor
+from typing import Any, Callable, NamedTuple
+
+
+class PreparedWindow(NamedTuple):
+    """Everything the trainer needs to step a window."""
+
+    day: int
+    batch: Any          # planned SparseCTRBatch | routed ShardedSparseBatch
+    step: Any           # callable(state) -> (state, stats), ready to run
+    build_seconds: float = 0.0
+
+
+class PlannerStats(NamedTuple):
+    windows: int                 # windows served
+    build_seconds: float         # total host build time (all windows)
+    wait_seconds: float          # total time the trainer blocked
+    prefetched_build_seconds: float  # build time of prefetched windows
+    prefetched_wait_seconds: float   # blocked time on prefetched windows
+
+    @property
+    def overlap_ratio(self) -> float:
+        """Fraction of prefetched build time hidden behind device work."""
+        if self.prefetched_build_seconds <= 0.0:
+            return 0.0
+        return max(0.0, 1.0 - self.prefetched_wait_seconds
+                   / self.prefetched_build_seconds)
+
+
+def plan_window(batch, *, partition=None, data_shards: int = 1, mesh=None):
+    """Prepare one window's batch for the device: attach fresh transpose
+    plans; with a ``partition`` additionally route + slice + stack for a
+    (data x model) mesh (``repro.shard``), and with a ``mesh`` also
+    device_put the routed batch per ``dist.sparse_batch_specs``. This is
+    the host work the background thread hides."""
+    from repro.data.sparse import build_batch_plans
+
+    if partition is None:
+        if mesh is not None:
+            raise ValueError("mesh given without a partition — the sharded "
+                             "stream routes by id range")
+        return build_batch_plans(batch)
+    sb = build_batch_plans(batch, shards=partition, data_shards=data_shards)
+    if mesh is not None:
+        from repro.dist import shard_sparse_batch
+
+        sb = shard_sparse_batch(mesh, sb)
+    return sb
+
+
+class WindowPlanner:
+    """Double-buffered background builder of :class:`PreparedWindow`s.
+
+    Protocol (the trainer's loop)::
+
+        planner.prefetch(t0)
+        for t in days:
+            win = planner.get(t)       # blocks only on un-hidden build time
+            planner.prefetch(t + 1)    # next window builds DURING stepping
+            ... run win.step inner_iters times ...
+        planner.close()
+
+    ``overlap=False`` degrades ``get`` to a synchronous build (prefetch
+    becomes a no-op) — identical results, serial schedule.
+    """
+
+    def __init__(self, build: Callable[[int], PreparedWindow], *,
+                 overlap: bool = True):
+        self._build = build
+        self._pool = ThreadPoolExecutor(
+            max_workers=1, thread_name_prefix="replanner") if overlap else None
+        self._pending: dict[int, Future] = {}
+        self._windows = 0
+        self._build_s = 0.0
+        self._wait_s = 0.0
+        self._pre_build_s = 0.0
+        self._pre_wait_s = 0.0
+
+    @property
+    def overlap(self) -> bool:
+        return self._pool is not None
+
+    def _timed(self, day: int) -> PreparedWindow:
+        t0 = time.perf_counter()
+        out = self._build(day)
+        dt = time.perf_counter() - t0
+        return out._replace(build_seconds=dt)
+
+    def prefetch(self, day: int) -> None:
+        """Start building ``day`` in the background (no-op when
+        synchronous or already pending)."""
+        if self._pool is None or day in self._pending:
+            return
+        self._pending[day] = self._pool.submit(self._timed, day)
+
+    def get(self, day: int) -> PreparedWindow:
+        """The prepared window for ``day`` — joins the background build if
+        one is pending, else builds synchronously right here."""
+        fut = self._pending.pop(day, None)
+        t0 = time.perf_counter()
+        if fut is None:
+            out = self._timed(day)
+            wait = out.build_seconds  # fully exposed
+        else:
+            out = fut.result()
+            wait = time.perf_counter() - t0
+            self._pre_build_s += out.build_seconds
+            self._pre_wait_s += min(wait, out.build_seconds)
+        self._windows += 1
+        self._build_s += out.build_seconds
+        self._wait_s += wait
+        return out
+
+    @property
+    def stats(self) -> PlannerStats:
+        return PlannerStats(
+            windows=self._windows, build_seconds=self._build_s,
+            wait_seconds=self._wait_s,
+            prefetched_build_seconds=self._pre_build_s,
+            prefetched_wait_seconds=self._pre_wait_s)
+
+    def close(self) -> None:
+        for fut in self._pending.values():
+            fut.cancel()
+        self._pending.clear()
+        if self._pool is not None:
+            self._pool.shutdown(wait=True)
+
+    def __enter__(self) -> "WindowPlanner":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

@@ -1,0 +1,286 @@
+"""Streaming day-by-day OWLQN+ — minibatch windows with warm starts.
+
+The paper's optimizer is full-batch: one batch, hundreds of iterations.
+Production retrains as days arrive. :class:`StreamTrainer` runs that
+cadence over a :class:`~repro.stream.source.DayStream`: for each day t
+it takes the sliding window of the last W days, re-plans it on the host
+(overlapped with the previous window's device steps via
+:class:`~repro.stream.planner.WindowPlanner`), and runs a bounded number
+of OWLQN+ inner iterations warm-started from the previous window's
+Theta.
+
+Reset-vs-carry policy (``history=``): Theta ALWAYS carries across
+windows (the warm start is the point of streaming). The L-BFGS history
+is different — its (s, y) pairs approximate the curvature of the
+PREVIOUS window's objective, and the objective changes when the window
+slides:
+
+  * ``"reset"`` (default): drop the history (and prev_theta/prev_d) at
+    every window boundary. The first inner iteration of each window is
+    then a pure Eq. 9 direction step. Safe, and exactly reproduces the
+    full-batch trajectory when the window never changes — the streaming
+    parity gate in tests/test_stream_trainer.py.
+  * ``"carry"``: keep the history across the boundary. The pair pushed
+    at the boundary mixes directions of two objectives; OWLQN+'s PD
+    safeguard (pairs with y.s <= 0 are masked) drops genuinely
+    inconsistent pairs, so with small drift the curvature carry-over
+    saves inner iterations. With large drift prefer ``"reset"``.
+
+Exact-zero sparsity crosses window boundaries untouched by
+construction: the warm start copies Theta bit-for-bit and OWLQN+'s
+orthant algebra is sign-exact, so a feature that L1/L2,1 pushed to exact
+zero stays exact zero until some window's data argues it back in
+(asserted in tests/test_stream_trainer.py).
+
+With a mesh the whole thing runs the paper's worker/server split per
+window: the planner routes + slices + stacks per-shard plans
+(``repro.shard``), the step is ``dist.make_distributed_step`` on the
+row-sharded state, and the id-range partition is FIXED across windows
+(equal ranges) so Theta never re-layouts at a boundary.
+
+Because plan shapes are data-dependent, every window is a fresh XLA
+executable; the trainer therefore AOT-compiles the window's step
+(``jit(...).lower(...).compile()``) INSIDE the planner's background
+thread (``jit_ahead=True``), hiding compilation behind device work along
+with plan construction — this is most of the overlap win measured by
+``benchmarks/bench_stream.py``.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, NamedTuple
+
+import jax
+
+from repro.core.objective import smooth_loss_and_grad
+from repro.optim.owlqn_plus import OWLQNPlus, OWLQNState
+from repro.stream.planner import PlannerStats, PreparedWindow, WindowPlanner
+from repro.stream.source import DayStream
+
+
+class StreamState(NamedTuple):
+    """Checkpointable streaming-trainer state: the optimizer state (Theta
+    + L-BFGS history + step counter) and the day cursor (the NEXT day to
+    consume). Round-trips exactly through ``repro.io.checkpoint``."""
+
+    opt: OWLQNState
+    day: int = 0
+
+
+class WindowStats(NamedTuple):
+    day: int                  # window end day
+    days_in_window: int
+    fs: tuple                 # objective after each inner iteration
+    alpha: float              # last accepted step size
+    nnz: int                  # non-zeros after the window
+    step_seconds: float       # device time for the inner iterations
+    build_seconds: float      # host time to plan (+route/compile) the window
+
+
+def _no_loss(_theta):
+    raise RuntimeError("template optimizer has no loss bound; "
+                       "windows bind their own")
+
+
+class StreamTrainer:
+    """Minibatch OWLQN+ over a day stream with an overlapped re-planner.
+
+    Args:
+      stream: the :class:`DayStream` (or anything with ``num_days``,
+        ``num_features``, ``sessions_per_day``, ``window(t, W)``).
+      lam, beta: the Eq. 4 L2,1 / L1 weights.
+      window: sliding-window width W in days.
+      inner_iters: OWLQN+ iterations per window (the per-window budget).
+      history: ``"reset"`` or ``"carry"`` — see the module docstring.
+      mesh: optional (data x model) mesh; the stream then trains the
+        sharded path per window with a FIXED equal id-range partition.
+      overlap: background re-planner on/off (off = synchronous fallback).
+      jit_ahead: AOT-compile each window's step in the planner thread.
+    """
+
+    def __init__(self, stream: DayStream, *, lam: float, beta: float,
+                 window: int = 1, inner_iters: int = 5,
+                 history: str = "reset", memory: int = 10,
+                 mesh=None, partition=None, overlap: bool = True,
+                 jit_ahead: bool = True, mode: str = "auto"):
+        if history not in ("reset", "carry"):
+            raise ValueError(f"history must be 'reset' or 'carry', "
+                             f"got {history!r}")
+        if window < 1 or inner_iters < 1:
+            raise ValueError("window and inner_iters must be >= 1")
+        self.stream = stream
+        self.lam, self.beta = float(lam), float(beta)
+        self.window = int(window)
+        self.inner_iters = int(inner_iters)
+        self.history = history
+        self.memory = int(memory)
+        self.mesh = mesh
+        self.overlap = bool(overlap)
+        self.jit_ahead = bool(jit_ahead)
+        self.mode = mode
+        self.planner_stats = PlannerStats(0, 0.0, 0.0, 0.0, 0.0)
+
+        self.partition = partition
+        self.data_shards = 1
+        if mesh is not None:
+            from repro.launch.mesh import data_axes
+            from repro.shard.partition import make_partition
+
+            if self.partition is None:
+                self.partition = make_partition(stream.num_features,
+                                                mesh.shape["model"])
+            if self.partition.num_rows != stream.num_features:
+                raise ValueError(
+                    f"partition covers {self.partition.num_rows} rows, "
+                    f"stream has {stream.num_features} features")
+            for a in data_axes(mesh):
+                self.data_shards *= mesh.shape[a]
+            if stream.sessions_per_day % self.data_shards:
+                raise ValueError(
+                    f"sessions_per_day={stream.sessions_per_day} must divide "
+                    f"by the mesh's data extent {self.data_shards}")
+        elif partition is not None:
+            raise ValueError("partition given without a mesh")
+        # template optimizer: init/state algebra only (no loss bound)
+        self._template = OWLQNPlus(_no_loss, lam=self.lam, beta=self.beta,
+                                   memory=self.memory)
+        self._opt_struct = None  # ShapeDtypeStructs for AOT lowering
+
+    # ------------------------------------------------------------ state mgmt
+    def init(self, theta0) -> StreamState:
+        """Fresh stream state at day 0. With a mesh, ``theta0`` is the
+        global (d, 2m) Theta — it is padded to the partition's row layout
+        and the whole state device_put row-sharded."""
+        if self.mesh is not None:
+            from repro.dist import shard_state
+
+            opt = shard_state(
+                self._template.init(self.partition.pad_rows(theta0)),
+                self.mesh)
+        else:
+            opt = self._template.init(theta0)
+        return StreamState(opt=opt, day=0)
+
+    def theta(self, state: StreamState):
+        """The global (d, 2m) Theta of a stream state (host-side; pad rows
+        dropped on the sharded path)."""
+        import jax.numpy as jnp
+
+        th = jnp.asarray(jax.device_get(state.opt.theta))
+        return th if self.mesh is None else self.partition.unpad_rows(th)
+
+    def save(self, path: str, state: StreamState) -> None:
+        """Checkpoint the stream (Theta + OWLQN+ history + day cursor)."""
+        from repro.io import checkpoint
+
+        checkpoint.save_stream(path, state)
+
+    def load(self, path: str, theta_like) -> StreamState:
+        """Resume a checkpointed stream exactly. ``theta_like`` provides
+        the global Theta shape/dtype (values ignored)."""
+        from repro.io import checkpoint
+
+        st = checkpoint.load_stream(path, self.init(theta_like))
+        if self.mesh is not None:
+            from repro.dist import shard_state
+
+            st = st._replace(opt=shard_state(st.opt, self.mesh))
+        return st
+
+    # ------------------------------------------------------------ per window
+    def _make_loss(self, batch) -> Callable:
+        if self.mesh is None:
+            return lambda t: smooth_loss_and_grad(t, batch)
+        from repro.shard.step import make_sharded_sparse_loss
+
+        return make_sharded_sparse_loss(batch, self.mesh, mode=self.mode)
+
+    def _prepare(self, day: int) -> PreparedWindow:
+        """Build one window end-to-end on the host: slide + re-plan
+        (+ route/stack + device_put on a mesh) + bind the loss +
+        (optionally) AOT-compile the step. Runs on the planner thread."""
+        from repro.stream.planner import plan_window
+
+        raw = self.stream.window(day, self.window)
+        batch = plan_window(raw, partition=self.partition,
+                            data_shards=self.data_shards, mesh=self.mesh)
+        opt = OWLQNPlus(self._make_loss(batch), lam=self.lam, beta=self.beta,
+                        memory=self.memory)
+        if self.mesh is not None:
+            from repro.dist import make_distributed_step
+
+            step = make_distributed_step(opt, self.mesh)
+        else:
+            step = jax.jit(opt.step)
+        if self.jit_ahead and self._opt_struct is not None:
+            step = step.lower(self._opt_struct).compile()
+        return PreparedWindow(day=day, batch=batch, step=step)
+
+    def _window_start(self, win: PreparedWindow,
+                      opt_state: OWLQNState) -> OWLQNState:
+        """Apply the reset-vs-carry policy at a window boundary. Theta
+        always carries (bit-exact warm start); ``"reset"`` re-inits the
+        history/prev_* around it."""
+        if self.history == "carry":
+            return opt_state
+        fresh = self._template.init(opt_state.theta)
+        if self.mesh is not None:
+            from repro.dist import shard_state
+
+            fresh = shard_state(fresh, self.mesh)
+        return fresh
+
+    # ---------------------------------------------------------------- driver
+    def run(self, state: StreamState, days: int | None = None, *,
+            callback: Callable[[int, WindowStats, StreamState],
+                               None] | None = None,
+            ) -> tuple[StreamState, list[WindowStats]]:
+        """Consume ``days`` windows starting at ``state.day`` (default: to
+        the end of the stream). ``callback(day, stats, state)`` fires
+        after each window with the ADVANCED state (for eval /
+        checkpointing mid-stream). Returns the advanced state and
+        per-window stats; ``self.planner_stats`` holds the run's overlap
+        accounting."""
+        start = int(state.day)
+        if days is None:
+            days = self.stream.num_days - start
+        if days <= 0:
+            return state, []
+        if start + days > self.stream.num_days:
+            raise ValueError(f"stream has {self.stream.num_days} days; "
+                             f"cannot run [{start}, {start + days})")
+        self._opt_struct = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), state.opt)
+        trace: list[WindowStats] = []
+        planner = WindowPlanner(self._prepare, overlap=self.overlap)
+        try:
+            # the FIRST window has no device work to hide behind — let
+            # get() build it synchronously so the overlap stats only
+            # count windows that genuinely could overlap
+            for i in range(days):
+                t = start + i
+                win = planner.get(t)
+                if i + 1 < days:  # next window builds WHILE we step
+                    planner.prefetch(t + 1)
+                opt_state = self._window_start(win, state.opt)
+                t0 = time.perf_counter()
+                fs = []
+                last = None
+                for _ in range(self.inner_iters):
+                    opt_state, last = win.step(opt_state)
+                    fs.append(float(last.f_new))
+                jax.block_until_ready(opt_state.theta)
+                dt = time.perf_counter() - t0
+                state = StreamState(opt=opt_state, day=t + 1)
+                ws = WindowStats(
+                    day=t, days_in_window=min(self.window, t + 1),
+                    fs=tuple(fs), alpha=float(last.alpha),
+                    nnz=int(last.nnz), step_seconds=dt,
+                    build_seconds=win.build_seconds)
+                trace.append(ws)
+                if callback is not None:
+                    callback(t, ws, state)
+        finally:
+            self.planner_stats = planner.stats
+            planner.close()
+        return state, trace

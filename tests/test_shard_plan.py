@@ -175,6 +175,51 @@ def test_cell_plan_roundtrip_and_none():
     _assert_plans_equal(cell_plan(stacked), plan)
 
 
+def test_restrict_plan_window_edges():
+    """Window edges the streaming trainer produces: empty window,
+    single-sample window, and boundaries that split a SESSION's samples
+    (restriction is by sample index — nothing requires it to respect the
+    session grouping). Each restricted plan must be bit-identical to a
+    fresh build on the restricted ids."""
+    rng = np.random.default_rng(9)
+    d, K, A = 300, 5, 4          # A samples (ads) per session
+    N = 6 * A                    # 6 sessions
+    ids = rng.integers(0, d, (N, K))
+    ids[rng.random((N, K)) < 0.3] = d  # pads
+    plan = build_transpose_plan(ids, d + 1, pad_id=d)
+    windows = [
+        (0, 0),            # empty window at the start
+        (N // 2, N // 2),  # empty window inside
+        (N, N),            # empty window at the end
+        (7, 8),            # single sample (mid-session)
+        (0, N),            # identity window
+        (2, 10),           # splits session 0 AND session 2
+        (A, 3 * A),        # session-aligned (the common case)
+        (N - 3, N),        # tail splitting the last session
+    ]
+    for (n0, n1) in windows:
+        got = restrict_plan(plan, n0, n1, num_cols=K)
+        want = build_transpose_plan(ids[n0:n1], d + 1, pad_id=d)
+        assert got.num_entries == (n1 - n0) * K
+        _assert_plans_equal(got, want)
+    # an empty restriction still drives the scatter (to all zeros)
+    empty = restrict_plan(plan, 3, 3, num_cols=K)
+    out = scatter_add_planned(empty, jnp.zeros((0, K)),
+                              jnp.zeros((0, 2)), mode="jnp")
+    assert out.shape == (d + 1, 2)
+    assert not np.asarray(out).any()
+
+
+def test_restrict_plan_bad_ranges():
+    ids = np.array([[0, 1], [2, 3], [1, 2]])
+    plan = build_transpose_plan(ids, 5, pad_id=4)
+    for (n0, n1) in [(-1, 2), (2, 1), (0, 4), (4, 4)]:
+        with pytest.raises(ValueError, match="bad sample range"):
+            restrict_plan(plan, n0, n1, num_cols=2)
+    with pytest.raises(ValueError, match="does not divide"):
+        restrict_plan(plan, 0, 1, num_cols=4)
+
+
 def test_slice_plan_errors():
     ids = np.array([[0, 1], [2, 3]])
     plan = build_transpose_plan(ids, 5, pad_id=4)

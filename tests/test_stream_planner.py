@@ -1,0 +1,103 @@
+"""WindowPlanner / plan_window invariants: background builds return
+exactly what a synchronous build returns, plans attached by plan_window
+are bit-identical to build_batch_plans, and the overlap accounting adds
+up."""
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.data.sparse import build_batch_plans
+from repro.stream import DayStream, WindowPlanner, plan_window
+from repro.stream.planner import PreparedWindow
+
+
+def _stream():
+    return DayStream(4, sessions_per_day=16, num_features=1500,
+                     active_user=6, active_ad=4, seed=3)
+
+
+def _plans_equal(a, b):
+    la, auxa = jax.tree.flatten(a)
+    lb, auxb = jax.tree.flatten(b)
+    assert auxa == auxb
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_plan_window_matches_build_batch_plans():
+    s = _stream()
+    raw = s.window(1, 2)
+    got = plan_window(raw)
+    want = build_batch_plans(raw)
+    _plans_equal(got.user_plan, want.user_plan)
+    _plans_equal(got.ad_plan, want.ad_plan)
+    np.testing.assert_array_equal(np.asarray(got.ad_ids),
+                                  np.asarray(want.ad_ids))
+
+
+def test_plan_window_routed_matches_manual_route():
+    from repro.shard import make_partition, route_batch
+
+    s = _stream()
+    raw = s.window(2, 2)
+    part = make_partition(s.num_features, 3)
+    got = plan_window(raw, partition=part, data_shards=2)
+    want = route_batch(build_batch_plans(raw), part, data_shards=2)
+    assert got.bounds == want.bounds
+    np.testing.assert_array_equal(np.asarray(got.user_ids),
+                                  np.asarray(want.user_ids))
+    _plans_equal(got.ad_plan, want.ad_plan)
+
+
+def test_plan_window_mesh_requires_partition():
+    with pytest.raises(ValueError, match="partition"):
+        plan_window(_stream().day(0), mesh=object())
+
+
+def _build(day: int) -> PreparedWindow:
+    time.sleep(0.05)  # measurable build
+    return PreparedWindow(day=day, batch=("batch", day), step=None)
+
+
+@pytest.mark.parametrize("overlap", [False, True])
+def test_planner_returns_same_windows(overlap):
+    planner = WindowPlanner(_build, overlap=overlap)
+    with planner:
+        got = []
+        for t in range(3):
+            win = planner.get(t)
+            planner.prefetch(t + 1)
+            got.append(win)
+            time.sleep(0.08)  # "device work" the build can hide behind
+    assert [w.day for w in got] == [0, 1, 2]
+    assert [w.batch for w in got] == [("batch", t) for t in range(3)]
+    assert all(w.build_seconds > 0 for w in got)
+    st = planner.stats
+    assert st.windows == 3
+    assert st.build_seconds >= 3 * 0.05
+    if overlap:
+        # windows 1..2 were prefetched and fully hidden behind the sleep
+        assert st.prefetched_build_seconds > 0
+        assert st.overlap_ratio > 0.5, st
+    else:
+        assert st.prefetched_build_seconds == 0.0
+        assert st.overlap_ratio == 0.0
+
+
+def test_planner_sync_get_without_prefetch():
+    planner = WindowPlanner(_build, overlap=True)
+    with planner:
+        win = planner.get(5)  # never prefetched -> builds inline
+    assert win.day == 5
+    st = planner.stats
+    assert st.prefetched_build_seconds == 0.0
+    assert st.wait_seconds >= win.build_seconds
+
+
+def test_planner_close_cancels_pending():
+    planner = WindowPlanner(_build, overlap=True)
+    planner.prefetch(0)
+    planner.close()  # must not hang or raise
+    assert planner.stats.windows == 0

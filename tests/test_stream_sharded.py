@@ -1,0 +1,108 @@
+"""Sharded streaming smoke: the streaming trainer on a (data x model)
+mesh must reproduce (a) the sharded full-batch OWLQN+ trajectory
+bit-for-bit when the window is the full dataset, and (b) the
+SINGLE-DEVICE streaming trajectory to fp32 tolerance across several
+drifting windows — with checkpoints resuming exactly.
+
+Runs in a subprocess so XLA_FLAGS can force 8 host devices without
+polluting the main test process (same pattern as test_shard_step.py);
+REPRO_DEVICES overrides the device count (the CI stream job sets 8).
+"""
+import os
+import subprocess
+import sys
+
+import pytest
+
+SCRIPT = r"""
+import os
+DEV = int(os.environ.get("REPRO_DEVICES", "8"))
+os.environ["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={DEV}"
+MESH_DATA, MESH_MODEL = 2, 4
+import numpy as np
+import jax, jax.numpy as jnp
+assert jax.device_count() >= MESH_DATA * MESH_MODEL, jax.device_count()
+
+from repro.data.sparse import build_batch_plans
+from repro.dist import make_distributed_step, shard_sparse_batch, shard_state
+from repro.launch.mesh import make_debug_mesh
+from repro.optim import OWLQNPlus
+from repro.shard import make_partition, make_sharded_sparse_loss
+from repro.stream import DayStream, StreamTrainer
+
+D, d, m = 3, 600, 2
+stream = DayStream(D, sessions_per_day=16, num_features=d, active_user=6,
+                   active_ad=4, seed=4)
+theta0 = jnp.asarray(
+    0.01 * np.random.default_rng(0).normal(size=(d, 2 * m)), jnp.float32)
+mesh = make_debug_mesh(data=MESH_DATA, model=MESH_MODEL)
+part = make_partition(d, MESH_MODEL)
+
+# ---- (a) full-window parity vs the sharded full-batch path, bit-for-bit
+full = stream.window(D - 1, D)
+sb = shard_sparse_batch(
+    mesh, build_batch_plans(full, shards=part, data_shards=MESH_DATA))
+opt = OWLQNPlus(make_sharded_sparse_loss(sb, mesh), lam=0.1, beta=0.1)
+st = shard_state(opt.init(part.pad_rows(theta0)), mesh)
+step = make_distributed_step(opt, mesh)
+fs_ref = []
+for _ in range(3):
+    st, stats = step(st)
+    fs_ref.append(float(stats.f_new))
+
+tr = StreamTrainer(stream, lam=0.1, beta=0.1, window=D, inner_iters=3,
+                   mesh=mesh)
+state = tr.init(theta0)._replace(day=D - 1)
+state, trace = tr.run(state, days=1)
+assert list(trace[0].fs) == fs_ref, (trace[0].fs, fs_ref)
+np.testing.assert_array_equal(
+    np.asarray(part.unpad_rows(jnp.asarray(jax.device_get(st.theta)))),
+    np.asarray(tr.theta(state)))
+# theta really stayed row-sharded over 'model'
+shapes = {s.data.shape for s in state.opt.theta.addressable_shards}
+assert shapes == {(part.rows_per_shard, 2 * m)}, shapes
+
+# ---- (b) multi-window drift run: sharded == single-device (fp32 tol),
+#      both carry policies; checkpoint resumes exactly
+for history in ("reset", "carry"):
+    tr1 = StreamTrainer(stream, lam=0.1, beta=0.1, window=2, inner_iters=2,
+                        history=history)
+    s1, t1 = tr1.run(tr1.init(theta0))
+    trm = StreamTrainer(stream, lam=0.1, beta=0.1, window=2, inner_iters=2,
+                        history=history, mesh=mesh)
+    sm, tm = trm.run(trm.init(theta0))
+    np.testing.assert_allclose([f for w in t1 for f in w.fs],
+                               [f for w in tm for f in w.fs], rtol=2e-4)
+    th1, thm = np.asarray(tr1.theta(s1)), np.asarray(trm.theta(sm))
+    np.testing.assert_allclose(th1, thm, rtol=2e-3, atol=2e-5)
+    np.testing.assert_array_equal(th1 == 0.0, thm == 0.0)
+
+import tempfile
+trm = StreamTrainer(stream, lam=0.1, beta=0.1, window=2, inner_iters=2,
+                    mesh=mesh)
+mid, _ = trm.run(trm.init(theta0), days=2)
+with tempfile.TemporaryDirectory() as td:
+    path = td + "/stream.npz"
+    trm.save(path, mid)
+    back = trm.load(path, theta0)
+assert back.day == 2 and type(back.day) is int
+fin_a, ta = trm.run(mid, days=1)
+fin_b, tb = trm.run(back, days=1)
+assert [w.fs for w in ta] == [w.fs for w in tb]
+np.testing.assert_array_equal(np.asarray(trm.theta(fin_a)),
+                              np.asarray(trm.theta(fin_b)))
+print("STREAM-SHARD-OK")
+"""
+
+
+@pytest.mark.slow
+def test_sharded_streaming_matches_single_device():
+    env = os.environ.copy()
+    env["PYTHONPATH"] = "src"
+    r = subprocess.run(
+        [sys.executable, "-c", SCRIPT],
+        capture_output=True, text=True, env=env,
+        cwd=os.path.dirname(os.path.dirname(__file__)), timeout=600,
+    )
+    assert r.returncode == 0, f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr}"
+    assert "STREAM-SHARD-OK" in r.stdout

@@ -1,0 +1,115 @@
+"""DayStream invariants: determinism, shapes, window concatenation, and
+the drift structure the streaming NLL gate relies on (adjacent days
+share id traffic, distant days do not)."""
+import numpy as np
+import pytest
+
+from repro.stream import DayStream, concat_batches
+
+STREAM_KW = dict(sessions_per_day=24, num_features=3000, active_user=8,
+                 active_ad=5, seed=7)
+
+
+def _stream(days=5, **over):
+    kw = {**STREAM_KW, **over}
+    return DayStream(days, **kw)
+
+
+def test_day_shapes_and_determinism():
+    s = _stream()
+    b = s.day(2)
+    G, A = s.sessions_per_day, s.ads_per_session
+    assert b.user_ids.shape == (G, s.active_user)
+    assert b.ad_ids.shape == (G * A, s.active_ad)
+    assert b.session_id.shape == b.y.shape == (G * A,)
+    assert b.num_features == s.num_features
+    assert b.user_plan is None and b.ad_plan is None
+    assert set(np.unique(np.asarray(b.y))) <= {0.0, 1.0}
+    # ids in their segments
+    uid, aid = np.asarray(b.user_ids), np.asarray(b.ad_ids)
+    assert uid.min() >= s.user_lo and uid.max() < s.num_features
+    assert aid.min() >= 0 and aid.max() < s.user_lo
+    # same (seed, day) -> bit-identical batch; different day differs
+    s2 = _stream()
+    np.testing.assert_array_equal(np.asarray(s2.day(2).user_ids), uid)
+    np.testing.assert_array_equal(np.asarray(s2.day(2).y), np.asarray(b.y))
+    assert not np.array_equal(np.asarray(s.day(3).user_ids), uid)
+
+
+def test_window_concatenates_days_in_order():
+    s = _stream()
+    w = s.window(3, 2)  # days 2 and 3
+    G, A = s.sessions_per_day, s.ads_per_session
+    assert w.user_ids.shape[0] == 2 * G
+    assert w.ad_ids.shape[0] == 2 * G * A
+    np.testing.assert_array_equal(
+        np.asarray(w.user_ids),
+        np.concatenate([np.asarray(s.day(2).user_ids),
+                        np.asarray(s.day(3).user_ids)]))
+    np.testing.assert_array_equal(
+        np.asarray(w.y),
+        np.concatenate([np.asarray(s.day(2).y), np.asarray(s.day(3).y)]))
+    # sessions stay contiguous ascending (route_batch's requirement)
+    sid = np.asarray(w.session_id)
+    np.testing.assert_array_equal(np.unique(sid), np.arange(2 * G))
+    assert np.all(np.diff(sid) >= 0)
+    # early days clamp: window 4 at day 1 = days 0..1
+    w01 = s.window(1, 4)
+    assert w01.user_ids.shape[0] == 2 * G
+    # window 1 is the day itself
+    np.testing.assert_array_equal(np.asarray(s.window(2, 1).ad_ids),
+                                  np.asarray(s.day(2).ad_ids))
+
+
+def test_drift_decays_coverage_of_stale_models():
+    """Fraction of day t's id traffic already seen on day t-1 must stay
+    roughly flat, while coverage by day 0 decays — this is the property
+    that makes streaming beat train-once."""
+    s = _stream(days=10, drift=0.06, head_width=0.06, head_frac=0.85)
+    ids = [np.concatenate([np.asarray(s.day(t).user_ids).reshape(-1),
+                           np.asarray(s.day(t).ad_ids).reshape(-1)])
+           for t in range(10)]
+
+    def cover(train, test):
+        seen = set(train.tolist())
+        return np.mean([x in seen for x in test.tolist()])
+
+    adj = np.mean([cover(ids[t - 1], ids[t]) for t in range(1, 10)])
+    stale = cover(ids[0], ids[9])
+    assert adj > 2 * stale, (adj, stale)
+
+
+def test_concat_batches_errors_and_identity():
+    s = _stream()
+    with pytest.raises(ValueError, match="at least one"):
+        concat_batches([])
+    other = _stream(num_features=4000)
+    with pytest.raises(ValueError, match="disagree"):
+        concat_batches([s.day(0), other.day(0)])
+    one = concat_batches([s.day(1)])
+    np.testing.assert_array_equal(np.asarray(one.user_ids),
+                                  np.asarray(s.day(1).user_ids))
+
+
+def test_day_cache_bounded_and_eviction_deterministic():
+    s = _stream(days=8, cache_days=3)
+    first = np.asarray(s.day(0).user_ids)
+    for t in range(8):
+        s.day(t)
+    assert len(s._cache) <= 3
+    assert 0 not in s._cache  # oldest evicted...
+    np.testing.assert_array_equal(np.asarray(s.day(0).user_ids), first)
+
+
+def test_stream_protocol_and_bounds():
+    s = _stream(days=3)
+    assert len(s) == 3
+    assert len(list(iter(s))) == 3
+    with pytest.raises(IndexError):
+        s.day(3)
+    with pytest.raises(IndexError):
+        s.day(-1)
+    with pytest.raises(ValueError):
+        s.window(1, 0)
+    with pytest.raises(ValueError):
+        DayStream(0)

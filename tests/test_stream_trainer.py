@@ -1,0 +1,190 @@
+"""Streaming trainer gates.
+
+  * PARITY: with window = full dataset and carry disabled, the streaming
+    trainer's trajectory is bit-for-bit the full-batch OWLQN+ path
+    (same f trace, same Theta) — the planner, the AOT-compiled step and
+    the warm-start plumbing change WHEN things happen, never WHAT.
+  * SPARSITY: exact zeros cross window boundaries exactly (rows whose
+    ids are absent from a window keep their bits).
+  * DRIFT: on a drifted multi-day stream, held-out next-day NLL beats a
+    train-once baseline with the same total iteration budget.
+  * CHECKPOINT: save -> load resumes the stream exactly (Theta + OWLQN+
+    history + day cursor), continuing bit-for-bit.
+"""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.objective import nll_sparse, smooth_loss_and_grad
+from repro.data.sparse import build_batch_plans
+from repro.optim import OWLQNPlus
+from repro.stream import DayStream, StreamTrainer
+
+
+def _theta0(d, m=2, seed=0):
+    return jnp.asarray(
+        0.01 * np.random.default_rng(seed).normal(size=(d, 2 * m)),
+        jnp.float32)
+
+
+def _small_stream(days=3, **over):
+    kw = dict(sessions_per_day=16, num_features=1200, active_user=6,
+              active_ad=4, seed=2)
+    kw.update(over)
+    return DayStream(days, **kw)
+
+
+@pytest.mark.parametrize("overlap", [False, True])
+def test_streaming_matches_full_batch_bit_for_bit(overlap):
+    """window = full dataset, carry disabled -> the full-batch trajectory."""
+    D = 3
+    s = _small_stream(D)
+    theta0 = _theta0(s.num_features)
+    iters = 4
+
+    full = build_batch_plans(s.window(D - 1, D))
+    opt = OWLQNPlus(lambda t: smooth_loss_and_grad(t, full), lam=0.1, beta=0.1)
+    st = opt.init(theta0)
+    step = jax.jit(opt.step)
+    fs_ref = []
+    for _ in range(iters):
+        st, stats = step(st)
+        fs_ref.append(float(stats.f_new))
+
+    tr = StreamTrainer(s, lam=0.1, beta=0.1, window=D, inner_iters=iters,
+                       history="reset", overlap=overlap)
+    state = tr.init(theta0)._replace(day=D - 1)
+    state, trace = tr.run(state, days=1)
+    assert list(trace[0].fs) == fs_ref
+    np.testing.assert_array_equal(np.asarray(jax.device_get(st.theta)),
+                                  np.asarray(tr.theta(state)))
+    assert state.day == D
+    assert trace[0].days_in_window == D
+
+
+def test_exact_zero_sparsity_across_window_boundaries():
+    """A row L1/L2,1 pushed to EXACT zero must stay exact zero until a
+    window's data references it again: zero rows with zero gradient have
+    a zero Eq. 9 direction, and the warm start copies bits. (Untouched
+    NONZERO rows legitimately keep shrinking — the regularizer applies
+    everywhere — so the invariant is about zeros, not about all
+    untouched rows.)"""
+    D = 3
+    s = _small_stream(D, num_features=4000)
+    d = s.num_features
+    theta0 = _theta0(d)
+    tr = StreamTrainer(s, lam=0.3, beta=0.3, window=1, inner_iters=3)
+    state = tr.init(theta0)
+    checked = 0
+    for t in range(D):
+        prev = tr.theta(state) if t else None
+        state, _ = tr.run(state, days=1)
+        th = np.asarray(tr.theta(state))
+        wb = s.window(t, 1)
+        touched = np.zeros(d, bool)
+        for ids in (np.asarray(wb.user_ids), np.asarray(wb.ad_ids)):
+            touched[ids.reshape(-1)] = True
+        if prev is not None:
+            zero_rows = ~np.asarray(prev).any(axis=1)
+            keep = zero_rows & ~touched
+            assert not th[keep].any(), int((th[keep] != 0).sum())
+            checked += int(keep.sum())
+    assert checked > 0, "no exact-zero untouched rows crossed a boundary"
+
+
+def test_history_carry_runs_and_uses_safeguard():
+    s = _small_stream(3)
+    tr = StreamTrainer(s, lam=0.1, beta=0.1, window=2, inner_iters=2,
+                       history="carry")
+    state, trace = tr.run(tr.init(_theta0(s.num_features)))
+    assert state.day == 3 and len(trace) == 3
+    # the carried state keeps counting steps across windows
+    assert int(state.opt.step) == 6
+    assert all(np.isfinite(f) for w in trace for f in w.fs)
+
+
+def test_streaming_beats_train_once_on_next_day_nll():
+    """The drifted-stream gate (acceptance criterion): same total
+    iteration budget, streamed warm starts vs everything on day 0."""
+    d, m, DAYS = 400, 4, 6
+    s = DayStream(DAYS + 1, sessions_per_day=192, num_features=d,
+                  active_user=8, active_ad=5, drift=0.06, head_width=0.06,
+                  head_frac=0.85, seed=11)
+    theta0 = _theta0(d, m=m)
+    held = s.day(DAYS)
+    B = held.y.shape[0]
+
+    def nll(trainer, state):
+        return float(nll_sparse(trainer.theta(state), held)) / B
+
+    base = StreamTrainer(s, lam=0.25, beta=0.25, window=1,
+                         inner_iters=5 * DAYS)
+    sb, _ = base.run(base.init(theta0), days=1)
+    stream = StreamTrainer(s, lam=0.25, beta=0.25, window=2, inner_iters=5)
+    ss, _ = stream.run(stream.init(theta0), days=DAYS)
+    nll_base, nll_stream = nll(base, sb), nll(stream, ss)
+    assert nll_stream < nll_base - 0.02, (nll_stream, nll_base)
+
+
+def test_checkpoint_roundtrip_resumes_exactly():
+    s = _small_stream(4)
+    theta0 = _theta0(s.num_features)
+    tr = StreamTrainer(s, lam=0.1, beta=0.1, window=2, inner_iters=2)
+    mid, _ = tr.run(tr.init(theta0), days=2)
+    with tempfile.TemporaryDirectory() as td:
+        path = os.path.join(td, "stream.npz")
+        tr.save(path, mid)
+        back = tr.load(path, theta0)
+    # the cursor comes back a python int, the state bit-identical
+    assert back.day == 2 and type(back.day) is int
+    for a, b in zip(jax.tree.leaves(mid.opt), jax.tree.leaves(back.opt)):
+        np.testing.assert_array_equal(np.asarray(jax.device_get(a)),
+                                      np.asarray(jax.device_get(b)))
+    # continuing from the restored state == continuing uninterrupted
+    fin_a, tr_a = tr.run(mid, days=2)
+    fin_b, tr_b = tr.run(back, days=2)
+    assert [w.fs for w in tr_a] == [w.fs for w in tr_b]
+    np.testing.assert_array_equal(np.asarray(tr.theta(fin_a)),
+                                  np.asarray(tr.theta(fin_b)))
+    assert fin_a.day == fin_b.day == 4
+
+
+def test_checkpoint_rejects_mismatched_shapes():
+    """Resuming under a different configuration must fail loudly, not
+    silently train on a stale-shaped Theta."""
+    s = _small_stream(2)
+    tr = StreamTrainer(s, lam=0.1, beta=0.1, inner_iters=1)
+    state, _ = tr.run(tr.init(_theta0(s.num_features)), days=1)
+    with tempfile.TemporaryDirectory() as td:
+        path = os.path.join(td, "stream.npz")
+        tr.save(path, state)
+        with pytest.raises(ValueError, match="different configuration"):
+            tr.load(path, _theta0(s.num_features // 2))
+
+
+def test_planner_stats_populated_and_days_bounds():
+    s = _small_stream(2)
+    tr = StreamTrainer(s, lam=0.1, beta=0.1, inner_iters=1)
+    state, trace = tr.run(tr.init(_theta0(s.num_features)))
+    assert tr.planner_stats.windows == 2
+    assert tr.planner_stats.build_seconds > 0
+    assert all(w.build_seconds > 0 and w.step_seconds > 0 for w in trace)
+    # running past the end errors; running an exhausted stream is a no-op
+    with pytest.raises(ValueError, match="days"):
+        tr.run(state, days=1)
+    same, empty = tr.run(state)
+    assert empty == [] and same is state
+
+
+def test_constructor_validation():
+    s = _small_stream(2)
+    with pytest.raises(ValueError, match="history"):
+        StreamTrainer(s, lam=0.1, beta=0.1, history="sometimes")
+    with pytest.raises(ValueError, match=">= 1"):
+        StreamTrainer(s, lam=0.1, beta=0.1, window=0)
+    with pytest.raises(ValueError, match="mesh"):
+        StreamTrainer(s, lam=0.1, beta=0.1, partition=object())
