@@ -1,0 +1,181 @@
+"""Serving benchmark — pruned-vs-full artifacts and session-shared
+vs naive per-ad bundle scoring (the `repro.serve` subsystem).
+
+Three families of rows, all on production-like shapes (K active ids out
+of d columns, N-candidate page-view bundles):
+
+  * serve/flat_{full,pruned}/<tag> — flat padded-COO scoring of the full
+    Theta vs the pruned artifact (same requests, scores BIT-IDENTICAL —
+    asserted before timing counts; the artifact's win is the deployed
+    size, recorded in the derived column and the JSON);
+  * serve/bundles_{naive,shared}/<tag> — per-page-view bundle scoring
+    with the user contraction repeated for every candidate (naive) vs
+    computed once per bundle and broadcast (the serving side of Eq. 13).
+    With REPRO_BENCH_ENFORCE=1 (and not --smoke) the shared path must
+    reach SERVE_TARGET_SPEEDUP (1.5x) bundle throughput;
+  * serve/engine/<tag> — the ScoringEngine replaying ragged traffic:
+    reports per-request latency / candidate throughput and ASSERTS the
+    steady state (post-warmup) triggered zero recompiles.
+
+Quality gates ride along: pruned and full scores must agree exactly, so
+their AUC and calibration against the planted labels agree exactly too
+(recorded in BENCH_serve.json via ``benchmarks/run.py --json``).
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+
+SERVE_TARGET_SPEEDUP = 1.5  # shared-vs-naive bundle throughput (enforced)
+
+# (d, m, nnz_frac, sessions, ads_per_session, Ku, Ka, flat_requests)
+CONFIGS = [
+    (500_000, 12, 0.05, 64, 30, 24, 12, 4096),
+    (200_000, 12, 0.02, 128, 16, 24, 8, 4096),
+]
+SMOKE_CONFIGS = [(5_000, 4, 0.10, 8, 4, 8, 5, 64)]
+
+
+def _model(d, m, nnz, seed=0):
+    rng = np.random.default_rng(seed)
+    theta = rng.normal(size=(d, 2 * m)).astype(np.float32) * 0.05
+    theta[rng.random(d) >= nnz] = 0.0  # exact-zero rows (the L2,1 pattern)
+    return jnp.asarray(theta)
+
+
+def run(smoke: bool | None = None, collect: dict | None = None):
+    from repro.data.sparse import generate_sparse
+    from repro.eval import auc, calibration_ratio
+    from repro.serve import (
+        ScoreBundle,
+        ScoringEngine,
+        as_model,
+        compress,
+        score_bundles,
+        score_bundles_naive,
+        score_sparse,
+        synthetic_requests,
+    )
+
+    if smoke is None:
+        smoke = os.environ.get("REPRO_BENCH_SMOKE", "") == "1"
+    enforce = os.environ.get("REPRO_BENCH_ENFORCE", "") == "1"
+    configs = SMOKE_CONFIGS if smoke else CONFIGS
+    rows = []
+    results: dict = {}
+    if collect is not None:  # bind BEFORE the sweep: a failing run still
+        collect["backend"] = jax.default_backend()  # leaves partial data
+        collect["smoke"] = smoke
+        collect["target_speedup"] = SERVE_TARGET_SPEEDUP
+        collect["configs"] = results
+
+    speedups = []
+    for (d, m, nnz, G, A, ku, ka, n_flat) in configs:
+        tag = f"d{d}_m{m}_G{G}x{A}"
+        theta = _model(d, m, nnz)
+        full = as_model(theta)
+        art = compress(theta)
+
+        # ---- flat path: pruned vs full, bit-identical scores
+        rng = np.random.default_rng(1)
+        ids = jnp.asarray(rng.integers(0, d, (n_flat, ku)), jnp.int32)
+        vals = jnp.asarray(
+            rng.normal(size=(n_flat, ku)).astype(np.float32) / np.sqrt(ku))
+        flat_full = jax.jit(lambda i, v: score_sparse(full, i, v))
+        flat_pruned = jax.jit(lambda i, v: score_sparse(art, i, v))
+        np.testing.assert_array_equal(np.asarray(flat_full(ids, vals)),
+                                      np.asarray(flat_pruned(ids, vals)))
+        t_ff = time_fn(flat_full, ids, vals)
+        t_fp = time_fn(flat_pruned, ids, vals)
+        size_ratio = (art.theta.size + art.remap.size + art.alive_ids.size) \
+            / theta.size
+        rows.append((f"serve/flat_full/{tag}", t_ff,
+                     f"{n_flat / (t_ff / 1e6):.0f}ads_per_sec"))
+        rows.append((f"serve/flat_pruned/{tag}", t_fp,
+                     f"{n_flat / (t_fp / 1e6):.0f}ads_per_sec;"
+                     f"alive={art.compression:.3f};"
+                     f"deployed_size_ratio={size_ratio:.3f};parity=bitwise"))
+
+        # ---- bundles: session-shared vs naive per-ad (pruned model, the
+        # production deployment) + AUC/calibration quality gates
+        batch = generate_sparse(
+            num_features=d, num_user_features_range=(max(1, int(0.6 * d)), d),
+            sessions=G, ads_per_session=A, active_user=ku, active_ad=ka,
+            seed=2, with_plans=False)
+        bundle = ScoreBundle(batch.user_ids, batch.user_vals,
+                             batch.ad_ids, batch.ad_vals, batch.session_id)
+        shared = jax.jit(lambda b: score_bundles(art, b))
+        naive = jax.jit(lambda b: score_bundles_naive(art, b))
+        p_shared = np.asarray(shared(bundle))
+        p_naive = np.asarray(naive(bundle))
+        np.testing.assert_allclose(p_shared, p_naive, rtol=1e-5, atol=1e-6)
+        # pruned-vs-full parity holds BITWISE under the same compilation
+        # regime (both jitted here; eager-vs-jit is the usual 1-ulp apart)
+        p_full_shared = np.asarray(jax.jit(
+            lambda b: score_bundles(full, b))(bundle))
+        np.testing.assert_array_equal(p_shared, p_full_shared)
+        y = np.asarray(batch.y)
+        quality = {
+            "auc_pruned": auc(y, p_shared),
+            "auc_full": auc(y, p_full_shared),
+            "calibration_pruned": calibration_ratio(y, p_shared),
+            "calibration_full": calibration_ratio(y, p_full_shared),
+        }
+        assert quality["auc_pruned"] == quality["auc_full"]
+        t_sh = time_fn(shared, bundle)
+        t_nv = time_fn(naive, bundle)
+        speedup = t_nv / t_sh
+        speedups.append(speedup)
+        B = bundle.ad_ids.shape[0]
+        rows.append((f"serve/bundles_naive/{tag}", t_nv,
+                     f"{B / (t_nv / 1e6):.0f}ads_per_sec"))
+        rows.append((f"serve/bundles_shared/{tag}", t_sh,
+                     f"{B / (t_sh / 1e6):.0f}ads_per_sec;"
+                     f"{speedup:.2f}x_vs_naive"))
+
+        # ---- engine on ragged traffic: steady state must not recompile
+        engine = ScoringEngine(art)
+        requests = synthetic_requests(
+            16 if smoke else 128, num_features=d,
+            k_user=(max(2, ku // 2), ku), k_ad=(max(2, ka // 2), ka),
+            n_ads=(max(2, A // 2), A), seed=3)
+        engine.warm({engine.envelope(r) for r in requests})  # deploy-time
+        warm_compiles = engine.stats.compiles
+        engine.score_many(requests)
+        s = engine.stats
+        assert s.compiles == warm_compiles, \
+            f"engine recompiled in steady state ({s.compiles} != {warm_compiles})"
+        rows.append((f"serve/engine/{tag}", s.latency_us,
+                     f"{s.candidates_per_sec:.0f}ads_per_sec;"
+                     f"buckets={len(s.bucket_hits)};compiles={s.compiles};"
+                     "steady_state_recompiles=0"))
+
+        results[tag] = {
+            "d": d, "m": m, "nnz_frac": nnz, "sessions": G,
+            "ads_per_session": A, "k_user": ku, "k_ad": ka,
+            "alive_rows": art.num_alive,
+            "deployed_size_ratio": float(size_ratio),
+            "flat_full_us": t_ff, "flat_pruned_us": t_fp,
+            "bundles_naive_us": t_nv, "bundles_shared_us": t_sh,
+            "shared_speedup": speedup,
+            "engine": s.as_dict(),
+            "quality": quality,
+            "parity": "bitwise",
+        }
+
+    geomean = float(np.exp(np.mean(np.log(speedups))))
+    rows.append(("serve/shared_speedup/geomean", 0.0, f"{geomean:.2f}x_vs_naive"))
+    if collect is not None:
+        collect["shared_speedup_geomean"] = geomean
+    emit(rows)  # before the gate: a failed target must not eat the rows
+    if enforce and not smoke and geomean < SERVE_TARGET_SPEEDUP:
+        raise AssertionError(
+            f"session-shared bundle scoring only {geomean:.2f}x vs the naive "
+            f"per-ad path (target {SERVE_TARGET_SPEEDUP}x); per-config: "
+            f"{[round(s, 2) for s in speedups]}")
+    return results

@@ -7,6 +7,7 @@ Prints ``name,us_per_call,derived`` CSV rows:
   * bench_lr_vs_lsplm     — Fig. 5 (LS-PLM vs LR over 7 datasets)
   * bench_sparse_fused    — fused sparse kernel fwd/bwd vs oracles
   * bench_stream          — streaming trainer: overlapped re-planner
+  * bench_serve           — serving: pruned artifacts, shared bundles, engine
   * roofline_report       — §Roofline rows from the dry-run artifacts
 
 Usage:
@@ -19,10 +20,11 @@ several — so CI jobs can run a single suite without paying for the
 rest. ``--smoke`` asks modules that support it for tiny shapes;
 ``--json`` additionally writes the machine-readable perf trajectories
 CI archives as artifacts: ``BENCH_sparse_fused.json`` (kernel
-fwd/bwd timings + speedups) and ``BENCH_stream.json`` (streaming
-steps/sec, overlap ratio, overlapped-vs-sync speedup). The CI smoke
-steps run ``--only sparse_fused --smoke --json`` and
-``--only stream --smoke --json`` on CPU.
+fwd/bwd timings + speedups), ``BENCH_stream.json`` (streaming
+steps/sec, overlap ratio, overlapped-vs-sync speedup, per-day decay
+table) and ``BENCH_serve.json`` (pruned-vs-full, shared-vs-naive,
+engine latency). The CI smoke steps run ``--only sparse_fused``,
+``--only stream`` and ``--only serve`` with ``--smoke --json`` on CPU.
 """
 from __future__ import annotations
 
@@ -44,6 +46,7 @@ import traceback
 
 SPARSE_FUSED_JSON = "BENCH_sparse_fused.json"
 STREAM_JSON = "BENCH_stream.json"
+SERVE_JSON = "BENCH_serve.json"
 
 
 def _select(mods, only: str):
@@ -70,8 +73,9 @@ def main() -> None:
     ap.add_argument("--smoke", action="store_true",
                     help="tiny shapes where supported (CI)")
     ap.add_argument("--json", action="store_true",
-                    help=f"write {SPARSE_FUSED_JSON} / {STREAM_JSON} with "
-                         "the machine-readable timings (CI artifacts)")
+                    help=f"write {SPARSE_FUSED_JSON} / {STREAM_JSON} / "
+                         f"{SERVE_JSON} with the machine-readable timings "
+                         "(CI artifacts)")
     args = ap.parse_args()
 
     from benchmarks import (
@@ -80,6 +84,7 @@ def main() -> None:
         bench_lr_vs_lsplm,
         bench_regularization,
         bench_router_balance,
+        bench_serve,
         bench_sparse_fused,
         bench_stream,
         roofline_report,
@@ -87,9 +92,10 @@ def main() -> None:
 
     mods = [bench_division, bench_regularization, bench_common_feature,
             bench_lr_vs_lsplm, bench_router_balance, bench_sparse_fused,
-            bench_stream, roofline_report]
+            bench_stream, bench_serve, roofline_report]
     json_paths = {bench_sparse_fused: SPARSE_FUSED_JSON,
-                  bench_stream: STREAM_JSON}
+                  bench_stream: STREAM_JSON,
+                  bench_serve: SERVE_JSON}
     if args.only:
         mods = _select(mods, args.only)
 

@@ -1,17 +1,20 @@
-"""Online-serving simulation: batched CTR scoring with session-grouped
-requests (the serving-side common-feature trick).
+"""Online-serving simulation on the `repro.serve` subsystem.
 
     PYTHONPATH=src python examples/serve_lsplm.py
 
-Each page view produces one request bundle: 1 user-feature vector + N ad
-candidates. The server computes the user part of Theta^T x ONCE per bundle
-(Eq. 13) and scores all candidates, exactly like the paper's production
-serving path. Reports per-bundle latency and throughput vs the naive path.
+The production story of §4: a trained Theta is PRUNED into a deployable
+artifact (L1/L2,1 leave ~2-5% of feature rows alive — only those ship),
+and every page view is scored as one BUNDLE (1 user id list + N ad
+candidates) with the user half of Theta^T x computed once per bundle
+(the serving side of Eq. 13). This example drives all of it through the
+one inference layer everything in the repo now uses (`repro.serve`):
 
-Part 2 scores PADDED-COO sparse requests (the real production wire format:
-K active ids out of d columns) through the fused sparse kernel
-(`repro.kernels.lsplm_sparse_fused`) and compares it against the
-gather+einsum reference and against densifying the batch.
+  1. compress -> save -> load a pruned artifact; pruned scoring is
+     bit-identical to full-Theta scoring on the sparse paths;
+  2. session-shared vs naive per-ad bundle scoring (same scores, the
+     shared path skips the (N-1)/N redundant user gathers);
+  3. the ScoringEngine on ragged request traffic: bucketed envelopes,
+     per-bucket cached executables, steady state with ZERO recompiles.
 """
 import time
 
@@ -19,103 +22,102 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.data import CTRDataConfig, generate, to_dense_batch
-from repro.data.sparse import pad_theta
-from repro.kernels.lsplm_sparse_fused.ops import lsplm_sparse_forward
-from repro.kernels.lsplm_sparse_fused.ref import lsplm_sparse_forward_ref
+from repro.data.sparse import generate_sparse
+from repro.serve import (
+    ScoreBundle,
+    ScoringEngine,
+    as_model,
+    compress,
+    load_artifact,
+    save_artifact,
+    score_bundles,
+    score_bundles_naive,
+    score_sparse,
+    synthetic_requests,
+)
 
-CFG = CTRDataConfig(num_user_features=512, num_ad_features=32,
-                    noise_features=0, ads_per_session=30, density=0.1, seed=0)
-M = 12
-
-
-@jax.jit
-def score_bundles(theta, x_common, x_nc, session_id):
-    """Compressed scoring: user dot-products once per session (Eq. 13)."""
-    d_c = x_common.shape[-1]
-    z = (x_common @ theta[:d_c])[session_id] + x_nc @ theta[d_c:]
-    m = theta.shape[-1] // 2
-    gate = jax.nn.softmax(z[..., :m], axis=-1)
-    fit = jax.nn.sigmoid(z[..., m:])
-    return jnp.sum(gate * fit, axis=-1)
+D = 500_000  # feature columns (production width)
+M = 12       # regions
 
 
-@jax.jit
-def score_dense(theta, x):
-    m = theta.shape[-1] // 2
-    z = x @ theta
-    gate = jax.nn.softmax(z[..., :m], axis=-1)
-    fit = jax.nn.sigmoid(z[..., m:])
-    return jnp.sum(gate * fit, axis=-1)
+def bench(fn, *args, iters=50):
+    jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters
+
+
+def make_model(nnz: float = 0.05) -> jax.Array:
+    """A production-like sparsified Theta (Table 2: few % of rows alive)."""
+    rng = np.random.default_rng(0)
+    theta = rng.normal(size=(D, 2 * M)).astype(np.float32) * 0.05
+    theta[rng.random(D) >= nnz] = 0.0  # exact-zero rows, like OWLQN+ leaves
+    return jnp.asarray(theta)
 
 
 def main():
-    rng = np.random.default_rng(0)
-    d = CFG.num_features
-    theta = jnp.asarray(rng.normal(size=(d, 2 * M)) * 0.05, jnp.float32)
-    # sparsify like a production model (Table 2: ~2% nnz)
-    theta = theta * (rng.random(theta.shape) < 0.05)
+    theta = make_model()
+    # normalise (and pad) the full model ONCE at load time — the pad row
+    # is part of the served model, not per-request work
+    full = as_model(theta)
 
-    batch, _ = generate(CFG, num_sessions=64, seed=3)  # 64 page views in flight
-    dense = to_dense_batch(batch)
-    xc = jnp.asarray(batch.x_common)
-    xnc = jnp.asarray(batch.x_noncommon)
-    sid = jnp.asarray(batch.session_id)
-    xd = jnp.asarray(dense.x)
+    # ---- 1. pruned artifact: compress -> save -> load -> parity
+    art = compress(theta)
+    save_artifact("/tmp/lsplm_artifact.npz", art)
+    art = load_artifact("/tmp/lsplm_artifact.npz")
+    full_mb = theta.size * 4 / 2**20
+    packed_mb = art.theta.size * 4 / 2**20
+    remap_mb = art.remap.size * 4 / 2**20
+    print(f"model: d={D:,} rows -> {art.num_alive:,} alive "
+          f"({art.compression:.1%}); {full_mb:.1f} MiB -> "
+          f"{packed_mb + remap_mb:.1f} MiB (rows {packed_mb:.1f} + "
+          f"remap {remap_mb:.1f})")
 
-    p1 = score_bundles(theta, xc, xnc, sid)
-    p2 = score_dense(theta, xd)
-    np.testing.assert_allclose(np.asarray(p1), np.asarray(p2), rtol=2e-3, atol=2e-5)
-
-    def bench(fn, *args, iters=50):
-        jax.block_until_ready(fn(*args))
-        t0 = time.perf_counter()
-        for _ in range(iters):
-            jax.block_until_ready(fn(*args))
-        return (time.perf_counter() - t0) / iters
-
-    t_cf = bench(score_bundles, theta, xc, xnc, sid)
-    t_dense = bench(score_dense, theta, xd)
-    n_ads = xd.shape[0]
-    print(f"bundles: 64 page views x {CFG.ads_per_session} ads = {n_ads} candidates")
-    print(f"common-feature scoring: {t_cf * 1e6:8.1f} us/batch "
-          f"({n_ads / t_cf:,.0f} ads/s)")
-    print(f"naive dense scoring   : {t_dense * 1e6:8.1f} us/batch "
-          f"({n_ads / t_dense:,.0f} ads/s)")
-    print(f"speedup: {t_dense / t_cf:.2f}x  (scores identical)")
-
-    serve_sparse(bench)
-
-
-def serve_sparse(bench, n_req: int = 16384, K: int = 24,
-                 d: int = 500_000, m: int = 12):
-    """Part 2: production-width sparse scoring through the fused kernel."""
     rng = np.random.default_rng(1)
-    theta = jnp.asarray(rng.normal(size=(d, 2 * m)) * 0.05, jnp.float32)
-    theta = theta * (rng.random(theta.shape) < 0.05)  # Table-2-like nnz
-    ids = jnp.asarray(rng.integers(0, d, (n_req, K)), jnp.int32)
-    vals = jnp.asarray(
-        rng.normal(size=(n_req, K)).astype(np.float32) / np.sqrt(K))
+    ids = jnp.asarray(rng.integers(0, D, (4096, 24)), jnp.int32)
+    vals = jnp.asarray(rng.normal(size=(4096, 24)).astype(np.float32) / 5.0)
+    p_full = score_sparse(full, ids, vals)
+    p_pruned = score_sparse(art, ids, vals)
+    np.testing.assert_array_equal(np.asarray(p_full), np.asarray(p_pruned))
+    t_full = bench(jax.jit(lambda i, v: score_sparse(full, i, v)), ids, vals)
+    t_pruned = bench(jax.jit(lambda i, v: score_sparse(art, i, v)), ids, vals)
+    print(f"flat sparse scoring, 4096 requests: full {t_full * 1e6:7.1f} us, "
+          f"pruned {t_pruned * 1e6:7.1f} us (scores BIT-IDENTICAL)")
 
-    # pad Theta ONCE at model-load time — the zero pad row is part of the
-    # served model, not of the per-request work.
-    tp = pad_theta(theta)
-    score_fused = jax.jit(lambda i, v, t: lsplm_sparse_forward(i, v, t))
-    score_ref = jax.jit(lsplm_sparse_forward_ref)
-    p1 = score_fused(ids, vals, tp)
-    p2 = score_ref(ids, vals, tp)
-    np.testing.assert_allclose(np.asarray(p1), np.asarray(p2),
-                               rtol=2e-4, atol=2e-6)
+    # ---- 2. session-shared vs naive per-ad bundle scoring
+    batch = generate_sparse(num_features=D,
+                            num_user_features_range=(300_000, D),
+                            sessions=64, ads_per_session=30,
+                            seed=2, with_plans=False)
+    bundle = ScoreBundle(batch.user_ids, batch.user_vals,
+                         batch.ad_ids, batch.ad_vals, batch.session_id)
+    p_shared = score_bundles(art, bundle)
+    p_naive = score_bundles_naive(art, bundle)
+    np.testing.assert_allclose(np.asarray(p_shared), np.asarray(p_naive),
+                               rtol=1e-5, atol=1e-6)
+    t_shared = bench(jax.jit(lambda b: score_bundles(art, b)), bundle)
+    t_naive = bench(jax.jit(lambda b: score_bundles_naive(art, b)), bundle)
+    n_ads = bundle.ad_ids.shape[0]
+    print(f"bundles: 64 page views x 30 ads = {n_ads} candidates")
+    print(f"session-shared scoring: {t_shared * 1e6:8.1f} us/batch "
+          f"({n_ads / t_shared:,.0f} ads/s)")
+    print(f"naive per-ad scoring  : {t_naive * 1e6:8.1f} us/batch "
+          f"({n_ads / t_naive:,.0f} ads/s)")
+    print(f"speedup: {t_naive / t_shared:.2f}x  (scores identical)")
 
-    t_fused = bench(score_fused, ids, vals, tp)
-    t_ref = bench(score_ref, ids, vals, tp)
-    print(f"\nsparse requests: {n_req} x {K} active ids of d={d:,} "
-          f"(dense batch would be {n_req * d * 4 / 2**30:.1f} GiB — never built)")
-    print(f"fused sparse scoring  : {t_fused * 1e6:8.1f} us/batch "
-          f"({n_req / t_fused:,.0f} ads/s)")
-    print(f"gather+einsum scoring : {t_ref * 1e6:8.1f} us/batch "
-          f"({n_req / t_ref:,.0f} ads/s)")
-    print(f"speedup: {t_ref / t_fused:.2f}x  (scores identical)")
+    # ---- 3. the engine on ragged online traffic
+    engine = ScoringEngine(art)
+    requests = synthetic_requests(256, num_features=D, seed=3)
+    engine.warm({engine.envelope(r) for r in requests})  # deploy-time warmup
+    warm_compiles = engine.stats.compiles
+    engine.score_many(requests)  # steady state
+    s = engine.stats
+    assert s.compiles == warm_compiles, "steady state must not recompile"
+    print(f"engine: {s.requests} ragged requests over "
+          f"{len(s.bucket_hits)} buckets, {s.compiles} compiles "
+          f"(ALL during warmup), {s.latency_us:.0f} us/request, "
+          f"{s.candidates_per_sec:,.0f} ads/s")
 
 
 if __name__ == "__main__":

@@ -121,15 +121,13 @@ def predict_proba_sparse(
     mode: str = "auto", plan=None
 ) -> jax.Array:
     """p(y=1|x) per Eq. 2 from padded-COO (ids, vals) — the production
-    input format. Runs the fused sparse kernel (pipelined block-DMA
-    gather, softmax-dot-sigmoid in-register); ids use pad id == d. Pass
-    ``plan`` (``repro.data.sparse.build_transpose_plan``) when the call
-    will be differentiated to keep the backward sort-free. Returns (N,)."""
-    from repro.kernels.lsplm_sparse_fused.ops import (
-        lsplm_sparse_forward, pad_theta)
+    input format, served by the unified inference layer (``repro.serve``,
+    fused sparse kernel underneath); ids use pad id == d. Pass ``plan``
+    (``repro.data.sparse.build_transpose_plan``) when the call will be
+    differentiated to keep the backward sort-free. Returns (N,)."""
+    from repro.serve.score import score_sparse
 
-    return lsplm_sparse_forward(ids, vals, pad_theta(params.theta), mode=mode,
-                                plan=plan)
+    return score_sparse(params, ids, vals, mode=mode, plan=plan)
 
 
 def predict_logits_stable_sparse(
@@ -137,12 +135,10 @@ def predict_logits_stable_sparse(
     mode: str = "auto", plan=None
 ) -> tuple[jax.Array, jax.Array]:
     """Sparse analogue of ``predict_logits_stable``: (log_p1, log_p0)
-    from padded-COO inputs via the fused kernel's region logits."""
-    from repro.kernels.lsplm_sparse_fused.ops import (
-        lsplm_sparse_logps, pad_theta)
+    via the unified inference layer's region logits."""
+    from repro.serve.score import score_sparse_logps
 
-    return lsplm_sparse_logps(ids, vals, pad_theta(params.theta), mode=mode,
-                              plan=plan)
+    return score_sparse_logps(params, ids, vals, mode=mode, plan=plan)
 
 
 def foe_mixture_proba(params: LSPLMParams, x: jax.Array) -> jax.Array:

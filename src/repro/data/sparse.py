@@ -49,8 +49,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.objective import nll_sparse
-from repro.kernels.lsplm_sparse_fused.ops import (
-    lsplm_sparse_forward,
+from repro.kernels.lsplm_sparse_fused.ops import (  # noqa: F401 (pad_theta re-exported)
     pad_theta,
     sparse_gather_matmul,
 )
@@ -137,23 +136,23 @@ def sparse_loss_and_grad(theta: jax.Array, batch: SparseCTRBatch):
 
 
 def sparse_predict(theta: jax.Array, batch: SparseCTRBatch) -> jax.Array:
-    """p(y=1|x) for a session-structured sparse batch (fused path)."""
-    tp = pad_theta(theta)
-    z = (sparse_matmul(batch.user_ids, batch.user_vals, tp,
-                       plan=batch.user_plan)[batch.session_id]
-         + sparse_matmul(batch.ad_ids, batch.ad_vals, tp,
-                         plan=batch.ad_plan))
-    m = theta.shape[-1] // 2
-    gate = jax.nn.softmax(z[..., :m], axis=-1)
-    fit = jax.nn.sigmoid(z[..., m:])
-    return jnp.sum(gate * fit, axis=-1)
+    """p(y=1|x) for a session-structured sparse batch — delegates to the
+    unified inference layer's session-shared path (``repro.serve``), the
+    same code that serves online traffic (model polymorphic: pass a
+    pruned ``ServingArtifact`` instead of Theta and it still works)."""
+    from repro.serve.score import predict
+
+    return predict(theta, batch)
 
 
 def sparse_predict_flat(theta: jax.Array, ids: jax.Array, vals: jax.Array,
                         *, mode: str = "auto") -> jax.Array:
     """p(y=1|x) for flat (sessionless) padded-COO rows — the serving hot
-    path, fully fused down to the (N,) probabilities."""
-    return lsplm_sparse_forward(ids, vals, pad_theta(theta), mode=mode)
+    path (``repro.serve.score.score_sparse``), fully fused down to the
+    (N,) probabilities."""
+    from repro.serve.score import score_sparse
+
+    return score_sparse(theta, ids, vals, mode=mode)
 
 
 # ----------------------------------------------------------------- generator

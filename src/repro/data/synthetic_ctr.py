@@ -120,25 +120,6 @@ def train_val_test(
     return out
 
 
-def auc(y_true: np.ndarray, scores: np.ndarray) -> float:
-    """Rank-based AUC (Fawcett 2006), ties handled by midrank."""
-    y_true = np.asarray(y_true).ravel()
-    scores = np.asarray(scores).ravel()
-    order = np.argsort(scores, kind="mergesort")
-    ranks = np.empty_like(order, dtype=np.float64)
-    sorted_scores = scores[order]
-    n = len(scores)
-    i = 0
-    r = 1.0
-    while i < n:
-        j = i
-        while j + 1 < n and sorted_scores[j + 1] == sorted_scores[i]:
-            j += 1
-        ranks[order[i : j + 1]] = 0.5 * (r + r + (j - i))
-        r += j - i + 1
-        i = j + 1
-    n_pos = y_true.sum()
-    n_neg = n - n_pos
-    if n_pos == 0 or n_neg == 0:
-        return 0.5
-    return float((ranks[y_true == 1].sum() - n_pos * (n_pos + 1) / 2) / (n_pos * n_neg))
+# canonical implementation lives with the other metrics; re-exported here
+# because every data consumer historically imported it from this module
+from repro.eval.metrics import auc  # noqa: F401, E402

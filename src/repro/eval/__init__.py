@@ -1,1 +1,7 @@
-from repro.eval.metrics import calibration_ratio, log_loss, normalized_entropy, report  # noqa: F401
+from repro.eval.metrics import (  # noqa: F401
+    auc,
+    calibration_ratio,
+    log_loss,
+    normalized_entropy,
+    report,
+)

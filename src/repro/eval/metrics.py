@@ -1,15 +1,43 @@
-"""CTR evaluation metrics beyond AUC (industry standard set).
+"""CTR evaluation metrics (industry standard set).
 
+* AUC — rank-based (Fawcett 2006), ties by midrank; the paper's primary
+  comparison metric (Fig. 5/7). This is the canonical implementation;
+  ``repro.data.synthetic_ctr.auc`` re-exports it.
 * log-loss (per-sample NLL) — the paper's training objective, reported
   per sample so datasets of different size compare;
-* calibration ratio — sum(predicted CTR) / sum(clicks); online ad systems
-  require this near 1.0 (bids are priced off predicted CTR);
+* calibration ratio — mean predicted CTR / empirical CTR; online ad
+  systems require this near 1.0 (bids are priced off predicted CTR).
+  Used by the serving parity gates and ``benchmarks/bench_serve.py``;
 * normalised entropy (He et al. 2014, the Facebook baseline the paper
   cites) — log-loss normalised by the entropy of the base rate.
 """
 from __future__ import annotations
 
 import numpy as np
+
+
+def auc(y_true: np.ndarray, scores: np.ndarray) -> float:
+    """Rank-based AUC (Fawcett 2006), ties handled by midrank."""
+    y_true = np.asarray(y_true).ravel()
+    scores = np.asarray(scores).ravel()
+    order = np.argsort(scores, kind="mergesort")
+    ranks = np.empty_like(order, dtype=np.float64)
+    sorted_scores = scores[order]
+    n = len(scores)
+    i = 0
+    r = 1.0
+    while i < n:
+        j = i
+        while j + 1 < n and sorted_scores[j + 1] == sorted_scores[i]:
+            j += 1
+        ranks[order[i : j + 1]] = 0.5 * (r + r + (j - i))
+        r += j - i + 1
+        i = j + 1
+    n_pos = y_true.sum()
+    n_neg = n - n_pos
+    if n_pos == 0 or n_neg == 0:
+        return 0.5
+    return float((ranks[y_true == 1].sum() - n_pos * (n_pos + 1) / 2) / (n_pos * n_neg))
 
 
 def log_loss(y: np.ndarray, p: np.ndarray, eps: float = 1e-7) -> float:
@@ -19,6 +47,8 @@ def log_loss(y: np.ndarray, p: np.ndarray, eps: float = 1e-7) -> float:
 
 
 def calibration_ratio(y: np.ndarray, p: np.ndarray) -> float:
+    """mean(predicted CTR) / mean(empirical CTR) — 1.0 is perfectly
+    calibrated; inf when the batch has no clicks."""
     y = np.asarray(y, np.float64).ravel()
     p = np.asarray(p, np.float64).ravel()
     clicks = y.sum()
@@ -35,8 +65,6 @@ def normalized_entropy(y: np.ndarray, p: np.ndarray) -> float:
 
 
 def report(y: np.ndarray, p: np.ndarray) -> dict:
-    from repro.data.synthetic_ctr import auc
-
     return {
         "auc": auc(np.asarray(y), np.asarray(p)),
         "log_loss": log_loss(y, p),

@@ -32,9 +32,13 @@ def _flatten(tree, prefix=""):
     return out
 
 
-def save(path: str, tree) -> None:
+def save(path: str, tree) -> str:
+    """Write the flattened tree; returns the REAL path written.
+    ``np.savez`` appends ``.npz`` to paths not already ending in it, so
+    callers must print/reload the returned path, not their argument."""
     os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
     np.savez(path, **_flatten(tree))
+    return path if path.endswith(".npz") else path + ".npz"
 
 
 def load(path: str, like):
@@ -68,6 +72,24 @@ def load(path: str, like):
         return leaf
 
     return rebuild(like)
+
+
+def load_nested(path: str) -> dict:
+    """Restore a checkpoint WITHOUT a ``like`` tree: the flat npz keys
+    are split on ``/`` back into a nested dict of numpy leaves. List /
+    tuple / NamedTuple structure is not recoverable this way (their
+    positions come back as dict keys ``"0"``, ``"1"``, ...), so use
+    :func:`load` when the exact treedef matters. This is the loader for
+    SELF-DESCRIBING artifacts — e.g. ``repro.serve.load_artifact``
+    rebuilds a pruned serving model from the field names alone."""
+    data = np.load(path)
+    out: dict = {}
+    for key, leaf in data.items():
+        node, parts = out, key.split("/")
+        for part in parts[:-1]:
+            node = node.setdefault(part, {})
+        node[parts[-1]] = leaf
+    return out
 
 
 def save_stream(path: str, stream_state) -> None:

@@ -71,7 +71,10 @@ def pad_theta(theta: jax.Array) -> jax.Array:
         [theta, jnp.zeros((1, theta.shape[1]), theta.dtype)], axis=0)
 
 
-def _finalize_p(z: jax.Array) -> jax.Array:
+def finalize_p(z: jax.Array) -> jax.Array:
+    """Eq. 2 head: region logits z (..., 2m) -> p(y=1|x) (...,). The ONE
+    softmax-dot-sigmoid used by every inference consumer (``repro.serve``,
+    the dense predictors, the jnp fallbacks here)."""
     m = z.shape[-1] // 2
     gate = jax.nn.softmax(z[..., :m], axis=-1)
     fit = jax.nn.sigmoid(z[..., m:])
@@ -288,8 +291,8 @@ def _forward_p(mode, block_n, block_k, chunk, dedup, ids, vals, theta, plan):
     if _use_kernel(mode):
         p, _ = _kernel_forward(mode, block_n, block_k, dedup, ids, vals, theta)
         return p
-    return _finalize_p(_zmap(mode, block_n, block_k, chunk, dedup, ids, vals,
-                             theta))
+    return finalize_p(_zmap(mode, block_n, block_k, chunk, dedup, ids, vals,
+                            theta))
 
 
 def _forward_p_fwd(mode, block_n, block_k, chunk, dedup, ids, vals, theta,
@@ -300,7 +303,7 @@ def _forward_p_fwd(mode, block_n, block_k, chunk, dedup, ids, vals, theta,
     else:
         z, rows = _zmap_with_rows(mode, block_n, block_k, chunk, dedup, ids,
                                   vals, theta)
-        p = _finalize_p(z)
+        p = finalize_p(z)
     return p, (ids, vals, theta, z, p, plan, rows)
 
 

@@ -1,0 +1,33 @@
+"""Serving subsystem: pruned artifacts + the unified inference layer +
+the bucketed scoring engine (§3.2 / §4 of the paper, production side).
+
+``compress`` packs a trained Theta's surviving rows into a deployable
+:class:`ServingArtifact`; ``score`` is the one prediction layer every
+caller (training-eval, examples, the engine) goes through; ``engine``
+serves ragged request traffic with bucketed shape padding and per-bucket
+cached executables (steady state: zero recompiles).
+"""
+from repro.serve.compress import (  # noqa: F401
+    ServingArtifact,
+    compress,
+    load_artifact,
+    save_artifact,
+)
+from repro.serve.engine import (  # noqa: F401
+    BundleRequest,
+    EngineStats,
+    ScoringEngine,
+    synthetic_requests,
+)
+from repro.serve.score import (  # noqa: F401
+    ScoreBundle,
+    ServingModel,
+    as_model,
+    bundle_logits,
+    predict,
+    score_bundles,
+    score_bundles_naive,
+    score_dense,
+    score_sparse,
+    score_sparse_logps,
+)

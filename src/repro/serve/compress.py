@@ -1,0 +1,117 @@
+"""Pruned serving artifacts — the deployable form of a trained Theta.
+
+The L1/L2,1 regularisers (Eq. 4) drive entire FEATURE ROWS of Theta to
+exact zero (a feature row is the L2,1 group), and the paper's production
+win is that the DEPLOYED model only ships the surviving rows (§4, Table
+2: ~2% nonzero). :func:`compress` packs a trained (d, 2m) Theta into a
+:class:`ServingArtifact`:
+
+  * ``theta``      (R+1, 2m) — the R surviving rows, contiguous, plus the
+                   trailing zero pad row the sparse kernels require
+                   (compact pad id == R);
+  * ``remap``      (d+1,) int32 — old feature id -> compact row. Dropped
+                   ids AND the old pad id (== d) map to the pad row R, so
+                   a request in the ORIGINAL id space is served by one
+                   gather: ``compact_ids = remap[ids]``;
+  * ``alive_ids``  (R,) int32 — the original ids of the packed rows (the
+                   inverse of ``remap`` on the alive set; dense scoring
+                   gathers x's columns with it).
+
+Scoring a pruned artifact is BIT-IDENTICAL to scoring the full Theta on
+the sparse paths: the gathered rows are the same numbers (alive rows are
+copied verbatim; dropped ids land on the zero pad row exactly as their
+all-zero row did before), and the contraction shapes/order per sample do
+not change. The dense path contracts over R columns instead of d, which
+reassociates the reduction — parity there is <= 1e-6, not bitwise (see
+``serve.score.score_dense``).
+
+Artifacts save/load through ``repro.io.checkpoint`` (flat npz); the
+field names make them self-describing, so :func:`load_artifact` needs no
+``like`` tree (``checkpoint.load_nested``).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.io import checkpoint
+
+
+class ServingArtifact(NamedTuple):
+    """A pruned, serving-ready LS-PLM model (see module docstring)."""
+
+    theta: jax.Array  # (R+1, 2m) packed alive rows + zero pad row
+    remap: jax.Array  # (d+1,) int32 old id -> compact row (dropped -> R)
+    alive_ids: jax.Array  # (R,) int32 original ids of the packed rows
+    num_features: int  # d of the full model (static)
+
+    @property
+    def num_alive(self) -> int:
+        """R — surviving feature rows (the deployed model's size)."""
+        return self.theta.shape[0] - 1
+
+    @property
+    def num_regions(self) -> int:
+        return self.theta.shape[1] // 2
+
+    @property
+    def pad_id(self) -> int:
+        """The compact pad id (== R); ``remap`` already targets it."""
+        return self.theta.shape[0] - 1
+
+    @property
+    def compression(self) -> float:
+        """Deployed/full row ratio (1.0 = nothing pruned)."""
+        return self.num_alive / max(self.num_features, 1)
+
+
+def compress(theta: jax.Array, *, threshold: float = 0.0) -> ServingArtifact:
+    """Pack a trained UNPADDED Theta (d, 2m) into a pruned artifact.
+
+    A row survives when ``max(|row|) > threshold``; the default 0.0 drops
+    exactly the rows OWLQN+'s orthant projection zeroed (the L2,1 win) and
+    nothing else, which is what keeps pruned scoring bit-identical.
+    ``threshold > 0`` additionally drops near-zero rows — lossy, for
+    size-quality tradeoffs; parity gates then no longer apply.
+    """
+    th = np.asarray(jax.device_get(theta))
+    if th.ndim != 2 or th.shape[1] % 2:
+        raise ValueError(f"expected an unpadded (d, 2m) Theta, got {th.shape}")
+    d = th.shape[0]
+    alive = np.abs(th).max(axis=1) > threshold
+    alive_ids = np.flatnonzero(alive).astype(np.int32)
+    r = alive_ids.size
+    remap = np.full(d + 1, r, np.int32)  # dropped ids AND old pad id -> pad row
+    remap[alive_ids] = np.arange(r, dtype=np.int32)
+    packed = np.concatenate([th[alive_ids], np.zeros((1, th.shape[1]), th.dtype)])
+    return ServingArtifact(
+        theta=jnp.asarray(packed),
+        remap=jnp.asarray(remap),
+        alive_ids=jnp.asarray(alive_ids),
+        num_features=d,
+    )
+
+
+def save_artifact(path: str, artifact: ServingArtifact) -> str:
+    """Write the artifact as a flat npz via ``repro.io.checkpoint``.
+    Returns the real path written (``.npz`` appended when missing)."""
+    return checkpoint.save(path, artifact)
+
+
+def load_artifact(path: str) -> ServingArtifact:
+    """Load an artifact saved by :func:`save_artifact`. Self-describing:
+    the npz field names rebuild the structure, no ``like`` tree needed."""
+    data = checkpoint.load_nested(path)
+    missing = [f for f in ServingArtifact._fields if f not in data]
+    if missing:
+        raise ValueError(
+            f"{path!r} is not a serving artifact: missing fields {missing}")
+    return ServingArtifact(
+        theta=jnp.asarray(data["theta"]),
+        remap=jnp.asarray(data["remap"]),
+        alive_ids=jnp.asarray(data["alive_ids"]),
+        num_features=int(np.asarray(data["num_features"]).item()),
+    )

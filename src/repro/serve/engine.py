@@ -1,0 +1,207 @@
+"""Batched online scoring engine: bucketed shapes, cached executables.
+
+Online traffic is ragged: every page view carries its own user id count
+Ku, per-candidate id count Ka and candidate count N. JAX compiles per
+shape, so scoring raw shapes would recompile on nearly every request —
+the latency cliff production scorers cannot afford. The engine lands the
+ROADMAP "bucketed shape padding" idea on the serving side:
+
+  * each request is padded up to a bucketed ENVELOPE (K_user, K_ad, N)
+    (pad slots carry the pad id with value 0, padded candidates are
+    sliced off the result);
+  * per envelope the scoring executable is AOT-compiled ONCE
+    (``jit(...).lower(...).compile()``) and cached; envelope keys are the
+    ONLY source of compilation, so once the bucket set is warm a request
+    replay of any mix/order triggers ZERO recompiles (asserted in
+    ``tests/test_serve_engine.py``). An AOT executable also cannot
+    silently retrace — a shape bug raises instead of recompiling.
+
+Scoring runs the session-shared path (``serve.score.score_bundles``,
+Eq. 13): the user contraction happens once per request and broadcasts
+over its padded candidate block. The model (full Theta or a pruned
+:class:`~repro.serve.compress.ServingArtifact`) is normalised and placed
+on device once at engine construction; requests stay in the original id
+space either way.
+
+:class:`EngineStats` keeps the latency/throughput ledger: request and
+candidate counts, per-envelope hit counts, compile count and seconds,
+and scoring wall seconds (used by ``benchmarks/bench_serve.py`` and the
+``repro.launch.serve`` smoke).
+"""
+from __future__ import annotations
+
+import time
+from typing import NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serve.score import ScoreBundle, as_model, score_bundles
+
+# default bucket edges; above the top edge, round up to a multiple of it.
+# K edges are dense at the small end (production id lists are tens),
+# N edges cover typical candidate-slate sizes.
+DEFAULT_K_BUCKETS = (8, 16, 24, 32, 48, 64)
+DEFAULT_N_BUCKETS = (4, 8, 16, 32, 64)
+
+
+class BundleRequest(NamedTuple):
+    """One page view: a user id list + N candidate id lists (original id
+    space, no padding — the engine pads)."""
+
+    user_ids: np.ndarray  # (Ku,) int
+    user_vals: np.ndarray  # (Ku,) float
+    ad_ids: np.ndarray  # (N, Ka) int
+    ad_vals: np.ndarray  # (N, Ka) float
+
+
+class EngineStats:
+    """Mutable serving ledger (one per engine)."""
+
+    def __init__(self):
+        self.requests = 0
+        self.candidates = 0
+        self.compiles = 0
+        self.compile_seconds = 0.0
+        self.score_seconds = 0.0
+        self.bucket_hits: dict[tuple[int, int, int], int] = {}
+
+    @property
+    def latency_us(self) -> float:
+        """Mean per-request scoring wall time (padding + device + sync)."""
+        return self.score_seconds / self.requests * 1e6 if self.requests else 0.0
+
+    @property
+    def candidates_per_sec(self) -> float:
+        return self.candidates / self.score_seconds if self.score_seconds else 0.0
+
+    def as_dict(self) -> dict:
+        return {
+            "requests": self.requests,
+            "candidates": self.candidates,
+            "compiles": self.compiles,
+            "compile_seconds": self.compile_seconds,
+            "score_seconds": self.score_seconds,
+            "latency_us": self.latency_us,
+            "candidates_per_sec": self.candidates_per_sec,
+            "bucket_hits": {"x".join(map(str, k)): v
+                            for k, v in self.bucket_hits.items()},
+        }
+
+
+def _round_up(x: int, buckets: Sequence[int]) -> int:
+    """Smallest bucket edge >= x; past the top edge, next multiple of it."""
+    if x <= 0:
+        raise ValueError(f"dimension must be positive, got {x}")
+    for b in buckets:
+        if x <= b:
+            return b
+    top = buckets[-1]
+    return -(-x // top) * top
+
+
+class ScoringEngine:
+    """Steady-state no-recompile bundle scorer (see module docstring)."""
+
+    def __init__(self, model, *, mode: str = "auto", dedup: bool = True,
+                 k_buckets: Sequence[int] = DEFAULT_K_BUCKETS,
+                 n_buckets: Sequence[int] = DEFAULT_N_BUCKETS):
+        self._model = as_model(model)  # arrays are already device-resident
+        self._mode = mode
+        self._dedup = dedup
+        self._k_buckets = tuple(sorted(k_buckets))
+        self._n_buckets = tuple(sorted(n_buckets))
+        self._pad_id = self._model.num_features  # original-space pad id
+        self._compiled: dict[tuple[int, int, int], jax.stages.Compiled] = {}
+        self.stats = EngineStats()
+
+    # ------------------------------------------------------------ envelopes
+    def envelope(self, request: BundleRequest) -> tuple[int, int, int]:
+        """The (K_user, K_ad, N) bucket this request is served under."""
+        ku = _round_up(request.user_ids.shape[-1], self._k_buckets)
+        ka = _round_up(request.ad_ids.shape[-1], self._k_buckets)
+        n = _round_up(request.ad_ids.shape[0], self._n_buckets)
+        return ku, ka, n
+
+    def _executable(self, key: tuple[int, int, int]):
+        comp = self._compiled.get(key)
+        if comp is None:
+            ku, ka, n = key
+            model, mode, dedup = self._model, self._mode, self._dedup
+
+            def fn(ui, uv, ai, av):
+                bundle = ScoreBundle(ui, uv, ai, av,
+                                     jnp.zeros((n,), jnp.int32))
+                return score_bundles(model, bundle, mode=mode, dedup=dedup)
+
+            t0 = time.perf_counter()
+            comp = jax.jit(fn).lower(
+                jax.ShapeDtypeStruct((1, ku), jnp.int32),
+                jax.ShapeDtypeStruct((1, ku), jnp.float32),
+                jax.ShapeDtypeStruct((n, ka), jnp.int32),
+                jax.ShapeDtypeStruct((n, ka), jnp.float32),
+            ).compile()
+            self.stats.compile_seconds += time.perf_counter() - t0
+            self.stats.compiles += 1
+            self._compiled[key] = comp
+        return comp
+
+    def warm(self, envelopes: Sequence[tuple[int, int, int]]) -> None:
+        """Precompile a bucket set (deploy-time, off the request path)."""
+        for key in envelopes:
+            self._executable(key)
+
+    # -------------------------------------------------------------- scoring
+    def _pad(self, request: BundleRequest, key: tuple[int, int, int]):
+        ku, ka, n = key
+        n_real, ka_real = request.ad_ids.shape
+        ui = np.full((1, ku), self._pad_id, np.int32)
+        ui[0, :request.user_ids.shape[-1]] = request.user_ids
+        uv = np.zeros((1, ku), np.float32)
+        uv[0, :request.user_vals.shape[-1]] = request.user_vals
+        ai = np.full((n, ka), self._pad_id, np.int32)
+        ai[:n_real, :ka_real] = request.ad_ids
+        av = np.zeros((n, ka), np.float32)
+        av[:n_real, :ka_real] = request.ad_vals
+        return ui, uv, ai, av
+
+    def score(self, request: BundleRequest) -> np.ndarray:
+        """p(y=1|x) for each of the request's N candidates, in order."""
+        key = self.envelope(request)
+        comp = self._executable(key)  # compile time books separately
+        t0 = time.perf_counter()
+        ui, uv, ai, av = self._pad(request, key)
+        p = np.asarray(jax.block_until_ready(comp(ui, uv, ai, av)))
+        self.stats.score_seconds += time.perf_counter() - t0
+        self.stats.requests += 1
+        n_real = request.ad_ids.shape[0]
+        self.stats.candidates += n_real
+        self.stats.bucket_hits[key] = self.stats.bucket_hits.get(key, 0) + 1
+        return p[:n_real]
+
+    def score_many(self, requests: Sequence[BundleRequest]) -> list[np.ndarray]:
+        return [self.score(r) for r in requests]
+
+
+def synthetic_requests(num: int, *, num_features: int,
+                       k_user: tuple[int, int] = (12, 24),
+                       k_ad: tuple[int, int] = (6, 12),
+                       n_ads: tuple[int, int] = (10, 30),
+                       seed: int = 0) -> list[BundleRequest]:
+    """Ragged random request traffic for tests/benches/smokes: every
+    request draws its own Ku, Ka and N uniformly from the given ranges
+    (inclusive), ids uniform over the ORIGINAL feature space."""
+    rng = np.random.default_rng(seed)
+    out = []
+    for _ in range(num):
+        ku = int(rng.integers(k_user[0], k_user[1] + 1))
+        ka = int(rng.integers(k_ad[0], k_ad[1] + 1))
+        n = int(rng.integers(n_ads[0], n_ads[1] + 1))
+        out.append(BundleRequest(
+            user_ids=rng.integers(0, num_features, (ku,)).astype(np.int32),
+            user_vals=(rng.normal(size=(ku,)) / np.sqrt(ku)).astype(np.float32),
+            ad_ids=rng.integers(0, num_features, (n, ka)).astype(np.int32),
+            ad_vals=(rng.normal(size=(n, ka)) / np.sqrt(ka)).astype(np.float32),
+        ))
+    return out

@@ -1,0 +1,88 @@
+"""Unit tests for the CTR metrics (repro.eval.metrics): AUC and the
+calibration ratio get exact hand-computed cases — they gate the serving
+parity checks and the bench_serve / bench_stream decay rows."""
+import numpy as np
+import pytest
+
+from repro.eval import auc, calibration_ratio, log_loss, normalized_entropy
+
+
+# ---------------------------------------------------------------- AUC
+def test_auc_perfect_ranking():
+    y = np.array([0, 0, 1, 1])
+    assert auc(y, np.array([0.1, 0.2, 0.8, 0.9])) == 1.0
+
+
+def test_auc_inverted_ranking():
+    y = np.array([0, 0, 1, 1])
+    assert auc(y, np.array([0.9, 0.8, 0.2, 0.1])) == 0.0
+
+
+def test_auc_all_tied_is_half():
+    y = np.array([0, 1, 0, 1, 1])
+    assert auc(y, np.full(5, 0.5)) == 0.5
+
+
+def test_auc_degenerate_labels():
+    s = np.array([0.2, 0.4, 0.6])
+    assert auc(np.zeros(3), s) == 0.5
+    assert auc(np.ones(3), s) == 0.5
+
+
+def test_auc_hand_case_with_tie():
+    # scores: pos {0.8, 0.5}, neg {0.5, 0.2}; pairs: (0.8 beats both)=2,
+    # (0.5 vs 0.5)=0.5, (0.5 beats 0.2)=1 -> 3.5/4
+    y = np.array([1, 1, 0, 0])
+    s = np.array([0.8, 0.5, 0.5, 0.2])
+    assert auc(y, s) == pytest.approx(3.5 / 4)
+
+
+def test_auc_matches_pairwise_reference():
+    rng = np.random.default_rng(0)
+    y = (rng.random(200) < 0.3).astype(np.float64)
+    s = np.round(rng.random(200), 2)  # coarse grid -> plenty of ties
+    pos, neg = s[y == 1], s[y == 0]
+    wins = (pos[:, None] > neg[None, :]).sum()
+    ties = (pos[:, None] == neg[None, :]).sum()
+    ref = (wins + 0.5 * ties) / (len(pos) * len(neg))
+    assert auc(y, s) == pytest.approx(ref, abs=1e-12)
+
+
+# -------------------------------------------------------- calibration
+def test_calibration_exact_ratio():
+    y = np.array([1, 0, 0, 1])  # empirical CTR 0.5
+    p = np.array([0.5, 0.5, 0.5, 0.5])  # mean predicted 0.5
+    assert calibration_ratio(y, p) == pytest.approx(1.0)
+    assert calibration_ratio(y, 2 * p / 3) == pytest.approx(2 / 3)
+
+
+def test_calibration_is_mean_pred_over_mean_empirical():
+    rng = np.random.default_rng(1)
+    y = (rng.random(500) < 0.2).astype(np.float64)
+    p = rng.random(500)
+    assert calibration_ratio(y, p) == pytest.approx(p.mean() / y.mean())
+
+
+def test_calibration_no_clicks_is_inf():
+    assert calibration_ratio(np.zeros(4), np.full(4, 0.3)) == float("inf")
+
+
+# ------------------------------------------------- log-loss / NE sanity
+def test_log_loss_known_value():
+    y = np.array([1.0, 0.0])
+    p = np.array([0.8, 0.4])
+    want = -(np.log(0.8) + np.log(0.6)) / 2
+    assert log_loss(y, p) == pytest.approx(want)
+
+
+def test_normalized_entropy_base_rate_predictor_is_one():
+    rng = np.random.default_rng(2)
+    y = (rng.random(4000) < 0.25).astype(np.float64)
+    p = np.full(4000, y.mean())
+    assert normalized_entropy(y, p) == pytest.approx(1.0, abs=1e-9)
+
+
+def test_data_auc_reexport_is_same_function():
+    from repro.data import auc as data_auc
+
+    assert data_auc is auc

@@ -1,0 +1,211 @@
+"""Pruned serving artifacts: compress -> save -> load -> score round
+trips. The acceptance bar: pruned-artifact scoring is BIT-IDENTICAL to
+full-Theta scoring on the sparse paths (flat COO, session-shared,
+interpret-mode kernel), and <= 1e-6 on the dense path (shorter
+reassociated contraction — the documented carve-out). Covers an
+all-rows-alive model and a heavily-pruned OWLQN+-trained model whose
+sparsity pattern comes from real L1/L2,1 training on Zipf id traffic.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.lsplm import params_from_theta, predict_proba
+from repro.core.objective import smooth_loss_and_grad
+from repro.data.sparse import generate_sparse, to_dense
+from repro.serve import (
+    ScoreBundle,
+    as_model,
+    compress,
+    load_artifact,
+    save_artifact,
+    score_bundles,
+    score_dense,
+    score_sparse,
+)
+
+
+def _sparsified_theta(d, m, nnz=0.1, seed=0):
+    rng = np.random.default_rng(seed)
+    th = rng.normal(size=(d, 2 * m)).astype(np.float32) * 0.2
+    th[rng.random(d) >= nnz] = 0.0
+    return jnp.asarray(th)
+
+
+def _requests(d, n=64, k=9, seed=1, pad_frac=0.25):
+    rng = np.random.default_rng(seed)
+    ids = rng.integers(0, d, (n, k))
+    vals = rng.normal(size=(n, k)).astype(np.float32)
+    n_pad = int(round(pad_frac * k))
+    if n_pad:
+        ids[:, k - n_pad:] = d
+        vals[:, k - n_pad:] = 0.0
+    return jnp.asarray(ids, jnp.int32), jnp.asarray(vals)
+
+
+# ------------------------------------------------------------ compress
+def test_compress_structure():
+    theta = _sparsified_theta(500, 3)
+    art = compress(theta)
+    alive = np.flatnonzero(np.abs(np.asarray(theta)).max(axis=1) > 0)
+    assert art.num_features == 500
+    assert art.num_regions == 3
+    assert art.num_alive == alive.size
+    np.testing.assert_array_equal(np.asarray(art.alive_ids), alive)
+    # packed rows are the alive rows verbatim + one zero pad row
+    np.testing.assert_array_equal(np.asarray(art.theta[:-1]),
+                                  np.asarray(theta)[alive])
+    assert not np.asarray(art.theta[-1]).any()
+    # remap: alive ids -> their packed position, dropped + pad id -> pad row
+    remap = np.asarray(art.remap)
+    np.testing.assert_array_equal(remap[alive], np.arange(alive.size))
+    dropped = np.setdiff1d(np.arange(501), alive)
+    assert (remap[dropped] == art.pad_id).all()
+
+
+def test_compress_rejects_padded_or_odd_theta():
+    with pytest.raises(ValueError):
+        compress(jnp.zeros((10, 5)))  # odd last dim
+    with pytest.raises(ValueError):
+        compress(jnp.zeros((10,)))
+
+
+def test_compress_all_rows_dead():
+    art = compress(jnp.zeros((50, 4)))
+    assert art.num_alive == 0
+    ids, vals = _requests(50, n=8, k=4)
+    p = np.asarray(score_sparse(art, ids, vals))
+    np.testing.assert_allclose(p, 0.5)  # z == 0 -> sigmoid mix is exactly 1/2
+
+
+def test_compress_threshold_drops_small_rows():
+    theta = np.zeros((10, 4), np.float32)
+    theta[2] = 1e-4
+    theta[7] = 1.0
+    art = compress(jnp.asarray(theta), threshold=1e-3)
+    np.testing.assert_array_equal(np.asarray(art.alive_ids), [7])
+
+
+# ------------------------------------------------- round trip + parity
+def _assert_all_paths_bitwise(theta, art, *, d, seed=3):
+    """Flat sparse, interpret-mode kernel and session-shared scoring all
+    bit-identical between the full Theta and the artifact."""
+    full = as_model(theta)
+    ids, vals = _requests(d, n=48, k=7, seed=seed)
+    np.testing.assert_array_equal(
+        np.asarray(score_sparse(full, ids, vals)),
+        np.asarray(score_sparse(art, ids, vals)))
+    np.testing.assert_array_equal(
+        np.asarray(score_sparse(full, ids, vals, mode="interpret")),
+        np.asarray(score_sparse(art, ids, vals, mode="interpret")))
+    batch = generate_sparse(num_features=d,
+                            num_user_features_range=(max(1, d // 2), d),
+                            sessions=12, seed=seed + 1, with_plans=False)
+    bundle = ScoreBundle(batch.user_ids, batch.user_vals,
+                         batch.ad_ids, batch.ad_vals, batch.session_id)
+    np.testing.assert_array_equal(
+        np.asarray(score_bundles(full, bundle)),
+        np.asarray(score_bundles(art, bundle)))
+    # dense: <= 1e-6, NOT bitwise (contraction over R alive columns)
+    x = jnp.asarray(to_dense(batch))
+    np.testing.assert_allclose(
+        np.asarray(score_dense(full, x)), np.asarray(score_dense(art, x)),
+        rtol=1e-6, atol=1e-6)
+
+
+def test_roundtrip_pruned_model(tmp_path):
+    d = 800
+    theta = _sparsified_theta(d, 4, nnz=0.07)
+    art = compress(theta)
+    assert 0 < art.num_alive < d // 4  # actually pruned
+    path = str(tmp_path / "art.npz")
+    save_artifact(path, art)
+    loaded = load_artifact(path)
+    for a, b in zip(art[:-1], loaded[:-1]):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert loaded.num_features == art.num_features
+    _assert_all_paths_bitwise(theta, loaded, d=d)
+
+
+def test_roundtrip_all_rows_alive(tmp_path):
+    d = 300
+    rng = np.random.default_rng(5)
+    theta = jnp.asarray(rng.normal(size=(d, 4)).astype(np.float32) + 3.0)
+    art = compress(theta)  # nothing to drop
+    assert art.num_alive == d
+    path = str(tmp_path / "art_full.npz")
+    save_artifact(path, art)
+    _assert_all_paths_bitwise(theta, load_artifact(path), d=d)
+
+
+@pytest.mark.slow
+def test_roundtrip_owlqn_trained_zipf_model(tmp_path):
+    """The real thing: OWLQN+ with strong L1/L2,1 on Zipf id traffic
+    leaves most rows exactly zero; the pruned artifact must reproduce
+    the trained model's scores bit-for-bit."""
+    from repro.optim import OWLQNPlus
+
+    d, m = 2000, 3
+    train = generate_sparse(num_features=d,
+                            num_user_features_range=(d // 2, d),
+                            sessions=96, seed=7)
+    theta0 = jnp.asarray(
+        0.01 * np.random.default_rng(0).normal(size=(d, 2 * m)), jnp.float32)
+    opt = OWLQNPlus(lambda t: smooth_loss_and_grad(t, train),
+                    lam=0.5, beta=0.5)
+    theta, _ = opt.run(theta0, max_iters=12)
+    art = compress(theta)
+    assert art.num_alive < d // 2, "training should have pruned heavily"
+    assert art.num_alive > 0
+    path = str(tmp_path / "trained.npz")
+    save_artifact(path, art)
+    _assert_all_paths_bitwise(theta, load_artifact(path), d=d, seed=9)
+
+
+def test_dropped_id_requests_hit_pad_row():
+    """A request touching ONLY dropped ids scores exactly like the full
+    model (whose rows there are exact zeros)."""
+    d = 400
+    theta = _sparsified_theta(d, 2, nnz=0.05, seed=11)
+    art = compress(theta)
+    dropped = np.setdiff1d(np.arange(d), np.asarray(art.alive_ids))
+    rng = np.random.default_rng(12)
+    ids = jnp.asarray(rng.choice(dropped, (16, 6)), jnp.int32)
+    vals = jnp.asarray(rng.normal(size=(16, 6)).astype(np.float32))
+    np.testing.assert_array_equal(
+        np.asarray(score_sparse(theta, ids, vals)),
+        np.asarray(score_sparse(art, ids, vals)))
+
+
+def test_dense_matches_core_predictor():
+    """score_dense(full Theta) is the same math as the core predictor."""
+    d = 150
+    theta = _sparsified_theta(d, 4, nnz=0.5, seed=13)
+    rng = np.random.default_rng(14)
+    x = jnp.asarray(rng.normal(size=(32, d)).astype(np.float32))
+    np.testing.assert_allclose(
+        np.asarray(score_dense(theta, x)),
+        np.asarray(predict_proba(params_from_theta(theta), x)),
+        rtol=1e-6, atol=1e-7)
+
+
+def test_save_artifact_returns_real_path(tmp_path):
+    """np.savez appends .npz to suffix-less paths; save_artifact returns
+    the path actually written so callers can print/reload it."""
+    art = compress(_sparsified_theta(60, 2))
+    bare = str(tmp_path / "art")  # no suffix
+    real = save_artifact(bare, art)
+    assert real == bare + ".npz"
+    loaded = load_artifact(real)
+    np.testing.assert_array_equal(np.asarray(loaded.theta),
+                                  np.asarray(art.theta))
+    assert save_artifact(real, art) == real  # suffixed path is unchanged
+
+
+def test_load_artifact_rejects_foreign_checkpoint(tmp_path):
+    from repro.io import checkpoint
+
+    path = str(tmp_path / "not_art.npz")
+    checkpoint.save(path, {"theta": np.zeros((4, 4), np.float32)})
+    with pytest.raises(ValueError, match="missing fields"):
+        load_artifact(path)

@@ -1,0 +1,124 @@
+"""The bucketed scoring engine: envelope rounding, padded-score parity
+with direct unpadded scoring, the steady-state ZERO-recompile guarantee
+under a randomized request replay, and the stats ledger."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.serve import (
+    BundleRequest,
+    ScoreBundle,
+    ScoringEngine,
+    compress,
+    score_bundles,
+    synthetic_requests,
+)
+from repro.serve.engine import _round_up
+
+D, M = 700, 3
+
+
+@pytest.fixture(scope="module")
+def theta():
+    rng = np.random.default_rng(0)
+    th = rng.normal(size=(D, 2 * M)).astype(np.float32) * 0.3
+    th[rng.random(D) >= 0.2] = 0.0
+    return jnp.asarray(th)
+
+
+def _direct_scores(theta, req: BundleRequest) -> np.ndarray:
+    """Unpadded single-bundle scoring through the plain score layer."""
+    n = req.ad_ids.shape[0]
+    bundle = ScoreBundle(
+        user_ids=jnp.asarray(req.user_ids[None], jnp.int32),
+        user_vals=jnp.asarray(req.user_vals[None]),
+        ad_ids=jnp.asarray(req.ad_ids, jnp.int32),
+        ad_vals=jnp.asarray(req.ad_vals),
+        session_id=jnp.zeros((n,), jnp.int32))
+    return np.asarray(score_bundles(theta, bundle))
+
+
+# ------------------------------------------------------------ envelopes
+def test_round_up_bucket_edges():
+    assert _round_up(1, (8, 16)) == 8
+    assert _round_up(8, (8, 16)) == 8
+    assert _round_up(9, (8, 16)) == 16
+    assert _round_up(17, (8, 16)) == 32  # past the top: multiples of it
+    assert _round_up(33, (8, 16)) == 48
+    with pytest.raises(ValueError):
+        _round_up(0, (8, 16))
+
+
+def test_envelope_uses_configured_buckets(theta):
+    eng = ScoringEngine(theta, k_buckets=(4, 8), n_buckets=(2, 4))
+    req = synthetic_requests(1, num_features=D, k_user=(5, 5), k_ad=(3, 3),
+                             n_ads=(3, 3))[0]
+    assert eng.envelope(req) == (8, 4, 4)
+
+
+# ------------------------------------------------------ score parity
+def test_engine_scores_match_direct(theta):
+    """Padding to the envelope must not change the scores beyond fp
+    reassociation of the padded-K contraction (<= 1e-6)."""
+    eng = ScoringEngine(theta)
+    for req in synthetic_requests(12, num_features=D, seed=1):
+        np.testing.assert_allclose(eng.score(req), _direct_scores(theta, req),
+                                   rtol=1e-6, atol=1e-6)
+
+
+def test_engine_pruned_equals_full(theta):
+    """The engine on a pruned artifact returns BIT-identical scores to
+    the engine on the full Theta (same envelopes, same kernel path)."""
+    full = ScoringEngine(theta)
+    pruned = ScoringEngine(compress(theta))
+    for req in synthetic_requests(8, num_features=D, seed=2):
+        np.testing.assert_array_equal(full.score(req), pruned.score(req))
+
+
+# --------------------------------------------------- steady-state cache
+def test_zero_recompiles_on_randomized_replay(theta):
+    rng = np.random.default_rng(3)
+    eng = ScoringEngine(theta)
+    requests = synthetic_requests(40, num_features=D, seed=4)
+    eng.warm({eng.envelope(r) for r in requests})
+    warm_compiles = eng.stats.compiles
+    assert warm_compiles == len({eng.envelope(r) for r in requests})
+    first = {}
+    for _ in range(3):  # three shuffled replays of the same traffic
+        order = rng.permutation(len(requests))
+        for i in order:
+            p = eng.score(requests[i])
+            if i in first:
+                np.testing.assert_array_equal(p, first[i])  # deterministic
+            else:
+                first[i] = p
+    assert eng.stats.compiles == warm_compiles, "steady state recompiled"
+    assert eng.stats.requests == 3 * len(requests)
+
+
+def test_new_envelope_compiles_exactly_once(theta):
+    eng = ScoringEngine(theta, k_buckets=(8,), n_buckets=(4,))
+    reqs = synthetic_requests(4, num_features=D, k_user=(6, 6), k_ad=(4, 4),
+                              n_ads=(3, 3), seed=5)
+    eng.score(reqs[0])
+    assert eng.stats.compiles == 1
+    eng.score_many(reqs[1:])
+    assert eng.stats.compiles == 1  # same envelope, cached executable
+    big = synthetic_requests(1, num_features=D, k_user=(10, 10), k_ad=(4, 4),
+                             n_ads=(3, 3), seed=6)[0]
+    eng.score(big)  # Ku 10 -> bucket 16 (8x2): a genuinely new envelope
+    assert eng.stats.compiles == 2
+
+
+def test_stats_ledger(theta):
+    eng = ScoringEngine(theta)
+    requests = synthetic_requests(10, num_features=D, seed=7)
+    eng.score_many(requests)
+    s = eng.stats
+    assert s.requests == 10
+    assert s.candidates == sum(r.ad_ids.shape[0] for r in requests)
+    assert sum(s.bucket_hits.values()) == 10
+    assert s.score_seconds > 0 and s.compile_seconds > 0
+    assert s.latency_us > 0 and s.candidates_per_sec > 0
+    d = s.as_dict()
+    assert d["requests"] == 10 and len(d["bucket_hits"]) == len(s.bucket_hits)

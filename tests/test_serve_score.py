@@ -1,0 +1,192 @@
+"""The unified inference layer (repro.serve.score): one predict() for
+dense, flat-COO and session-shared requests, polymorphic over full
+Theta / LSPLMParams / pruned artifacts, in parity with the kernel
+oracles and the core predictors it replaced."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.lsplm import (
+    params_from_theta,
+    predict_logits_stable_sparse,
+    predict_proba,
+    predict_proba_sparse,
+)
+from repro.data.sparse import generate_sparse, sparse_predict, to_dense
+from repro.kernels.lsplm_sparse_fused.ref import (
+    lsplm_sparse_forward_ref,
+    lsplm_sparse_logps_ref,
+)
+from repro.kernels.lsplm_sparse_fused.ops import pad_theta
+from repro.serve import (
+    ScoreBundle,
+    ServingModel,
+    as_model,
+    compress,
+    predict,
+    score_bundles,
+    score_bundles_naive,
+    score_dense,
+    score_sparse,
+    score_sparse_logps,
+)
+
+D, M = 600, 3
+
+
+@pytest.fixture(scope="module")
+def theta():
+    rng = np.random.default_rng(0)
+    th = rng.normal(size=(D, 2 * M)).astype(np.float32) * 0.3
+    th[rng.random(D) >= 0.3] = 0.0
+    return jnp.asarray(th)
+
+
+@pytest.fixture(scope="module")
+def batch():
+    return generate_sparse(num_features=D,
+                           num_user_features_range=(D // 2, D),
+                           sessions=16, seed=2, with_plans=False)
+
+
+def _bundle(batch):
+    return ScoreBundle(batch.user_ids, batch.user_vals,
+                       batch.ad_ids, batch.ad_vals, batch.session_id)
+
+
+# ------------------------------------------------------------- as_model
+def test_as_model_forms(theta):
+    full = as_model(theta)
+    assert isinstance(full, ServingModel)
+    assert full.remap is None and full.num_features == D
+    np.testing.assert_array_equal(np.asarray(full.theta),
+                                  np.asarray(pad_theta(theta)))
+    # idempotent; params and artifacts coerce too
+    assert as_model(full) is full
+    from_params = as_model(params_from_theta(theta))
+    np.testing.assert_array_equal(np.asarray(from_params.theta),
+                                  np.asarray(full.theta))
+    art = as_model(compress(theta))
+    assert art.remap is not None
+
+
+def test_as_model_rejects_bad_shapes():
+    with pytest.raises(ValueError):
+        as_model(jnp.zeros((10, 3)))
+
+
+# ------------------------------------------------------------- parities
+def test_score_sparse_matches_oracle(theta):
+    rng = np.random.default_rng(3)
+    ids = jnp.asarray(rng.integers(0, D, (40, 8)), jnp.int32)
+    vals = jnp.asarray(rng.normal(size=(40, 8)).astype(np.float32))
+    np.testing.assert_allclose(
+        np.asarray(score_sparse(theta, ids, vals)),
+        np.asarray(lsplm_sparse_forward_ref(ids, vals, pad_theta(theta))),
+        rtol=1e-6, atol=1e-7)
+
+
+def test_score_sparse_logps_matches_oracle(theta):
+    rng = np.random.default_rng(4)
+    ids = jnp.asarray(rng.integers(0, D, (24, 6)), jnp.int32)
+    vals = jnp.asarray(rng.normal(size=(24, 6)).astype(np.float32))
+    lp1, lp0 = score_sparse_logps(theta, ids, vals)
+    r1, r0 = lsplm_sparse_logps_ref(ids, vals, pad_theta(theta))
+    np.testing.assert_allclose(np.asarray(lp1), np.asarray(r1),
+                               rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(lp0), np.asarray(r0),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_bundles_shared_equals_naive_equals_dense(theta, batch):
+    b = _bundle(batch)
+    p_shared = np.asarray(score_bundles(theta, b))
+    p_naive = np.asarray(score_bundles_naive(theta, b))
+    np.testing.assert_allclose(p_shared, p_naive, rtol=1e-5, atol=1e-6)
+    x = jnp.asarray(to_dense(batch))
+    p_dense = np.asarray(predict_proba(params_from_theta(theta), x))
+    np.testing.assert_allclose(p_shared, p_dense, rtol=1e-4, atol=1e-5)
+
+
+def test_predict_dispatcher(theta, batch):
+    b = _bundle(batch)
+    np.testing.assert_array_equal(np.asarray(predict(theta, batch)),
+                                  np.asarray(score_bundles(theta, b)))
+    np.testing.assert_array_equal(np.asarray(predict(theta, b)),
+                                  np.asarray(score_bundles(theta, b)))
+    rng = np.random.default_rng(5)
+    ids = jnp.asarray(rng.integers(0, D, (10, 5)), jnp.int32)
+    vals = jnp.asarray(rng.normal(size=(10, 5)).astype(np.float32))
+    np.testing.assert_array_equal(np.asarray(predict(theta, (ids, vals))),
+                                  np.asarray(score_sparse(theta, ids, vals)))
+    x = jnp.asarray(rng.normal(size=(6, D)).astype(np.float32))
+    np.testing.assert_array_equal(np.asarray(predict(theta, x)),
+                                  np.asarray(score_dense(theta, x)))
+
+
+def test_legacy_entry_points_route_through_serve(theta, batch):
+    """The rewired predictors (core + data) agree with the serve layer
+    exactly — they ARE the serve layer now."""
+    b = _bundle(batch)
+    np.testing.assert_array_equal(np.asarray(sparse_predict(theta, batch)),
+                                  np.asarray(score_bundles(theta, b)))
+    rng = np.random.default_rng(6)
+    ids = jnp.asarray(rng.integers(0, D, (12, 4)), jnp.int32)
+    vals = jnp.asarray(rng.normal(size=(12, 4)).astype(np.float32))
+    params = params_from_theta(theta)
+    np.testing.assert_array_equal(
+        np.asarray(predict_proba_sparse(params, ids, vals)),
+        np.asarray(score_sparse(theta, ids, vals)))
+    lp1, lp0 = predict_logits_stable_sparse(params, ids, vals)
+    s1, s0 = score_sparse_logps(theta, ids, vals)
+    np.testing.assert_array_equal(np.asarray(lp1), np.asarray(s1))
+    np.testing.assert_array_equal(np.asarray(lp0), np.asarray(s0))
+
+
+def test_artifact_plan_combination_rejected(theta, batch):
+    planned = generate_sparse(num_features=D,
+                              num_user_features_range=(D // 2, D),
+                              sessions=4, seed=7)  # with_plans=True
+    art = compress(theta)
+    with pytest.raises(ValueError, match="full Theta layout"):
+        score_sparse(art, planned.ad_ids, planned.ad_vals,
+                     plan=planned.ad_plan)
+    # the same plan on the FULL model is fine
+    score_sparse(theta, planned.ad_ids, planned.ad_vals,
+                 plan=planned.ad_plan)
+
+
+def test_predict_threads_plans_and_grads(theta):
+    """A plan-carrying SparseCTRBatch keeps its transpose plans through
+    predict()/sparse_predict: the forward is unchanged and the
+    differentiated call runs the plan-driven backward (same grads as the
+    no-plan scan fallback). On a pruned artifact the plans are dropped
+    (inference-only) instead of raising."""
+    import jax
+
+    planned = generate_sparse(num_features=D,
+                              num_user_features_range=(D // 2, D),
+                              sessions=8, seed=9)  # with_plans=True
+    assert planned.user_plan is not None
+    bare = planned._replace(user_plan=None, ad_plan=None)
+    np.testing.assert_array_equal(np.asarray(predict(theta, planned)),
+                                  np.asarray(predict(theta, bare)))
+    g_plan = jax.grad(lambda t: predict(t, planned).sum())(theta)
+    g_scan = jax.grad(lambda t: predict(t, bare).sum())(theta)
+    np.testing.assert_allclose(np.asarray(g_plan), np.asarray(g_scan),
+                               rtol=1e-5, atol=1e-6)
+    art = compress(theta)
+    np.testing.assert_array_equal(np.asarray(predict(art, planned)),
+                                  np.asarray(predict(art, bare)))
+
+
+def test_interpret_mode_pruned_parity(theta):
+    """CI gate: pruned-vs-full parity holds on the Pallas kernel path
+    (interpret mode) too, not just the jnp fallback."""
+    art = compress(theta)
+    rng = np.random.default_rng(8)
+    ids = jnp.asarray(rng.integers(0, D, (16, 5)), jnp.int32)
+    vals = jnp.asarray(rng.normal(size=(16, 5)).astype(np.float32))
+    np.testing.assert_array_equal(
+        np.asarray(score_sparse(theta, ids, vals, mode="interpret")),
+        np.asarray(score_sparse(art, ids, vals, mode="interpret")))
