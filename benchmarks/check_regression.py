@@ -1,0 +1,223 @@
+"""CI bench-regression gate: diff a smoke run's BENCH_*.json against
+its committed baseline with per-metric tolerances.
+
+CI has always ARCHIVED the ``BENCH_*.json`` trajectories; this is the
+step that finally reads them. After every bench-smoke step the workflow
+runs::
+
+    python -m benchmarks.check_regression BENCH_serve.json \
+        --baseline benchmarks/baselines/BENCH_serve.json \
+        --summary "$GITHUB_STEP_SUMMARY"
+
+Both files flatten to dotted metric paths; every baseline metric is
+matched against the RULES table below (first regex wins) and the
+comparison table lands in the GitHub step summary on every push —
+pass or fail. The build fails when:
+
+  * a gated metric degrades past its tolerance,
+  * a baseline metric disappears from the run (a silently-skipped
+    benchmark section must not look green),
+  * the run recorded an ``error`` (``benchmarks/run.py --json`` writes
+    the traceback into the JSON when a gate raises).
+
+Tolerance philosophy — smoke shapes on shared CI runners:
+
+  * DETERMINISTIC metrics (compile counts, dispatch grouping, parity
+    strings, config echoes, sparsity/size ratios) gate EXACTLY — any
+    drift is a real behaviour change;
+  * QUALITY metrics (AUC) gate tightly — they are seeded and should
+    not move;
+  * SPEED metrics (us, seconds, ads/sec, QPS, speedup ratios) gate
+    LOOSELY (runner hardware varies): latency may grow up to 5x, and
+    throughput/speedups may drop to 20%/half before failing. The gate
+    catches order-of-magnitude regressions — an accidentally-serialised
+    hot path, a recompile storm — not scheduler noise;
+  * TRAFFIC-DEPENDENT counters (queue flush mix, occupancy, rejects —
+    functions of real measured service times) are reported as info
+    only.
+
+Regenerating baselines when a change LEGITIMATELY moves a number is
+documented in README "CI & benchmarks": rerun the smoke bench with
+``--json`` and copy the fresh file into ``benchmarks/baselines/``, in
+the same PR as the change that moved it.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import re
+import sys
+
+# (regex on the dotted metric path, kind, tolerance) — FIRST match wins.
+# kinds: exact | higher_better | lower_better | forbidden | info
+RULES: list[tuple[str, str, float]] = [
+    (r"(^|\.)error$", "forbidden", 0.0),
+    # open-loop load rows: latency/throughput gate loosely, the flush
+    # mix / occupancy / shed counts follow real service walls -> info
+    (r"\.load\..*latency_p\d+_us$", "lower_better", 4.0),
+    (r"\.load\..*latency_mean_us$", "lower_better", 4.0),
+    (r"\.load\..*(candidates_per_sec|achieved_qps)$", "higher_better", 0.8),
+    (r"\.load\.", "info", 0.0),
+    # wall-clock-shaped engine counters that depend on traffic timing
+    (r"(^|\.)(qps|occupancy)$", "info", 0.0),
+    (r"(^|\.)(bucket_hits|flushes)\.", "info", 0.0),
+    (r"(^|\.)(requests|served|rejected|accepted|slots|candidates)$",
+     "info", 0.0),
+    # deterministic structure: any drift is a real behaviour change
+    (r"(^|\.)(compiles|dispatches|alive_rows|deployed_bytes)$", "exact", 0.0),
+    (r"(^|\.)(parity|backend|smoke)$", "exact", 0.0),
+    (r"(^|\.)(d|m|nnz_frac|sessions|ads_per_session|k_user|k_ad"
+     r"|max_batch|max_delay_us|max_pending|target_speedup"
+     r"|offered_qps)$", "exact", 0.0),
+    (r"(rows_ratio|deployed_size_ratio|compression)$", "lower_better", 0.01),
+    (r"(^|\.)max_dp$", "lower_better", 0.5),
+    # quality: seeded, should not move
+    (r"(^|\.)auc_\w+$", "higher_better", 0.02),
+    (r"(^|\.)calibration_\w+$", "info", 0.0),
+    # speed: loose (shared-runner noise), catches order-of-magnitude only
+    (r"(speedup_geomean|speedup)$", "higher_better", 0.5),
+    (r"(_us|_seconds)$", "lower_better", 4.0),
+    (r"(per_sec|steps_per_sec)$", "higher_better", 0.8),
+]
+DEFAULT_RULE = ("info", 0.0)
+
+
+def flatten(tree, prefix: str = "") -> dict:
+    """JSON -> {dotted.path: scalar leaf} (lists index numerically)."""
+    out: dict = {}
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out.update(flatten(v, f"{prefix}{k}."))
+    elif isinstance(tree, list):
+        for i, v in enumerate(tree):
+            out.update(flatten(v, f"{prefix}{i}."))
+    else:
+        out[prefix.rstrip(".")] = tree
+    return out
+
+
+def rule_for(path: str) -> tuple[str, float]:
+    for pattern, kind, tol in RULES:
+        if re.search(pattern, path):
+            return kind, tol
+    return DEFAULT_RULE
+
+
+def _fmt(v) -> str:
+    if isinstance(v, bool) or not isinstance(v, (int, float)):
+        return str(v)
+    if isinstance(v, int):
+        return str(v)
+    return f"{v:.4g}"
+
+
+def compare(baseline: dict, run: dict) -> tuple[list[dict], bool]:
+    """Row dicts for every baseline metric (+ run-side error keys and a
+    count of new metrics); second return is overall pass."""
+    base_flat, run_flat = flatten(baseline), flatten(run)
+    rows, ok = [], True
+    for path in sorted(set(base_flat) | set(run_flat)):
+        kind, tol = rule_for(path)
+        base_v, run_v = base_flat.get(path), run_flat.get(path)
+        row = {"metric": path, "kind": kind, "tol": tol,
+               "baseline": base_v, "run": run_v, "status": "ok"}
+        if kind == "forbidden":
+            if path in run_flat:
+                row["status"] = "FAIL: bench recorded an error"
+                ok = False
+            else:
+                continue  # error absent everywhere -> nothing to report
+        elif path not in run_flat:
+            row["status"] = "FAIL: metric missing from run"
+            ok = False
+        elif path not in base_flat:
+            row["status"] = "new (no baseline)"
+        elif kind == "exact":
+            if base_v != run_v:
+                row["status"] = "FAIL: changed (exact)"
+                ok = False
+        elif kind in ("higher_better", "lower_better"):
+            if not isinstance(run_v, (int, float)) \
+                    or not isinstance(base_v, (int, float)):
+                if base_v != run_v:
+                    row["status"] = "FAIL: changed (non-numeric)"
+                    ok = False
+            elif kind == "higher_better" and run_v < base_v * (1 - tol):
+                row["status"] = f"FAIL: below baseline - {tol:.0%}"
+                ok = False
+            elif kind == "lower_better" and run_v > base_v * (1 + tol):
+                row["status"] = f"FAIL: above baseline + {tol:.0%}"
+                ok = False
+        rows.append(row)
+    return rows, ok
+
+
+def render_markdown(name: str, rows: list[dict], ok: bool) -> str:
+    """The baseline-vs-run table for $GITHUB_STEP_SUMMARY: gated metrics
+    and failures in the open, info rows collapsed."""
+    gated = [r for r in rows if r["kind"] != "info"
+             or r["status"].startswith("FAIL")]
+    info_n = len(rows) - len(gated)
+    verdict = "PASS" if ok else "FAIL"
+    out = [f"### Bench regression gate — `{name}`: **{verdict}**", ""]
+    out += ["| metric | baseline | run | rule | status |",
+            "|---|---|---|---|---|"]
+    for r in gated:
+        rule = r["kind"] if r["kind"] in ("exact", "forbidden") \
+            else f"{r['kind']} ±{r['tol']:.0%}"
+        status = r["status"]
+        if status.startswith("FAIL"):
+            status = f"**{status}**"
+        out.append(f"| `{r['metric']}` | {_fmt(r['baseline'])} "
+                   f"| {_fmt(r['run'])} | {rule} | {status} |")
+    out.append("")
+    out.append(f"_{info_n} info-only metrics not shown "
+               f"(traffic-dependent counters, config echoes)._")
+    out.append("")
+    return "\n".join(out)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(
+        description="diff a BENCH_*.json smoke run against its committed "
+                    "baseline with per-metric tolerances")
+    ap.add_argument("run", help="the smoke run's BENCH_*.json")
+    ap.add_argument("--baseline", required=True,
+                    help="committed baseline (benchmarks/baselines/...)")
+    ap.add_argument("--summary", default=None,
+                    help="append the markdown comparison table here "
+                         "(pass $GITHUB_STEP_SUMMARY in CI)")
+    args = ap.parse_args()
+
+    try:
+        with open(args.baseline) as f:
+            baseline = json.load(f)
+    except FileNotFoundError:
+        print(f"no baseline at {args.baseline!r} — generate one with the "
+              "matching smoke bench (--smoke --json) and commit it there "
+              "(see README 'CI & benchmarks')", file=sys.stderr)
+        return 1
+    try:
+        with open(args.run) as f:
+            run = json.load(f)
+    except FileNotFoundError:
+        print(f"no bench output at {args.run!r} — did the bench-smoke step "
+              "run with --json?", file=sys.stderr)
+        return 1
+
+    rows, ok = compare(baseline, run)
+    md = render_markdown(args.run, rows, ok)
+    print(md)
+    if args.summary:
+        with open(args.summary, "a") as f:
+            f.write(md + "\n")
+    if not ok:
+        fails = [r for r in rows if r["status"].startswith("FAIL")]
+        print(f"regression gate FAILED on {len(fails)} metric(s); if a "
+              "change legitimately moved a number, regenerate the baseline "
+              "(README 'CI & benchmarks')", file=sys.stderr)
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

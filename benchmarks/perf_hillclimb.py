@@ -17,12 +17,10 @@ import dataclasses
 import json
 import time
 
-import jax
 
 from repro.configs import get_config
-from repro.launch.dryrun import _costs, analyse, lower_combo
+from repro.launch.dryrun import analyse, lower_combo
 from repro.launch.mesh import make_production_mesh
-from repro.utils.roofline import Roofline, model_flops_per_chip
 
 OUT = os.path.join(os.path.dirname(__file__), "perf_results.json")
 

@@ -51,7 +51,10 @@ SERVE_JSON = "BENCH_serve.json"
 
 def _select(mods, only: str):
     """--only: comma-separated names; each matches a module exactly
-    (``bench_stream`` / ``stream``) or as a substring."""
+    (``bench_stream`` / ``stream``) or as a substring. An unmatched name
+    is a hard error LISTING the valid modules — a typo must not silently
+    run nothing (CI would archive an empty artifact and call it green).
+    """
     picked = []
     for name in (s.strip() for s in only.split(",") if s.strip()):
         short = {m.__name__.split(".")[-1]: m for m in mods}
@@ -59,7 +62,9 @@ def _select(mods, only: str):
             [short[f"bench_{name}"]] if f"bench_{name}" in short
             else [m for m in mods if name in m.__name__])
         if not hits:
-            raise SystemExit(f"--only {name!r} matched no benchmark module")
+            raise SystemExit(
+                f"--only {name!r} matched no benchmark module; valid names: "
+                + ", ".join(sorted(short)))
         picked += [m for m in hits if m not in picked]
     return picked
 
@@ -114,7 +119,13 @@ def main() -> None:
             ok = False
             print(f"{mod.__name__},0,ERROR", file=sys.stderr)
             traceback.print_exc()
-        if collect:
+            if "collect" in kwargs:
+                collect["error"] = traceback.format_exc()
+        if "collect" in kwargs:
+            # written even when a gate raised (possibly partial, plus the
+            # "error" traceback): CI archives the trajectory either way
+            # and the regression gate reports WHAT was missing instead of
+            # diffing against a file that does not exist
             with open(json_paths[mod], "w") as f:
                 json.dump(collect, f, indent=2, sort_keys=True)
             print(f"wrote {json_paths[mod]}", file=sys.stderr)

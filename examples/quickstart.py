@@ -6,7 +6,6 @@ Reproduces the paper's core story in one page: LR underfits the nonlinear
 click distribution; LS-PLM (Eq. 2) fits it; L1+L2,1 (Eq. 4) keeps the
 model sparse; Algorithm 1 optimises the non-convex non-smooth objective.
 """
-import jax
 import jax.numpy as jnp
 import numpy as np
 

@@ -25,7 +25,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import regularizers
-from repro.core.lsplm import LSPLMParams, params_from_theta, predict_logits_stable
+from repro.core.lsplm import params_from_theta, predict_logits_stable
 from repro.kernels.lsplm_sparse_fused.ops import (
     logps_from_z,
     pad_theta,

@@ -2,7 +2,7 @@
 import jax
 
 from repro.kernels.flash_attention.flash_attention import flash_attention
-from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.flash_attention.ref import attention_ref  # noqa: F401  (re-export)
 
 
 def causal_attention(q, k, v, *, use_kernel: bool | None = None,

@@ -14,8 +14,22 @@ which saves ``{"theta": ...}``):
 The driver prints the prune ledger (rows alive, MiB shipped), proves
 pruned-vs-full score parity on a probe batch, then replays ragged
 synthetic bundles through the :class:`~repro.serve.engine.ScoringEngine`
-and reports the latency/throughput ledger — asserting the steady state
-(everything after the warmup pass) triggered ZERO recompiles.
+— one request per dispatch AND stacked same-envelope G>1 dispatches
+(parity-asserted) — and reports the latency/throughput ledger,
+asserting the steady state (everything after the warmup pass) triggered
+ZERO recompiles.
+
+``--int8`` additionally quantises the artifact (int8 rows + per-row
+fp32 scale), round-trips it through save/load, and serves THAT —
+printing the size win and the bounded probability drift vs fp32.
+
+``--load-qps`` switches on the traffic mode: open-loop Poisson arrivals
+at the given rate(s) through the micro-batching queue (deadline-aware
+flushing, admission control), reporting p50/p99 latency, achieved QPS
+and candidates/sec per offered rate:
+  PYTHONPATH=src python -m repro.launch.serve --train-iters 4 \
+      --sparse-features 5000 --sessions 96 --regions 2 --requests 128 \
+      --int8 --load-qps 500,2000 --max-batch 8 --max-delay-us 3000
 """
 import argparse
 import time
@@ -25,9 +39,13 @@ import numpy as np
 
 from repro.io import checkpoint
 from repro.serve import (
+    QueueConfig,
     ScoringEngine,
     as_model,
     compress,
+    load_artifact,
+    quantize,
+    replay_open_loop,
     save_artifact,
     score_sparse,
     synthetic_requests,
@@ -82,6 +100,19 @@ def main() -> int:
     ap.add_argument("--beta", type=float, default=0.05)
     ap.add_argument("--requests", type=int, default=256,
                     help="ragged synthetic bundles to replay")
+    ap.add_argument("--int8", action="store_true",
+                    help="quantise the artifact (int8 rows + fp32 row "
+                         "scales), round-trip through save/load, serve that")
+    ap.add_argument("--load-qps", default=None,
+                    help="traffic mode: comma-separated offered QPS rates "
+                         "for the open-loop Poisson replay through the "
+                         "micro-batching queue")
+    ap.add_argument("--max-batch", type=int, default=8,
+                    help="queue full-flush size (requests per dispatch)")
+    ap.add_argument("--max-delay-us", type=float, default=3_000.0,
+                    help="queue deadline: max micro-batching delay")
+    ap.add_argument("--max-pending", type=int, default=256,
+                    help="admission control: shed load past this backlog")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -106,22 +137,66 @@ def main() -> int:
         np.asarray(score_sparse(art, ids, vals)))
     print("parity: pruned scoring bit-identical to full Theta (512 probes)")
 
-    engine = ScoringEngine(art)
+    model = art
+    if args.int8:
+        import tempfile
+
+        q = quantize(art)
+        with tempfile.TemporaryDirectory() as tmp:
+            model = load_artifact(save_artifact(f"{tmp}/art_int8", q))
+        dp = float(np.abs(
+            np.asarray(score_sparse(model, ids, vals))
+            - np.asarray(score_sparse(art, ids, vals))).max())
+        assert dp <= 1e-2, f"int8 moved p by {dp:.2e} (> 1e-2)"
+        print(f"int8: rows payload {q.codes.size + q.scales.size * 4:,} B vs "
+              f"{art.theta.size * 4:,} B fp32 "
+              f"({art.theta.size * 4 / (q.codes.size + q.scales.size * 4):.1f}x"
+              f" smaller); round-tripped save/load; max |dp| = {dp:.1e}")
+
+    engine = ScoringEngine(model)
     requests = synthetic_requests(args.requests, num_features=d,
                                   seed=args.seed + 1)
-    # deploy-time warmup: compile the traffic's bucket set up front, then
-    # the whole replay is steady state
-    engine.warm({engine.envelope(r) for r in requests})
+    # deploy-time warmup: compile the traffic's bucket set (all batch
+    # sizes the G>1 path can round onto) up front, then the whole replay
+    # is steady state
+    envelopes = {engine.envelope(r) for r in requests}
+    engine.warm(envelopes, batch_sizes=engine.g_buckets)
     warm_compiles = engine.stats.compiles
-    engine.score_many(requests)
+    single = engine.score_many(requests)
+    batched = engine.score_batch(requests)
+    for p_one, p_many in zip(single, batched):
+        np.testing.assert_array_equal(p_one, p_many)
     s = engine.stats
     assert s.compiles == warm_compiles, \
         f"steady state recompiled: {s.compiles} != {warm_compiles}"
     print(f"engine: {s.requests} requests / {s.candidates} candidates over "
           f"{len(s.bucket_hits)} buckets; {s.compiles} compiles "
           f"({s.compile_seconds:.2f}s, all in warmup), steady state "
-          f"0 recompiles; {s.latency_us:.0f} us/request, "
-          f"{s.candidates_per_sec:,.0f} ads/s")
+          f"0 recompiles; single-vs-batched scores bit-identical; "
+          f"{s.latency_us:.0f} us/request, {s.candidates_per_sec:,.0f} ads/s, "
+          f"batched occupancy {s.occupancy:.2f}")
+
+    if args.load_qps:
+        cfg = QueueConfig(max_batch=args.max_batch,
+                          max_delay_us=args.max_delay_us,
+                          max_pending=args.max_pending)
+        for qps in (float(x) for x in args.load_qps.split(",") if x.strip()):
+            before = engine.stats.compiles
+            rep = replay_open_loop(engine, requests, qps=qps, config=cfg,
+                                   seed=args.seed + 2)
+            assert engine.stats.compiles == before, \
+                "queue replay recompiled in steady state"
+            print(f"load {qps:,.0f} qps offered: "
+                  f"p50 {rep['latency_p50_us']:,.0f} us, "
+                  f"p99 {rep['latency_p99_us']:,.0f} us, "
+                  f"achieved {rep['achieved_qps']:,.0f} qps, "
+                  f"{rep['candidates_per_sec']:,.0f} ads/s, "
+                  f"occupancy {rep['occupancy']:.2f}, "
+                  f"{rep['dispatches']} dispatches "
+                  f"({rep['flushes']['full']} full / "
+                  f"{rep['flushes']['deadline']} deadline / "
+                  f"{rep['flushes']['drain']} drain), "
+                  f"rejected {rep['rejected']}")
     return 0
 
 

@@ -16,7 +16,6 @@ Entry points:
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Any
 
 import jax

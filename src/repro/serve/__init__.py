@@ -1,16 +1,24 @@
 """Serving subsystem: pruned artifacts + the unified inference layer +
-the bucketed scoring engine (§3.2 / §4 of the paper, production side).
+the bucketed scoring engine + traffic shaping (§3.2 / §4 of the paper,
+production side).
 
 ``compress`` packs a trained Theta's surviving rows into a deployable
-:class:`ServingArtifact`; ``score`` is the one prediction layer every
-caller (training-eval, examples, the engine) goes through; ``engine``
-serves ragged request traffic with bucketed shape padding and per-bucket
-cached executables (steady state: zero recompiles).
+:class:`ServingArtifact` (and optionally int8-quantises it into a
+:class:`QuantizedArtifact`, ~4x smaller again); ``score`` is the one
+prediction layer every caller (training-eval, examples, the engine)
+goes through; ``engine`` serves ragged request traffic with bucketed
+shape padding, same-envelope G>1 batching and per-bucket cached
+executables (steady state: zero recompiles); ``traffic`` adds the
+micro-batching queue (deadline-aware flushing, admission control) and
+the open-loop Poisson load generator behind the p50/p99 benchmark.
 """
 from repro.serve.compress import (  # noqa: F401
+    QuantizedArtifact,
     ServingArtifact,
     compress,
+    dequantize,
     load_artifact,
+    quantize,
     save_artifact,
 )
 from repro.serve.engine import (  # noqa: F401
@@ -18,6 +26,14 @@ from repro.serve.engine import (  # noqa: F401
     EngineStats,
     ScoringEngine,
     synthetic_requests,
+)
+from repro.serve.traffic import (  # noqa: F401
+    Completion,
+    MicroBatchQueue,
+    QueueConfig,
+    QueueStats,
+    poisson_arrivals,
+    replay_open_loop,
 )
 from repro.serve.score import (  # noqa: F401
     ScoreBundle,

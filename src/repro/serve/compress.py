@@ -25,9 +25,20 @@ not change. The dense path contracts over R columns instead of d, which
 reassociates the reduction — parity there is <= 1e-6, not bitwise (see
 ``serve.score.score_dense``).
 
+On top of pruning, :func:`quantize` packs the surviving rows into a
+:class:`QuantizedArtifact` — int8 codes plus one fp32 scale per row
+(``row ≈ codes * scale``), behind the SAME remap — for another ~4x off
+the deployed size. Quantisation is lossy but bounded: each Theta entry
+moves by at most ``max|row| / 254`` (half an int8 step), and the induced
+probability error is gated at ``max |Δp| <= 1e-2`` vs fp32 in
+``tests/test_serve_compress.py`` and ``benchmarks/bench_serve.py``.
+:func:`dequantize` rebuilds a :class:`ServingArtifact`, so every scorer
+(flat, bundles, engine) serves an int8 deploy unchanged.
+
 Artifacts save/load through ``repro.io.checkpoint`` (flat npz); the
 field names make them self-describing, so :func:`load_artifact` needs no
-``like`` tree (``checkpoint.load_nested``).
+``like`` tree (``checkpoint.load_nested``) and auto-detects which of the
+two artifact forms the file holds.
 """
 from __future__ import annotations
 
@@ -95,23 +106,86 @@ def compress(theta: jax.Array, *, threshold: float = 0.0) -> ServingArtifact:
     )
 
 
-def save_artifact(path: str, artifact: ServingArtifact) -> str:
-    """Write the artifact as a flat npz via ``repro.io.checkpoint``.
-    Returns the real path written (``.npz`` appended when missing)."""
+class QuantizedArtifact(NamedTuple):
+    """An int8-quantised pruned model: ~4x smaller than the fp32
+    artifact on the wire (int8 codes + one fp32 scale per row), same
+    remap/alive_ids, bounded-error scoring (see module docstring)."""
+
+    codes: jax.Array  # (R+1, 2m) int8 — row i fp32 ≈ codes[i] * scales[i]
+    scales: jax.Array  # (R+1,) fp32 per-row scale; pad row scale == 0
+    remap: jax.Array  # (d+1,) int32 old id -> compact row (dropped -> R)
+    alive_ids: jax.Array  # (R,) int32 original ids of the packed rows
+    num_features: int  # d of the full model (static)
+
+    @property
+    def num_alive(self) -> int:
+        return self.codes.shape[0] - 1
+
+    @property
+    def num_regions(self) -> int:
+        return self.codes.shape[1] // 2
+
+    @property
+    def deployed_bytes(self) -> int:
+        """Wire size of the model payload (codes + scales + remap +
+        alive_ids), the number the ~4x claim is about."""
+        return (self.codes.size * 1 + self.scales.size * 4
+                + self.remap.size * 4 + self.alive_ids.size * 4)
+
+
+def quantize(artifact: ServingArtifact) -> QuantizedArtifact:
+    """Symmetric per-row int8 quantisation of a pruned artifact.
+
+    ``scale = max|row| / 127`` and ``codes = round(row / scale)``, so
+    every entry is off by at most scale/2 == max|row|/254. All-zero rows
+    (there is exactly one — the pad row; alive rows have a nonzero by
+    construction of :func:`compress`) get scale 0 and stay EXACTLY zero
+    through the round trip, which keeps dropped-id/pad behaviour
+    identical to fp32.
+    """
+    th = np.asarray(jax.device_get(artifact.theta))
+    amax = np.abs(th).max(axis=1)
+    scales = (amax / 127.0).astype(np.float32)
+    safe = np.where(scales > 0, scales, 1.0)  # avoid 0/0 on the pad row
+    codes = np.rint(th / safe[:, None]).astype(np.int8)
+    return QuantizedArtifact(
+        codes=jnp.asarray(codes),
+        scales=jnp.asarray(scales),
+        remap=artifact.remap,
+        alive_ids=artifact.alive_ids,
+        num_features=artifact.num_features,
+    )
+
+
+def dequantize(quant: QuantizedArtifact) -> ServingArtifact:
+    """Rebuild a serving-ready fp32 artifact from int8 codes. This is
+    how an int8 deploy is scored: one multiply at load time, every
+    downstream path (flat/bundles/engine) unchanged."""
+    theta = quant.codes.astype(jnp.float32) * quant.scales[:, None]
+    return ServingArtifact(theta=theta, remap=quant.remap,
+                           alive_ids=quant.alive_ids,
+                           num_features=quant.num_features)
+
+
+def save_artifact(path: str, artifact: ServingArtifact | QuantizedArtifact) -> str:
+    """Write either artifact form as a flat npz via
+    ``repro.io.checkpoint`` (npz keeps the int8/fp32 dtypes, so a
+    quantised save really is ~4x smaller). Returns the real path
+    written (``.npz`` appended when missing)."""
     return checkpoint.save(path, artifact)
 
 
-def load_artifact(path: str) -> ServingArtifact:
+def load_artifact(path: str) -> ServingArtifact | QuantizedArtifact:
     """Load an artifact saved by :func:`save_artifact`. Self-describing:
-    the npz field names rebuild the structure, no ``like`` tree needed."""
+    the npz field names rebuild the structure (and pick which of the two
+    artifact forms the file holds), no ``like`` tree needed."""
     data = checkpoint.load_nested(path)
-    missing = [f for f in ServingArtifact._fields if f not in data]
+    cls = QuantizedArtifact if "codes" in data else ServingArtifact
+    missing = [f for f in cls._fields if f not in data]
     if missing:
         raise ValueError(
             f"{path!r} is not a serving artifact: missing fields {missing}")
-    return ServingArtifact(
-        theta=jnp.asarray(data["theta"]),
-        remap=jnp.asarray(data["remap"]),
-        alive_ids=jnp.asarray(data["alive_ids"]),
-        num_features=int(np.asarray(data["num_features"]).item()),
-    )
+    arrays = {f: jnp.asarray(data[f]) for f in cls._fields
+              if f != "num_features"}
+    return cls(num_features=int(np.asarray(data["num_features"]).item()),
+               **arrays)

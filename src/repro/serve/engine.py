@@ -9,23 +9,35 @@ ROADMAP "bucketed shape padding" idea on the serving side:
   * each request is padded up to a bucketed ENVELOPE (K_user, K_ad, N)
     (pad slots carry the pad id with value 0, padded candidates are
     sliced off the result);
-  * per envelope the scoring executable is AOT-compiled ONCE
-    (``jit(...).lower(...).compile()``) and cached; envelope keys are the
-    ONLY source of compilation, so once the bucket set is warm a request
-    replay of any mix/order triggers ZERO recompiles (asserted in
-    ``tests/test_serve_engine.py``). An AOT executable also cannot
-    silently retrace — a shape bug raises instead of recompiling.
+  * same-envelope requests STACK: :meth:`ScoringEngine.score_batch`
+    groups a wavefront of requests by envelope and serves each group as
+    ONE ``G > 1`` bundle call (G itself bucketed, pad bundles are all-pad
+    and sliced off), so the per-dispatch overhead — python padding,
+    executable launch, device sync — amortises over G page views. This
+    is the traffic-shaped fast path the micro-batching queue
+    (``repro.serve.traffic``) flushes into;
+  * per (G, K_user, K_ad, N) envelope the scoring executable is
+    AOT-compiled ONCE (``jit(...).lower(...).compile()``) and cached;
+    envelope keys are the ONLY source of compilation, so once the bucket
+    set is warm a request replay of any mix/order/grouping triggers ZERO
+    recompiles (asserted in ``tests/test_serve_engine.py``). An AOT
+    executable also cannot silently retrace — a shape bug raises instead
+    of recompiling.
 
 Scoring runs the session-shared path (``serve.score.score_bundles``,
-Eq. 13): the user contraction happens once per request and broadcasts
-over its padded candidate block. The model (full Theta or a pruned
-:class:`~repro.serve.compress.ServingArtifact`) is normalised and placed
-on device once at engine construction; requests stay in the original id
-space either way.
+Eq. 13): each request's user contraction happens once and broadcasts
+over its padded candidate block; a batched call carries G independent
+user rows and G*N candidates. The model (full Theta, a pruned
+:class:`~repro.serve.compress.ServingArtifact`, or an int8
+:class:`~repro.serve.compress.QuantizedArtifact`) is normalised and
+placed on device once at engine construction; requests stay in the
+original id space either way.
 
 :class:`EngineStats` keeps the latency/throughput ledger: request and
-candidate counts, per-envelope hit counts, compile count and seconds,
-and scoring wall seconds (used by ``benchmarks/bench_serve.py`` and the
+candidate counts, dispatch (AOT call) and padded-slot counts with the
+implied batch occupancy, per-envelope hit counts, compile count and
+seconds, scoring wall seconds, and the observed request rate (QPS) over
+the scoring span (used by ``benchmarks/bench_serve.py`` and the
 ``repro.launch.serve`` smoke).
 """
 from __future__ import annotations
@@ -41,9 +53,12 @@ from repro.serve.score import ScoreBundle, as_model, score_bundles
 
 # default bucket edges; above the top edge, round up to a multiple of it.
 # K edges are dense at the small end (production id lists are tens),
-# N edges cover typical candidate-slate sizes.
+# N edges cover typical candidate-slate sizes, G edges the micro-batch
+# sizes the queue flushes (powers of two so a handful of executables
+# covers every flush size).
 DEFAULT_K_BUCKETS = (8, 16, 24, 32, 48, 64)
 DEFAULT_N_BUCKETS = (4, 8, 16, 32, 64)
+DEFAULT_G_BUCKETS = (1, 2, 4, 8, 16)
 
 
 class BundleRequest(NamedTuple):
@@ -62,24 +77,53 @@ class EngineStats:
     def __init__(self):
         self.requests = 0
         self.candidates = 0
+        self.dispatches = 0  # AOT executable calls (1 per padded batch)
+        self.slots = 0  # padded bundle slots across dispatches (sum of G)
         self.compiles = 0
         self.compile_seconds = 0.0
         self.score_seconds = 0.0
-        self.bucket_hits: dict[tuple[int, int, int], int] = {}
+        self.bucket_hits: dict[tuple[int, int, int, int], int] = {}
+        self._first_t: float | None = None
+        self._last_t: float | None = None
+
+    def note_span(self) -> None:
+        """Stamp the scoring span (first/last dispatch) for QPS."""
+        now = time.perf_counter()
+        if self._first_t is None:
+            self._first_t = now
+        self._last_t = now
 
     @property
     def latency_us(self) -> float:
-        """Mean per-request scoring wall time (padding + device + sync)."""
+        """Mean per-request scoring wall time (padding + device + sync);
+        batched requests share their dispatch's wall time."""
         return self.score_seconds / self.requests * 1e6 if self.requests else 0.0
 
     @property
     def candidates_per_sec(self) -> float:
         return self.candidates / self.score_seconds if self.score_seconds else 0.0
 
+    @property
+    def occupancy(self) -> float:
+        """Real requests per padded bundle slot (1.0 = no G padding)."""
+        return self.requests / self.slots if self.slots else 0.0
+
+    @property
+    def qps(self) -> float:
+        """Observed request rate over the scoring span (first to last
+        dispatch); 0 until two dispatches have landed."""
+        if self._first_t is None or self._last_t == self._first_t:
+            return 0.0
+        return self.requests / (self._last_t - self._first_t)
+
     def as_dict(self) -> dict:
         return {
             "requests": self.requests,
             "candidates": self.candidates,
+            "dispatches": self.dispatches,
+            "slots": self.slots,
+            "occupancy": self.occupancy,
+            "qps": self.qps,
             "compiles": self.compiles,
             "compile_seconds": self.compile_seconds,
             "score_seconds": self.score_seconds,
@@ -106,15 +150,28 @@ class ScoringEngine:
 
     def __init__(self, model, *, mode: str = "auto", dedup: bool = True,
                  k_buckets: Sequence[int] = DEFAULT_K_BUCKETS,
-                 n_buckets: Sequence[int] = DEFAULT_N_BUCKETS):
+                 n_buckets: Sequence[int] = DEFAULT_N_BUCKETS,
+                 g_buckets: Sequence[int] = DEFAULT_G_BUCKETS):
         self._model = as_model(model)  # arrays are already device-resident
         self._mode = mode
         self._dedup = dedup
         self._k_buckets = tuple(sorted(k_buckets))
         self._n_buckets = tuple(sorted(n_buckets))
+        self._g_buckets = tuple(sorted(g_buckets))
         self._pad_id = self._model.num_features  # original-space pad id
-        self._compiled: dict[tuple[int, int, int], jax.stages.Compiled] = {}
+        self._compiled: dict[tuple[int, int, int, int], jax.stages.Compiled] = {}
         self.stats = EngineStats()
+
+    @property
+    def g_buckets(self) -> tuple[int, ...]:
+        """The batch-size bucket edges dispatches round G up to."""
+        return self._g_buckets
+
+    @property
+    def max_batch(self) -> int:
+        """Largest bundle count one dispatch carries (top G bucket);
+        bigger wavefronts split into chunks of this size."""
+        return self._g_buckets[-1]
 
     # ------------------------------------------------------------ envelopes
     def envelope(self, request: BundleRequest) -> tuple[int, int, int]:
@@ -124,63 +181,113 @@ class ScoringEngine:
         n = _round_up(request.ad_ids.shape[0], self._n_buckets)
         return ku, ka, n
 
-    def _executable(self, key: tuple[int, int, int]):
+    def _executable(self, key: tuple[int, int, int, int]):
         comp = self._compiled.get(key)
         if comp is None:
-            ku, ka, n = key
+            g, ku, ka, n = key
             model, mode, dedup = self._model, self._mode, self._dedup
 
             def fn(ui, uv, ai, av):
-                bundle = ScoreBundle(ui, uv, ai, av,
-                                     jnp.zeros((n,), jnp.int32))
+                bundle = ScoreBundle(
+                    ui, uv, ai, av,
+                    jnp.repeat(jnp.arange(g, dtype=jnp.int32), n))
                 return score_bundles(model, bundle, mode=mode, dedup=dedup)
 
             t0 = time.perf_counter()
             comp = jax.jit(fn).lower(
-                jax.ShapeDtypeStruct((1, ku), jnp.int32),
-                jax.ShapeDtypeStruct((1, ku), jnp.float32),
-                jax.ShapeDtypeStruct((n, ka), jnp.int32),
-                jax.ShapeDtypeStruct((n, ka), jnp.float32),
+                jax.ShapeDtypeStruct((g, ku), jnp.int32),
+                jax.ShapeDtypeStruct((g, ku), jnp.float32),
+                jax.ShapeDtypeStruct((g * n, ka), jnp.int32),
+                jax.ShapeDtypeStruct((g * n, ka), jnp.float32),
             ).compile()
             self.stats.compile_seconds += time.perf_counter() - t0
             self.stats.compiles += 1
             self._compiled[key] = comp
         return comp
 
-    def warm(self, envelopes: Sequence[tuple[int, int, int]]) -> None:
-        """Precompile a bucket set (deploy-time, off the request path)."""
-        for key in envelopes:
-            self._executable(key)
+    def warm(self, envelopes: Sequence[tuple[int, int, int]], *,
+             batch_sizes: Sequence[int] = (1,)) -> None:
+        """Precompile a bucket set (deploy-time, off the request path).
+
+        ``batch_sizes`` are the G buckets to warm per (Ku, Ka, N)
+        envelope — pass the engine's ``g_buckets`` when the traffic will
+        arrive through :meth:`score_batch` / the micro-batching queue,
+        whose flush sizes round onto exactly those buckets.
+        """
+        for ku, ka, n in envelopes:
+            for g in batch_sizes:
+                self._executable((_round_up(g, self._g_buckets), ku, ka, n))
 
     # -------------------------------------------------------------- scoring
-    def _pad(self, request: BundleRequest, key: tuple[int, int, int]):
-        ku, ka, n = key
-        n_real, ka_real = request.ad_ids.shape
-        ui = np.full((1, ku), self._pad_id, np.int32)
-        ui[0, :request.user_ids.shape[-1]] = request.user_ids
-        uv = np.zeros((1, ku), np.float32)
-        uv[0, :request.user_vals.shape[-1]] = request.user_vals
-        ai = np.full((n, ka), self._pad_id, np.int32)
-        ai[:n_real, :ka_real] = request.ad_ids
-        av = np.zeros((n, ka), np.float32)
-        av[:n_real, :ka_real] = request.ad_vals
+    def _pad_batch(self, requests: Sequence[BundleRequest],
+                   key: tuple[int, int, int, int]):
+        """Stack same-envelope requests into the padded batch layout:
+        request s owns user row s and candidate rows [s*n, (s+1)*n); pad
+        candidate rows and pad bundle slots are all-pad-id (their scores
+        come out 0.5 and are sliced off)."""
+        g, ku, ka, n = key
+        ui = np.full((g, ku), self._pad_id, np.int32)
+        uv = np.zeros((g, ku), np.float32)
+        ai = np.full((g * n, ka), self._pad_id, np.int32)
+        av = np.zeros((g * n, ka), np.float32)
+        for s, r in enumerate(requests):
+            ui[s, :r.user_ids.shape[-1]] = r.user_ids
+            uv[s, :r.user_vals.shape[-1]] = r.user_vals
+            n_real, ka_real = r.ad_ids.shape
+            ai[s * n:s * n + n_real, :ka_real] = r.ad_ids
+            av[s * n:s * n + n_real, :ka_real] = r.ad_vals
         return ui, uv, ai, av
 
-    def score(self, request: BundleRequest) -> np.ndarray:
-        """p(y=1|x) for each of the request's N candidates, in order."""
-        key = self.envelope(request)
+    def _score_chunk(self, requests: Sequence[BundleRequest],
+                     env: tuple[int, int, int]) -> list[np.ndarray]:
+        """One dispatch: same-envelope requests, len <= max_batch."""
+        ku, ka, n = env
+        key = (_round_up(len(requests), self._g_buckets), ku, ka, n)
         comp = self._executable(key)  # compile time books separately
         t0 = time.perf_counter()
-        ui, uv, ai, av = self._pad(request, key)
+        ui, uv, ai, av = self._pad_batch(requests, key)
         p = np.asarray(jax.block_until_ready(comp(ui, uv, ai, av)))
+        p = p.reshape(key[0], n)
         self.stats.score_seconds += time.perf_counter() - t0
-        self.stats.requests += 1
-        n_real = request.ad_ids.shape[0]
-        self.stats.candidates += n_real
-        self.stats.bucket_hits[key] = self.stats.bucket_hits.get(key, 0) + 1
-        return p[:n_real]
+        self.stats.note_span()
+        self.stats.dispatches += 1
+        self.stats.slots += key[0]
+        self.stats.requests += len(requests)
+        self.stats.candidates += sum(r.ad_ids.shape[0] for r in requests)
+        self.stats.bucket_hits[key] = \
+            self.stats.bucket_hits.get(key, 0) + len(requests)
+        return [p[s, :r.ad_ids.shape[0]] for s, r in enumerate(requests)]
+
+    def score(self, request: BundleRequest) -> np.ndarray:
+        """p(y=1|x) for each of the request's N candidates, in order
+        (a G=1 dispatch)."""
+        return self._score_chunk([request], self.envelope(request))[0]
+
+    def score_batch(self, requests: Sequence[BundleRequest]) -> list[np.ndarray]:
+        """Score a wavefront of requests, batching same-envelope ones
+        into G>1 dispatches (groups bigger than ``max_batch`` split).
+
+        Returns per-request score vectors in the INPUT order; the
+        scores are exactly what :meth:`score` returns for each request
+        alone (same envelope padding, same kernel — asserted in tests
+        and ``benchmarks/bench_serve.py``), the win is dispatch count.
+        """
+        results: list[np.ndarray | None] = [None] * len(requests)
+        groups: dict[tuple[int, int, int], list[int]] = {}
+        for i, r in enumerate(requests):
+            groups.setdefault(self.envelope(r), []).append(i)
+        cap = self.max_batch
+        for env, idxs in groups.items():
+            for s in range(0, len(idxs), cap):
+                chunk = idxs[s:s + cap]
+                scores = self._score_chunk([requests[i] for i in chunk], env)
+                for i, p in zip(chunk, scores):
+                    results[i] = p
+        return results  # type: ignore[return-value]
 
     def score_many(self, requests: Sequence[BundleRequest]) -> list[np.ndarray]:
+        """One-request-at-a-time replay (the un-batched baseline;
+        ``score_batch`` is the traffic-shaped path)."""
         return [self.score(r) for r in requests]
 
 

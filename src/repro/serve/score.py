@@ -9,7 +9,10 @@ model argument is polymorphic:
 
   * a raw UNPADDED Theta ``(d, 2m)`` array,
   * ``repro.core.lsplm.LSPLMParams``,
-  * a pruned :class:`~repro.serve.compress.ServingArtifact`.
+  * a pruned :class:`~repro.serve.compress.ServingArtifact`,
+  * an int8 :class:`~repro.serve.compress.QuantizedArtifact` (dequantised
+    once at normalisation time; scoring then runs the fp32 paths on the
+    reconstructed rows — bounded-error vs fp32, see ``serve.compress``).
 
 Request formats:
 
@@ -48,7 +51,7 @@ from repro.kernels.lsplm_sparse_fused.ops import (
     pad_theta,
     sparse_gather_matmul,
 )
-from repro.serve.compress import ServingArtifact
+from repro.serve.compress import QuantizedArtifact, ServingArtifact, dequantize
 
 
 class ScoreBundle(NamedTuple):
@@ -78,6 +81,8 @@ def as_model(model) -> ServingModel:
     """Coerce any accepted model form (see module docstring); idempotent."""
     if isinstance(model, ServingModel):
         return model
+    if isinstance(model, QuantizedArtifact):
+        model = dequantize(model)
     if isinstance(model, ServingArtifact):
         return ServingModel(theta=model.theta, remap=model.remap,
                             alive_ids=model.alive_ids,

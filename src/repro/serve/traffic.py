@@ -1,0 +1,231 @@
+"""Traffic shaping for the scoring engine: a micro-batching request
+queue and an open-loop Poisson load generator.
+
+The paper's models serve hundreds of millions of users; what makes that
+affordable is never scoring one page view per device dispatch. The
+:class:`MicroBatchQueue` sits in front of a
+:class:`~repro.serve.engine.ScoringEngine` and turns an arrival stream
+into the engine's batched ``G > 1`` dispatches:
+
+  * arrivals group by their (Ku, Ka, N) envelope — only same-envelope
+    requests can stack into one executable call;
+  * a group FLUSHES when it reaches ``max_batch`` requests (full flush:
+    best amortisation) or when its oldest request has waited
+    ``max_delay_us`` (deadline flush: a tail-latency bound — batching
+    may never hold a request longer than the deadline);
+  * ADMISSION CONTROL: when ``max_pending`` requests are already queued
+    the submit is rejected (load shedding) instead of growing an
+    unbounded backlog — under overload the queue degrades to bounded
+    latency + explicit drops, never to unbounded wait.
+
+Time is a caller-supplied virtual clock (monotonic seconds): the queue
+never sleeps, it just orders events. A live server would feed
+``time.perf_counter()``; tests and the load generator feed synthetic
+arrival timestamps, which makes every flush decision deterministic and
+replayable. Service times are REAL, though — each flush runs the actual
+engine dispatch and the measured wall time advances the (single,
+serial) server: flush start = max(trigger time, server free), and every
+request in the batch completes when its dispatch finishes. A batch is
+sealed at its trigger; arrivals while the server is busy join the next
+one.
+
+:func:`replay_open_loop` is the benchmark harness: OPEN-LOOP arrivals
+(Poisson with rate ``qps``, drawn up front, independent of completions
+— the standard way to measure tail latency without the coordinated-
+omission trap of closed-loop clients) replayed through the queue,
+reporting p50/p99/mean latency, candidates/sec, achieved QPS, batch
+occupancy and drop counts. ``benchmarks/bench_serve.py`` turns the
+report into ``BENCH_serve.json`` rows and the CI regression gate
+watches them.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Sequence
+
+import numpy as np
+
+from repro.serve.engine import BundleRequest, ScoringEngine
+
+
+class QueueConfig(NamedTuple):
+    """Micro-batching knobs (see module docstring)."""
+
+    max_batch: int = 8  # full-flush size (kept <= engine.max_batch)
+    max_delay_us: float = 2_000.0  # deadline: max queueing delay per request
+    max_pending: int = 256  # admission: reject submits past this backlog
+
+
+class Completion(NamedTuple):
+    """One served request: scores + the timeline that produced them."""
+
+    ticket: int
+    scores: np.ndarray  # (N_real,) p(y=1|x), request order
+    arrival: float  # virtual seconds
+    started: float  # flush execution start (>= arrival)
+    completed: float  # started + measured dispatch wall time
+    reason: str  # "full" | "deadline" | "drain"
+
+    @property
+    def latency_us(self) -> float:
+        return (self.completed - self.arrival) * 1e6
+
+
+class QueueStats:
+    """Mutable queue ledger (one per queue)."""
+
+    def __init__(self):
+        self.accepted = 0
+        self.rejected = 0
+        self.flushes = {"full": 0, "deadline": 0, "drain": 0}
+
+    def as_dict(self) -> dict:
+        return {"accepted": self.accepted, "rejected": self.rejected,
+                "flushes": dict(self.flushes)}
+
+
+class MicroBatchQueue:
+    """Deadline-aware micro-batching front of a :class:`ScoringEngine`.
+
+    Single-threaded and virtual-clocked: callers push time forward via
+    the ``now`` arguments (monotonic seconds, non-decreasing). Completed
+    work accumulates in :attr:`completions` (also returned by the call
+    that produced it).
+    """
+
+    def __init__(self, engine: ScoringEngine,
+                 config: QueueConfig = QueueConfig()):
+        if config.max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got {config.max_batch}")
+        self.engine = engine
+        self.config = config
+        self.stats = QueueStats()
+        self.completions: list[Completion] = []
+        self._pending: dict[tuple[int, int, int],
+                            list[tuple[int, BundleRequest, float]]] = {}
+        self._next_ticket = 0
+        self._busy_until = 0.0  # virtual time the serial server frees up
+
+    @property
+    def pending(self) -> int:
+        return sum(len(v) for v in self._pending.values())
+
+    def next_deadline(self) -> float | None:
+        """Virtual time the oldest queued request must flush by."""
+        oldest = [entries[0][2] for entries in self._pending.values() if entries]
+        if not oldest:
+            return None
+        return min(oldest) + self.config.max_delay_us * 1e-6
+
+    # ------------------------------------------------------------- events
+    def submit(self, request: BundleRequest, now: float) -> int | None:
+        """Enqueue one request at virtual time ``now``. Returns its
+        ticket, or None when admission control sheds it. A group hitting
+        ``max_batch`` flushes immediately (trigger time = ``now``)."""
+        if self.pending >= self.config.max_pending:
+            self.stats.rejected += 1
+            return None
+        ticket = self._next_ticket
+        self._next_ticket += 1
+        env = self.engine.envelope(request)
+        group = self._pending.setdefault(env, [])
+        group.append((ticket, request, now))
+        self.stats.accepted += 1
+        if len(group) >= self.config.max_batch:
+            self._flush(env, now, "full")
+        return ticket
+
+    def flush_due(self, now: float) -> list[Completion]:
+        """Flush every group whose deadline has passed by ``now``
+        (oldest-deadline first). Returns the completions produced."""
+        done: list[Completion] = []
+        while True:
+            due = [(entries[0][2], env)
+                   for env, entries in self._pending.items() if entries]
+            if not due:
+                break
+            oldest, env = min(due)
+            deadline = oldest + self.config.max_delay_us * 1e-6
+            if deadline > now:
+                break
+            done += self._flush(env, deadline, "deadline")
+        return done
+
+    def drain(self, now: float) -> list[Completion]:
+        """Flush everything still queued (shutdown / end of replay)."""
+        done: list[Completion] = []
+        for env in sorted(self._pending, key=lambda e: self._pending[e][0][2]):
+            done += self._flush(env, now, "drain")
+        return done
+
+    # ------------------------------------------------------------ internals
+    def _flush(self, env: tuple[int, int, int], trigger: float,
+               reason: str) -> list[Completion]:
+        entries = self._pending.pop(env)
+        self.stats.flushes[reason] += 1
+        started = max(trigger, self._busy_until)
+        before = self.engine.stats.score_seconds
+        scores = self.engine.score_batch([r for _, r, _ in entries])
+        wall = self.engine.stats.score_seconds - before
+        completed = started + wall
+        self._busy_until = completed
+        out = [Completion(ticket=t, scores=p, arrival=arr, started=started,
+                          completed=completed, reason=reason)
+               for (t, _, arr), p in zip(entries, scores)]
+        self.completions += out
+        return out
+
+
+def poisson_arrivals(num: int, qps: float, seed: int = 0) -> np.ndarray:
+    """Cumulative arrival times (seconds) of a rate-``qps`` Poisson
+    process: iid exponential gaps, mean 1/qps."""
+    if qps <= 0:
+        raise ValueError(f"qps must be positive, got {qps}")
+    rng = np.random.default_rng(seed)
+    return np.cumsum(rng.exponential(1.0 / qps, size=num))
+
+
+def replay_open_loop(engine: ScoringEngine,
+                     requests: Sequence[BundleRequest], *, qps: float,
+                     config: QueueConfig = QueueConfig(),
+                     seed: int = 0) -> dict:
+    """Open-loop load test: replay ``requests`` with Poisson arrivals at
+    offered rate ``qps`` through a fresh :class:`MicroBatchQueue`,
+    returning the latency/throughput report (see module docstring).
+
+    Warm the engine's envelopes first (``engine.warm(...,
+    batch_sizes=engine.g_buckets)``) when measuring steady state —
+    compile time books separately but would serialise early flushes.
+    """
+    queue = MicroBatchQueue(engine, config)
+    arrivals = poisson_arrivals(len(requests), qps, seed)
+    before = engine.stats.as_dict()
+    for t, req in zip(arrivals, requests):
+        queue.flush_due(t)
+        queue.submit(req, t)
+    queue.flush_due(arrivals[-1])
+    queue.drain(arrivals[-1])
+    comps = queue.completions
+    lat = np.array([c.latency_us for c in comps]) if comps else np.zeros(1)
+    makespan = (max(c.completed for c in comps) - arrivals[0]) if comps else 0.0
+    served_candidates = sum(c.scores.shape[0] for c in comps)
+    after = engine.stats.as_dict()
+    dispatches = after["dispatches"] - before["dispatches"]
+    slots = after["slots"] - before["slots"]
+    return {
+        "offered_qps": qps,
+        "requests": len(requests),
+        "served": len(comps),
+        "rejected": queue.stats.rejected,
+        "achieved_qps": float(len(comps) / makespan) if makespan else 0.0,
+        "candidates_per_sec":
+            float(served_candidates / makespan) if makespan else 0.0,
+        "latency_p50_us": float(np.percentile(lat, 50)),
+        "latency_p99_us": float(np.percentile(lat, 99)),
+        "latency_mean_us": float(lat.mean()),
+        "dispatches": dispatches,
+        "occupancy": len(comps) / slots if slots else 0.0,
+        "flushes": dict(queue.stats.flushes),
+        "max_batch": config.max_batch,
+        "max_delay_us": config.max_delay_us,
+        "max_pending": config.max_pending,
+    }

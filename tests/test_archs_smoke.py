@@ -12,7 +12,6 @@ from repro.models import (
     forward,
     init_caches,
     init_model,
-    loss_fn,
     make_train_step,
     prefill,
 )

@@ -1,0 +1,99 @@
+"""benchmarks/run.py CLI edges: an unknown --only name must error with
+the list of valid modules (not silently run nothing — CI would archive
+an empty artifact and stay green), and --json must write the per-module
+trajectory file even when a benchmark gate raises (partial data + the
+error traceback), because the CI regression gate diffs that file."""
+import json
+import sys
+from types import SimpleNamespace
+
+import pytest
+
+import benchmarks.run as bench_run
+
+
+def _fake_mods(*names):
+    return [SimpleNamespace(__name__=f"benchmarks.{n}") for n in names]
+
+
+# ---------------------------------------------------------------- _select
+def test_select_exact_prefixed_and_substring():
+    mods = _fake_mods("bench_stream", "bench_serve", "bench_sparse_fused")
+    assert bench_run._select(mods, "bench_serve") == [mods[1]]
+    assert bench_run._select(mods, "serve") == [mods[1]]  # bench_ implied
+    assert bench_run._select(mods, "sparse") == [mods[2]]  # substring
+    assert bench_run._select(mods, "stream,serve") == [mods[0], mods[1]]
+    assert bench_run._select(mods, "serve,serve") == [mods[1]]  # deduped
+
+
+def test_select_unknown_name_lists_valid_modules():
+    mods = _fake_mods("bench_stream", "bench_serve")
+    with pytest.raises(SystemExit) as exc:
+        bench_run._select(mods, "sevre")  # the typo CI must catch
+    msg = str(exc.value)
+    assert "sevre" in msg
+    assert "bench_serve" in msg and "bench_stream" in msg
+
+
+def test_select_unknown_name_among_valid_ones_still_errors():
+    mods = _fake_mods("bench_stream", "bench_serve")
+    with pytest.raises(SystemExit, match="valid names"):
+        bench_run._select(mods, "stream,nope")
+
+
+# ------------------------------------------------------------------ --json
+def test_json_written_even_when_gate_raises(tmp_path, monkeypatch):
+    """A failing quality gate still leaves BENCH_serve.json on disk with
+    whatever the bench collected before dying, plus the traceback."""
+    import benchmarks.bench_serve as bench_serve
+
+    def failing_run(smoke=False, collect=None):
+        collect["backend"] = "cpu"
+        collect["configs"] = {"tiny": {"shared_speedup": 0.9}}
+        raise AssertionError("speedup below target")
+
+    monkeypatch.setattr(bench_serve, "run", failing_run)
+    monkeypatch.chdir(tmp_path)
+    monkeypatch.setattr(sys, "argv",
+                        ["run.py", "--only", "serve", "--json"])
+    with pytest.raises(SystemExit) as exc:
+        bench_run.main()
+    assert exc.value.code == 1  # the failure still fails the step
+    data = json.loads((tmp_path / "BENCH_serve.json").read_text())
+    assert data["configs"]["tiny"]["shared_speedup"] == 0.9
+    assert "speedup below target" in data["error"]
+
+
+def test_json_written_when_gate_raises_before_collecting(tmp_path,
+                                                         monkeypatch):
+    """Even a bench that dies before binding anything leaves a JSON with
+    the error, so the archived artifact explains itself."""
+    import benchmarks.bench_stream as bench_stream
+
+    def dead_on_arrival(smoke=False, collect=None):
+        raise RuntimeError("import-time shape bug")
+
+    monkeypatch.setattr(bench_stream, "run", dead_on_arrival)
+    monkeypatch.chdir(tmp_path)
+    monkeypatch.setattr(sys, "argv",
+                        ["run.py", "--only", "stream", "--json"])
+    with pytest.raises(SystemExit):
+        bench_run.main()
+    data = json.loads((tmp_path / "BENCH_stream.json").read_text())
+    assert list(data) == ["error"]
+    assert "import-time shape bug" in data["error"]
+
+
+def test_json_written_on_success(tmp_path, monkeypatch):
+    import benchmarks.bench_stream as bench_stream
+
+    def ok_run(smoke=False, collect=None):
+        collect["steps_per_sec"] = 42.0
+
+    monkeypatch.setattr(bench_stream, "run", ok_run)
+    monkeypatch.chdir(tmp_path)
+    monkeypatch.setattr(sys, "argv",
+                        ["run.py", "--only", "stream", "--json", "--smoke"])
+    bench_run.main()  # no SystemExit
+    data = json.loads((tmp_path / "BENCH_stream.json").read_text())
+    assert data == {"steps_per_sec": 42.0}

@@ -1,0 +1,150 @@
+"""The CI bench-regression gate (benchmarks/check_regression.py):
+flattening, rule precedence, per-kind tolerance math, the
+missing-metric / recorded-error failure modes, and the markdown table
+that lands in $GITHUB_STEP_SUMMARY."""
+import json
+import sys
+
+from benchmarks import check_regression as cr
+
+
+# ------------------------------------------------------------- plumbing
+def test_flatten_nested_and_lists():
+    flat = cr.flatten({"a": {"b": 1, "c": [10, {"d": "x"}]}, "e": 2.5})
+    assert flat == {"a.b": 1, "a.c.0": 10, "a.c.1.d": "x", "e": 2.5}
+
+
+def test_rule_precedence():
+    # load-section latency gates loosely; its flush mix is info
+    assert cr.rule_for("configs.t.load.500.latency_p99_us")[0] == "lower_better"
+    assert cr.rule_for("configs.t.load.500.flushes.deadline")[0] == "info"
+    # load-section config echoes are info, top-level ones exact
+    assert cr.rule_for("configs.t.load.500.max_delay_us")[0] == "info"
+    assert cr.rule_for("configs.t.d")[0] == "exact"
+    # deterministic counters gate exactly even though they look "speedy"
+    assert cr.rule_for("configs.t.engine_batched.compiles")[0] == "exact"
+    assert cr.rule_for("configs.t.engine_batched.dispatches")[0] == "exact"
+    # engine wall-clock derived rates are loose, occupancy/qps info
+    assert cr.rule_for("configs.t.engine_batched.candidates_per_sec")[0] \
+        == "higher_better"
+    assert cr.rule_for("configs.t.engine_batched.occupancy")[0] == "info"
+    assert cr.rule_for("error")[0] == "forbidden"
+    assert cr.rule_for("configs.t.quality.auc_pruned")[0] == "higher_better"
+    assert cr.rule_for("something.unknown_metric")[0] == "info"
+
+
+# -------------------------------------------------------------- compare
+def test_compare_identical_passes():
+    base = {"a": {"compiles": 3, "flat_full_us": 10.0, "parity": "bitwise"}}
+    rows, ok = cr.compare(base, json.loads(json.dumps(base)))
+    assert ok
+    assert all(r["status"] == "ok" for r in rows)
+
+
+def test_compare_within_tolerance_passes():
+    base = {"flat_full_us": 10.0, "shared_speedup": 2.0,
+            "quality": {"auc_full": 0.80}}
+    run = {"flat_full_us": 30.0,  # 3x slower < 5x limit
+           "shared_speedup": 1.2,  # > 2.0 * 0.5
+           "quality": {"auc_full": 0.79}}  # within 2%
+    rows, ok = cr.compare(base, run)
+    assert ok, [r for r in rows if r["status"] != "ok"]
+
+
+def test_compare_past_tolerance_fails():
+    base = {"flat_full_us": 10.0, "shared_speedup": 2.0,
+            "quality": {"auc_full": 0.80}}
+    bad = {"flat_full_us": 60.0, "shared_speedup": 0.9,
+           "quality": {"auc_full": 0.70}}
+    rows, ok = cr.compare(base, bad)
+    assert not ok
+    failed = {r["metric"] for r in rows if r["status"].startswith("FAIL")}
+    assert failed == {"flat_full_us", "shared_speedup", "quality.auc_full"}
+
+
+def test_compare_exact_metric_any_drift_fails():
+    rows, ok = cr.compare({"a": {"compiles": 3}}, {"a": {"compiles": 4}})
+    assert not ok
+
+
+def test_compare_missing_metric_fails_new_metric_ok():
+    base = {"a": {"compiles": 3, "flat_full_us": 10.0}}
+    run = {"a": {"compiles": 3, "brand_new_us": 1.0}}
+    rows, ok = cr.compare(base, run)
+    assert not ok
+    by_metric = {r["metric"]: r["status"] for r in rows}
+    assert by_metric["a.flat_full_us"].startswith("FAIL: metric missing")
+    assert by_metric["a.brand_new_us"] == "new (no baseline)"
+
+
+def test_compare_recorded_error_fails():
+    base = {"a": {"compiles": 3}}
+    run = {"a": {"compiles": 3}, "error": "Traceback ..."}
+    rows, ok = cr.compare(base, run)
+    assert not ok
+    assert any(r["metric"] == "error"
+               and r["status"].startswith("FAIL") for r in rows)
+
+
+def test_info_metrics_never_fail():
+    base = {"engine": {"occupancy": 0.9, "qps": 5000.0},
+            "load": {"500": {"flushes": {"deadline": 7}}}}
+    run = {"engine": {"occupancy": 0.1, "qps": 3.0},
+           "load": {"500": {"flushes": {"deadline": 999}}}}
+    _, ok = cr.compare(base, run)
+    assert ok
+
+
+# ------------------------------------------------------------- markdown
+def test_render_markdown_table():
+    rows, ok = cr.compare({"a": {"compiles": 3, "occupancy": 0.5}},
+                          {"a": {"compiles": 4, "occupancy": 0.5}})
+    md = cr.render_markdown("BENCH_x.json", rows, ok)
+    assert "**FAIL**" in md
+    assert "| `a.compiles` | 3 | 4 | exact |" in md
+    assert "info-only metrics not shown" in md
+    # info rows stay out of the table
+    assert "occupancy" not in md
+
+
+# ----------------------------------------------------------------- main
+def _write(path, obj):
+    path.write_text(json.dumps(obj))
+    return str(path)
+
+
+def test_main_pass_and_summary_append(tmp_path, monkeypatch):
+    base = _write(tmp_path / "base.json", {"a": {"compiles": 3}})
+    run = _write(tmp_path / "run.json", {"a": {"compiles": 3}})
+    summary = tmp_path / "summary.md"
+    summary.write_text("# earlier step\n")
+    monkeypatch.setattr(sys, "argv", ["check_regression", run,
+                                      "--baseline", base,
+                                      "--summary", str(summary)])
+    assert cr.main() == 0
+    text = summary.read_text()
+    assert text.startswith("# earlier step")  # appended, not clobbered
+    assert "**PASS**" in text
+
+
+def test_main_fail_exit_code(tmp_path, monkeypatch):
+    base = _write(tmp_path / "base.json", {"a": {"compiles": 3}})
+    run = _write(tmp_path / "run.json", {"a": {"compiles": 5}})
+    monkeypatch.setattr(sys, "argv",
+                        ["check_regression", run, "--baseline", base])
+    assert cr.main() == 1
+
+
+def test_main_missing_files_explain(tmp_path, monkeypatch, capsys):
+    run = _write(tmp_path / "run.json", {})
+    monkeypatch.setattr(sys, "argv",
+                        ["check_regression", run,
+                         "--baseline", str(tmp_path / "nope.json")])
+    assert cr.main() == 1
+    assert "generate one" in capsys.readouterr().err
+    base = _write(tmp_path / "base.json", {})
+    monkeypatch.setattr(sys, "argv",
+                        ["check_regression", str(tmp_path / "gone.json"),
+                         "--baseline", base])
+    assert cr.main() == 1
+    assert "--json" in capsys.readouterr().err

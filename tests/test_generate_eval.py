@@ -5,7 +5,7 @@ import numpy as np
 import pytest
 
 from repro.configs import get_config
-from repro.eval import calibration_ratio, log_loss, normalized_entropy, report
+from repro.eval import log_loss, normalized_entropy, report
 from repro.models import init_model
 from repro.models.generate import generate, sample_logits
 

@@ -1,10 +1,8 @@
 """Tests for Algorithm 1 (OWLQN+): convergence, sparsity, invariants."""
-import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
-from repro.core import CTRBatch, init_params, LSPLMConfig, objective, predict_proba
+from repro.core import CTRBatch, predict_proba
 from repro.core.objective import smooth_loss_and_grad
 from repro.data import CTRDataConfig, auc, generate, to_dense_batch
 from repro.optim import OWLQNPlus

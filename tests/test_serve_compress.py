@@ -14,10 +14,13 @@ from repro.core.lsplm import params_from_theta, predict_proba
 from repro.core.objective import smooth_loss_and_grad
 from repro.data.sparse import generate_sparse, to_dense
 from repro.serve import (
+    QuantizedArtifact,
     ScoreBundle,
     as_model,
     compress,
+    dequantize,
     load_artifact,
+    quantize,
     save_artifact,
     score_bundles,
     score_dense,
@@ -209,3 +212,89 @@ def test_load_artifact_rejects_foreign_checkpoint(tmp_path):
     checkpoint.save(path, {"theta": np.zeros((4, 4), np.float32)})
     with pytest.raises(ValueError, match="missing fields"):
         load_artifact(path)
+
+
+# ------------------------------------------------------- int8 quantise
+def test_quantize_structure_and_error_bound():
+    """codes are int8, scales per row, and every reconstructed entry is
+    within half an int8 step (max|row|/254) of the fp32 row."""
+    theta = _sparsified_theta(600, 3, nnz=0.2, seed=21)
+    art = compress(theta)
+    q = quantize(art)
+    assert np.asarray(q.codes).dtype == np.int8
+    assert q.codes.shape == art.theta.shape
+    assert q.scales.shape == (art.theta.shape[0],)
+    np.testing.assert_array_equal(np.asarray(q.remap), np.asarray(art.remap))
+    th = np.asarray(art.theta)
+    rec = np.asarray(dequantize(q).theta)
+    bound = np.abs(th).max(axis=1, keepdims=True) / 254.0
+    assert (np.abs(rec - th) <= bound + 1e-12).all()
+    # the pad row is all-zero and must stay EXACTLY zero
+    assert not np.asarray(q.codes)[-1].any()
+    assert np.asarray(q.scales)[-1] == 0.0
+    assert not rec[-1].any()
+
+
+def test_quantized_roundtrip_and_bounded_scores(tmp_path):
+    """save -> load keeps codes/scales bit-exact (and the int8 dtype, so
+    the npz really is ~4x smaller rows); serving the loaded artifact
+    moves every probability by <= 1e-2 vs fp32 on flat, bundle and
+    dense paths."""
+    d = 900
+    theta = _sparsified_theta(d, 4, nnz=0.08, seed=22)
+    art = compress(theta)
+    q = quantize(art)
+    path = save_artifact(str(tmp_path / "art_int8"), q)
+    loaded = load_artifact(path)
+    assert isinstance(loaded, QuantizedArtifact)
+    assert np.asarray(loaded.codes).dtype == np.int8
+    np.testing.assert_array_equal(np.asarray(loaded.codes),
+                                  np.asarray(q.codes))
+    np.testing.assert_array_equal(np.asarray(loaded.scales),
+                                  np.asarray(q.scales))
+    assert loaded.num_features == d
+
+    ids, vals = _requests(d, n=48, k=7, seed=23)
+    p_fp = np.asarray(score_sparse(art, ids, vals))
+    p_q = np.asarray(score_sparse(loaded, ids, vals))
+    assert np.abs(p_q - p_fp).max() <= 1e-2
+    batch = generate_sparse(num_features=d,
+                            num_user_features_range=(d // 2, d),
+                            sessions=12, seed=24, with_plans=False)
+    bundle = ScoreBundle(batch.user_ids, batch.user_vals,
+                         batch.ad_ids, batch.ad_vals, batch.session_id)
+    assert np.abs(np.asarray(score_bundles(loaded, bundle))
+                  - np.asarray(score_bundles(art, bundle))).max() <= 1e-2
+    x = jnp.asarray(to_dense(batch))
+    assert np.abs(np.asarray(score_dense(loaded, x))
+                  - np.asarray(score_dense(art, x))).max() <= 1e-2
+
+
+def test_quantize_dropped_ids_still_hit_pad_row():
+    """Dropped-id requests score exactly 0.5-symmetric like fp32: the
+    remap is untouched and the pad row survives quantisation as exact
+    zeros, so dropped ids contribute nothing."""
+    d = 400
+    theta = _sparsified_theta(d, 2, nnz=0.05, seed=25)
+    art = compress(theta)
+    q = quantize(art)
+    dropped = np.setdiff1d(np.arange(d), np.asarray(art.alive_ids))
+    rng = np.random.default_rng(26)
+    ids = jnp.asarray(rng.choice(dropped, (16, 6)), jnp.int32)
+    vals = jnp.asarray(rng.normal(size=(16, 6)).astype(np.float32))
+    np.testing.assert_array_equal(
+        np.asarray(score_sparse(art, ids, vals)),
+        np.asarray(score_sparse(q, ids, vals)))
+
+
+def test_quantize_size_accounting():
+    """deployed_bytes counts int8 codes + fp32 scales/remap/alive_ids;
+    the ROWS payload shrinks ~4x at production region counts."""
+    theta = _sparsified_theta(500, 12, nnz=0.3, seed=27)  # m=12 as deployed
+    art = compress(theta)
+    q = quantize(art)
+    rows_fp32 = art.theta.size * 4
+    rows_int8 = q.codes.size + q.scales.size * 4
+    assert rows_fp32 / rows_int8 > 3.4  # 24 cols: 96B -> 28B per row
+    assert q.deployed_bytes == (q.codes.size + q.scales.size * 4
+                                + q.remap.size * 4 + q.alive_ids.size * 4)

@@ -118,7 +118,93 @@ def test_stats_ledger(theta):
     assert s.requests == 10
     assert s.candidates == sum(r.ad_ids.shape[0] for r in requests)
     assert sum(s.bucket_hits.values()) == 10
+    assert s.dispatches == 10 and s.slots == 10  # all G=1 dispatches
+    assert s.occupancy == 1.0
     assert s.score_seconds > 0 and s.compile_seconds > 0
     assert s.latency_us > 0 and s.candidates_per_sec > 0
     d = s.as_dict()
     assert d["requests"] == 10 and len(d["bucket_hits"]) == len(s.bucket_hits)
+    assert d["occupancy"] == 1.0 and d["dispatches"] == 10
+
+
+# ------------------------------------------------------- batched (G>1)
+def test_score_batch_matches_score_bitwise(theta):
+    """Stacking same-envelope requests into one G>1 dispatch returns the
+    SAME numbers as scoring each alone: a request's padded block is
+    identical either way, G slots are independent bundles."""
+    reqs = synthetic_requests(20, num_features=D, seed=8)
+    eng_one = ScoringEngine(theta)
+    eng_many = ScoringEngine(theta)
+    want = [eng_one.score(r) for r in reqs]
+    got = eng_many.score_batch(reqs)
+    assert len(got) == len(want)
+    for a, b in zip(got, want):
+        np.testing.assert_array_equal(a, b)
+    # batching really batched: fewer dispatches than requests, G rounded
+    # onto buckets (slots >= requests), every request accounted for
+    b = eng_many.stats
+    assert b.requests == 20 and b.dispatches < 20
+    assert b.slots >= b.requests
+    assert 0 < b.occupancy <= 1.0
+
+
+def test_score_batch_mixed_envelopes_preserve_order(theta):
+    """Requests from different envelopes come back in input order even
+    though they are served by different grouped dispatches."""
+    small = synthetic_requests(3, num_features=D, k_user=(4, 4), k_ad=(3, 3),
+                               n_ads=(2, 2), seed=9)
+    big = synthetic_requests(3, num_features=D, k_user=(20, 20), k_ad=(9, 9),
+                             n_ads=(12, 12), seed=10)
+    mixed = [small[0], big[0], small[1], big[1], small[2], big[2]]
+    eng = ScoringEngine(theta)
+    got = eng.score_batch(mixed)
+    for r, p in zip(mixed, got):
+        assert p.shape == (r.ad_ids.shape[0],)
+        np.testing.assert_array_equal(p, ScoringEngine(theta).score(r))
+
+
+def test_score_batch_splits_past_max_batch(theta):
+    """A same-envelope wavefront bigger than the top G bucket splits
+    into max_batch-sized chunks (scores unchanged)."""
+    eng = ScoringEngine(theta, g_buckets=(1, 2, 4))
+    assert eng.max_batch == 4
+    reqs = synthetic_requests(11, num_features=D, k_user=(6, 6), k_ad=(4, 4),
+                              n_ads=(3, 3), seed=11)
+    got = eng.score_batch(reqs)
+    assert eng.stats.dispatches == 3  # 4 + 4 + 3(->G=4)
+    assert eng.stats.slots == 12
+    for r, p in zip(reqs, got):
+        np.testing.assert_array_equal(p, ScoringEngine(theta).score(r))
+
+
+def test_batched_zero_recompiles_after_g_bucket_warm(theta):
+    """warm(envelopes, batch_sizes=g_buckets) covers every dispatch the
+    batched path can make: replays of any grouping never recompile."""
+    rng = np.random.default_rng(12)
+    eng = ScoringEngine(theta)
+    reqs = synthetic_requests(30, num_features=D, seed=13)
+    eng.warm({eng.envelope(r) for r in reqs}, batch_sizes=eng.g_buckets)
+    warm = eng.stats.compiles
+    for _ in range(3):
+        order = rng.permutation(len(reqs))
+        eng.score_batch([reqs[i] for i in order])
+    eng.score_many(reqs)  # the G=1 path rides the same warmed cache
+    assert eng.stats.compiles == warm, "steady state recompiled"
+
+
+def test_batched_envelope_compiles_key_on_g(theta):
+    """Each (G, Ku, Ka, N) key compiles exactly once: same envelope at a
+    new batch size is one more compile, replays are free."""
+    eng = ScoringEngine(theta, k_buckets=(8,), n_buckets=(4,),
+                        g_buckets=(1, 2, 4))
+    reqs = synthetic_requests(4, num_features=D, k_user=(6, 6), k_ad=(4, 4),
+                              n_ads=(3, 3), seed=14)
+    eng.score(reqs[0])  # (1, 8, 8, 4)
+    assert eng.stats.compiles == 1
+    eng.score_batch(reqs[:2])  # (2, 8, 8, 4)
+    assert eng.stats.compiles == 2
+    eng.score_batch(reqs)  # (4, 8, 8, 4)
+    assert eng.stats.compiles == 3
+    eng.score_batch(reqs[:2])  # cached
+    eng.score(reqs[3])  # cached
+    assert eng.stats.compiles == 3

@@ -1,0 +1,172 @@
+"""Micro-batching queue + open-loop load generator: flush triggers
+(full / deadline / drain), admission control, the virtual-clock server
+model (sealed batches, serial service, monotonic completions), score
+parity with direct engine calls, Poisson arrival statistics, and the
+replay report's steady-state zero-recompile guarantee."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.serve import (
+    MicroBatchQueue,
+    QueueConfig,
+    ScoringEngine,
+    compress,
+    poisson_arrivals,
+    replay_open_loop,
+    synthetic_requests,
+)
+
+D, M = 500, 2
+
+
+@pytest.fixture(scope="module")
+def engine():
+    rng = np.random.default_rng(0)
+    th = rng.normal(size=(D, 2 * M)).astype(np.float32) * 0.3
+    th[rng.random(D) >= 0.2] = 0.0
+    return ScoringEngine(compress(jnp.asarray(th)))
+
+
+def _uniform_requests(num, seed=1, ku=6, ka=4, n=3):
+    """Same-envelope traffic (one group in the queue)."""
+    return synthetic_requests(num, num_features=D, k_user=(ku, ku),
+                              k_ad=(ka, ka), n_ads=(n, n), seed=seed)
+
+
+# --------------------------------------------------------- flush triggers
+def test_full_flush_at_max_batch(engine):
+    q = MicroBatchQueue(engine, QueueConfig(max_batch=3, max_delay_us=1e6))
+    reqs = _uniform_requests(3)
+    assert q.submit(reqs[0], 0.0) == 0
+    assert q.submit(reqs[1], 0.0) == 1
+    assert q.pending == 2 and not q.completions
+    assert q.submit(reqs[2], 0.0) == 2  # hits max_batch -> flushes now
+    assert q.pending == 0
+    assert len(q.completions) == 3
+    assert all(c.reason == "full" for c in q.completions)
+    assert q.stats.flushes == {"full": 1, "deadline": 0, "drain": 0}
+
+
+def test_deadline_flush(engine):
+    q = MicroBatchQueue(engine, QueueConfig(max_batch=8, max_delay_us=1000.0))
+    req = _uniform_requests(1)[0]
+    q.submit(req, 0.0)
+    assert q.next_deadline() == pytest.approx(1e-3)
+    assert q.flush_due(0.5e-3) == []  # not due yet
+    done = q.flush_due(2e-3)
+    assert [c.reason for c in done] == ["deadline"]
+    # the batch seals and starts AT its deadline, not at poll time
+    assert done[0].started == pytest.approx(1e-3)
+    assert done[0].completed > done[0].started  # real service time
+    assert q.next_deadline() is None
+
+
+def test_flush_due_handles_multiple_groups_in_deadline_order(engine):
+    q = MicroBatchQueue(engine, QueueConfig(max_batch=8, max_delay_us=1000.0))
+    small = _uniform_requests(1, ku=4)[0]
+    big = _uniform_requests(1, ku=20, seed=2)[0]
+    q.submit(small, 0.0)
+    q.submit(big, 0.4e-3)  # different envelope -> its own group
+    done = q.flush_due(5e-3)
+    assert len(done) == 2
+    assert done[0].arrival < done[1].arrival  # oldest deadline first
+    # serial server: the second flush cannot start before the first ends
+    assert done[1].started >= done[0].completed
+
+
+def test_admission_control_sheds_load(engine):
+    q = MicroBatchQueue(engine, QueueConfig(max_batch=8, max_delay_us=1e6,
+                                            max_pending=2))
+    reqs = _uniform_requests(4)
+    assert q.submit(reqs[0], 0.0) is not None
+    assert q.submit(reqs[1], 0.0) is not None
+    assert q.submit(reqs[2], 0.0) is None  # backlog full -> shed
+    assert q.stats.rejected == 1 and q.stats.accepted == 2
+    q.drain(1.0)
+    assert q.submit(reqs[3], 2.0) is not None  # space again after flush
+
+
+def test_drain_flushes_everything(engine):
+    q = MicroBatchQueue(engine, QueueConfig(max_batch=8, max_delay_us=1e6))
+    q.submit(_uniform_requests(1, ku=4)[0], 0.0)
+    q.submit(_uniform_requests(1, ku=20, seed=2)[0], 0.1)
+    done = q.drain(0.2)
+    assert len(done) == 2 and q.pending == 0
+    assert all(c.reason == "drain" for c in done)
+
+
+def test_queue_rejects_bad_config(engine):
+    with pytest.raises(ValueError):
+        MicroBatchQueue(engine, QueueConfig(max_batch=0))
+
+
+# ----------------------------------------------------------- score parity
+def test_queue_scores_match_direct_engine(engine):
+    """Tickets map completions back to submissions and each completion
+    carries exactly the scores a direct engine call produces."""
+    reqs = synthetic_requests(17, num_features=D, seed=3)
+    q = MicroBatchQueue(engine, QueueConfig(max_batch=4, max_delay_us=500.0))
+    tickets = {}
+    for i, r in enumerate(reqs):
+        t = float(i) * 1e-4
+        q.flush_due(t)
+        tickets[q.submit(r, t)] = i
+    q.drain(len(reqs) * 1e-4)
+    assert len(q.completions) == len(reqs)
+    fresh = ScoringEngine(engine._model)
+    for c in q.completions:
+        r = reqs[tickets[c.ticket]]
+        np.testing.assert_array_equal(c.scores, fresh.score(r))
+        assert c.completed >= c.started >= c.arrival
+        assert c.latency_us > 0
+
+
+# ------------------------------------------------------------ arrivals
+def test_poisson_arrivals_statistics():
+    a = poisson_arrivals(4000, qps=1000.0, seed=0)
+    assert a.shape == (4000,)
+    assert (np.diff(a) > 0).all()  # strictly increasing
+    gaps = np.diff(np.concatenate([[0.0], a]))
+    assert np.isclose(gaps.mean(), 1e-3, rtol=0.1)  # mean gap ~ 1/qps
+    np.testing.assert_array_equal(a, poisson_arrivals(4000, 1000.0, seed=0))
+    assert not np.array_equal(a, poisson_arrivals(4000, 1000.0, seed=1))
+    with pytest.raises(ValueError):
+        poisson_arrivals(10, qps=0.0)
+
+
+# ---------------------------------------------------------- open loop
+def test_replay_open_loop_report_and_steady_state(engine):
+    reqs = synthetic_requests(48, num_features=D, seed=5)
+    eng = ScoringEngine(engine._model)
+    eng.warm({eng.envelope(r) for r in reqs}, batch_sizes=eng.g_buckets)
+    warm = eng.stats.compiles
+    rep = replay_open_loop(eng, reqs, qps=3000.0,
+                           config=QueueConfig(max_batch=8,
+                                              max_delay_us=2000.0), seed=6)
+    assert eng.stats.compiles == warm, "load replay recompiled"
+    assert rep["requests"] == 48
+    assert rep["served"] + rep["rejected"] == 48
+    assert rep["served"] > 0
+    assert 0 < rep["latency_p50_us"] <= rep["latency_p99_us"]
+    assert rep["candidates_per_sec"] > 0 and rep["achieved_qps"] > 0
+    assert 0 < rep["occupancy"] <= 1.0
+    # one dispatch per flush unless a flush outgrew the top G bucket
+    assert rep["dispatches"] >= sum(rep["flushes"].values())
+    assert rep["offered_qps"] == 3000.0
+
+
+def test_replay_open_loop_sheds_under_overload(engine):
+    """A tiny backlog cap + a burst far above the flush rate must shed
+    load: arrivals land inside the deadline window faster than any
+    flush trigger fires, the backlog caps at max_pending, and the rest
+    are rejected (every served request still gets real scores)."""
+    reqs = synthetic_requests(60, num_features=D, seed=7)
+    eng = ScoringEngine(engine._model)
+    eng.warm({eng.envelope(r) for r in reqs}, batch_sizes=eng.g_buckets)
+    rep = replay_open_loop(eng, reqs, qps=2_000_000.0,
+                           config=QueueConfig(max_batch=64,
+                                              max_delay_us=50_000.0,
+                                              max_pending=4), seed=8)
+    assert rep["rejected"] > 0
+    assert rep["served"] == 60 - rep["rejected"]

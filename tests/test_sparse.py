@@ -1,5 +1,4 @@
 """Sparse feature substrate: exactness vs dense, training at 1M columns."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -7,7 +6,6 @@ import pytest
 from repro.core import CTRBatch
 from repro.core.objective import nll
 from repro.data.sparse import (
-    SparseCTRBatch,
     generate_sparse,
     sparse_loss_and_grad,
     sparse_nll,
