@@ -6,6 +6,7 @@ Prints ``name,us_per_call,derived`` CSV rows:
   * bench_common_feature  — Table 3 (common-feature trick cost)
   * bench_lr_vs_lsplm     — Fig. 5 (LS-PLM vs LR over 7 datasets)
   * bench_sparse_fused    — fused sparse kernel fwd/bwd vs oracles
+  * bench_tune            — autotuned configs vs the hand-picked defaults
   * bench_stream          — streaming trainer: overlapped re-planner
   * bench_serve           — serving: pruned artifacts, shared bundles, engine
   * roofline_report       — §Roofline rows from the dry-run artifacts
@@ -45,6 +46,7 @@ import sys
 import traceback
 
 SPARSE_FUSED_JSON = "BENCH_sparse_fused.json"
+TUNE_JSON = "BENCH_tune.json"
 STREAM_JSON = "BENCH_stream.json"
 SERVE_JSON = "BENCH_serve.json"
 
@@ -78,9 +80,9 @@ def main() -> None:
     ap.add_argument("--smoke", action="store_true",
                     help="tiny shapes where supported (CI)")
     ap.add_argument("--json", action="store_true",
-                    help=f"write {SPARSE_FUSED_JSON} / {STREAM_JSON} / "
-                         f"{SERVE_JSON} with the machine-readable timings "
-                         "(CI artifacts)")
+                    help=f"write {SPARSE_FUSED_JSON} / {TUNE_JSON} / "
+                         f"{STREAM_JSON} / {SERVE_JSON} with the "
+                         "machine-readable timings (CI artifacts)")
     args = ap.parse_args()
 
     from benchmarks import (
@@ -92,13 +94,15 @@ def main() -> None:
         bench_serve,
         bench_sparse_fused,
         bench_stream,
+        bench_tune,
         roofline_report,
     )
 
     mods = [bench_division, bench_regularization, bench_common_feature,
             bench_lr_vs_lsplm, bench_router_balance, bench_sparse_fused,
-            bench_stream, bench_serve, roofline_report]
+            bench_tune, bench_stream, bench_serve, roofline_report]
     json_paths = {bench_sparse_fused: SPARSE_FUSED_JSON,
+                  bench_tune: TUNE_JSON,
                   bench_stream: STREAM_JSON,
                   bench_serve: SERVE_JSON}
     if args.only:

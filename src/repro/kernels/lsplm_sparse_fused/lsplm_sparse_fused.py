@@ -44,14 +44,21 @@ N_pad * K_pad * 4 bytes exceed SMEM into separate calls (no automatic
 slabbing exists yet; see ROADMAP's TPU bring-up item). Theta itself
 never enters VMEM (d is HBM-bounded: a (1e6, 24) fp32 Theta is 96 MB).
 
+(block_n, block_k) are RESOLVED FROM THE AUTOTUNE TABLE (``repro.tune``,
+kernel key ``"fused_fwd"``) when the public ops are called with the
+knobs left at None — the sizing rule above bounds the sweep grid, the
+sweep (``python -m repro.tune.sweep``) picks within it, parity-gated
+against the ref oracle per config. Explicit kwargs always win.
+
 Coverage: CI validates this kernel in INTERPRET mode (no TPU runners),
 which exercises the full pipeline logic — scalar-prefetched indexing,
 conditional skip DMAs, buffer rotation, cross-sample chunk flattening.
 The compiled Mosaic path follows the standard prefetch+double-buffer
 recipe (see the Pallas guide's "Double Buffering" pattern); first-TPU
-bring-up should confirm ``mode="kernel"`` parity against
-``mode="interpret"`` and then sweep (block_n, block_k) with
-``benchmarks/bench_sparse_fused.py``.
+bring-up runs ``tests/test_kernel_parity.py`` (``REPRO_KERNEL_PARITY=1``
+— ``mode="kernel"`` vs ``mode="interpret"``) and then regenerates the
+TPU table with ``python -m repro.tune.sweep --mode kernel --out
+src/repro/tune/tables/tpu.json``.
 """
 from __future__ import annotations
 

@@ -35,9 +35,15 @@ are integer primals and get float0 cotangents; so does every plan leaf.
     "interpret" force the Pallas kernels in interpret mode (tests/CI)
     "jnp"       force the jnp paths
 
-Tunables (module-level, overridable per call):
-    DEFAULT_CHUNK     K-chunk of the scan fallbacks (``chunk=`` kwarg)
-    ROWS_REUSE_LIMIT  max ids.size * 2m kept as (N, K, 2m) residual rows
+Tunables: ``block_n``/``block_k`` (kernel tiles) and ``chunk`` (scan
+fallbacks) default to None = RESOLVED FROM THE AUTOTUNE TABLE
+(``repro.tune``) by the ``(backend, kernel, shape-envelope)`` key —
+explicit kwargs always win, then ``repro.tune.set_overrides``, then the
+committed table, then the builtin defaults. The forward and backward
+scans resolve their chunks independently (``chunk_fwd``/``chunk_bwd``
+table kernels); an explicit ``chunk=`` kwarg pins both. Resolution is
+trace-time dict lookups — zero steady-state sweeps.
+``ROWS_REUSE_LIMIT`` caps ids.size * 2m kept as (N, K, 2m) residual rows.
 """
 from __future__ import annotations
 
@@ -55,8 +61,9 @@ from repro.kernels.lsplm_sparse_scatter.ops import (
     dvals_planned,
     scatter_add_planned,
 )
+from repro.tune import table as tune
 
-DEFAULT_CHUNK = 8     # K-chunk for the scan fallbacks (public tunable)
+DEFAULT_CHUNK = 8     # K-chunk for the scan fallbacks (builtin default)
 ROWS_REUSE_LIMIT = 1 << 22  # save fwd rows as residuals up to this many floats
 
 
@@ -163,6 +170,32 @@ def _chunked_zmap(ids, vals, theta, chunk: int | None = None) -> jax.Array:
     return z
 
 
+def _chunk_pair(chunk) -> tuple[int | None, int | None]:
+    """Normalise the VJP's nondiff chunk arg to (chunk_fwd, chunk_bwd).
+
+    The public ops thread a resolved (fwd, bwd) tuple; direct private
+    callers (benchmarks) may still pass a single int or None."""
+    return chunk if isinstance(chunk, tuple) else (chunk, chunk)
+
+
+def _resolve_fused(ids, theta, mode, block_n, block_k, chunk):
+    """Fill None knobs from the autotune table (explicit kwargs win).
+
+    Trace-time python on static shapes — a jitted caller pays this once
+    per shape, never per step."""
+    env = tune.fused_envelope(ids.shape[0], ids.shape[1], theta.shape[-1])
+    if block_n is None or block_k is None:
+        cfg = tune.resolve("fused_fwd", env, mode=mode)
+        block_n = cfg["block_n"] if block_n is None else block_n
+        block_k = cfg["block_k"] if block_k is None else block_k
+    if chunk is None:
+        chunk = (tune.resolve("chunk_fwd", env, mode=mode)["chunk"],
+                 tune.resolve("chunk_bwd", env, mode=mode)["chunk"])
+    else:
+        chunk = (chunk, chunk)
+    return block_n, block_k, chunk
+
+
 def _use_kernel(mode: str) -> bool:
     if mode == "auto":
         return jax.default_backend() == "tpu"
@@ -190,7 +223,7 @@ def _zmap(mode, block_n, block_k, chunk, dedup, ids, vals, theta):
     if _use_kernel(mode):
         _, z = _kernel_forward(mode, block_n, block_k, dedup, ids, vals, theta)
         return z
-    return _chunked_zmap(ids, vals, theta, chunk)
+    return _chunked_zmap(ids, vals, theta, _chunk_pair(chunk)[0])
 
 
 def _zmap_with_rows(mode, block_n, block_k, chunk, dedup, ids, vals, theta):
@@ -206,7 +239,7 @@ def _zmap_with_rows(mode, block_n, block_k, chunk, dedup, ids, vals, theta):
         rows = jnp.take(theta, ids, axis=0)
         z = jnp.einsum("nk,nkm->nm", vals.astype(rows.dtype), rows)
         return z.astype(jnp.float32), rows
-    return _chunked_zmap(ids, vals, theta, chunk), None
+    return _chunked_zmap(ids, vals, theta, _chunk_pair(chunk)[0]), None
 
 
 def _dtheta_chunked(ids, vals, theta, dz, chunk):
@@ -243,6 +276,7 @@ def _dvals_chunked(ids, vals, theta, dz, chunk):
 def _scatter_bwd(mode, chunk, ids, vals, theta, dz, plan, rows):
     """Shared VJP tail: dz (N, 2m) -> (dvals, dtheta)."""
     dz = dz.astype(jnp.float32)
+    chunk = _chunk_pair(chunk)[1]
     if plan is not None:
         plan.validate(ids.shape, theta.shape[0])
         dtheta = scatter_add_planned(plan, vals, dz, mode=mode)
@@ -326,7 +360,8 @@ _forward_p.defvjp(_forward_p_fwd, _forward_p_bwd)
 
 # ------------------------------------------------------------- public API
 def sparse_gather_matmul(ids, vals, theta, *, mode: str = "auto",
-                         block_n: int = 256, block_k: int = 8,
+                         block_n: int | None = None,
+                         block_k: int | None = None,
                          chunk: int | None = None, dedup: bool = True,
                          plan: TransposePlan | None = None) -> jax.Array:
     """z = x @ Theta from padded COO, fused, custom-VJP'd. (N, K) -> (N, 2m).
@@ -335,27 +370,34 @@ def sparse_gather_matmul(ids, vals, theta, *, mode: str = "auto",
     backward on the precomputed transpose layout — no sort/scatter in
     the step. Without it the backward scans K-chunked scatter-adds.
     ``dedup=False`` skips the kernel path's per-call duplicate-id
-    collapse for batches known to be duplicate-free.
+    collapse for batches known to be duplicate-free. block_n/block_k/
+    chunk left at None resolve from the autotune table (``repro.tune``).
     """
     if plan is not None:
         plan.validate(ids.shape, theta.shape[0])
+    block_n, block_k, chunk = _resolve_fused(ids, theta, mode, block_n,
+                                             block_k, chunk)
     return _gather_matmul(mode, block_n, block_k, chunk, dedup, ids, vals,
                           theta, plan)
 
 
 def lsplm_sparse_forward(ids, vals, theta, *, mode: str = "auto",
-                         block_n: int = 256, block_k: int = 8,
+                         block_n: int | None = None,
+                         block_k: int | None = None,
                          chunk: int | None = None, dedup: bool = True,
                          plan: TransposePlan | None = None) -> jax.Array:
     """p(y=1|x) per Eq. 2 from padded COO, fully fused. Returns (N,)."""
     if plan is not None:
         plan.validate(ids.shape, theta.shape[0])
+    block_n, block_k, chunk = _resolve_fused(ids, theta, mode, block_n,
+                                             block_k, chunk)
     return _forward_p(mode, block_n, block_k, chunk, dedup, ids, vals, theta,
                       plan)
 
 
 def lsplm_sparse_logps(ids, vals, theta, *, mode: str = "auto",
-                       block_n: int = 256, block_k: int = 8,
+                       block_n: int | None = None,
+                       block_k: int | None = None,
                        chunk: int | None = None, dedup: bool = True,
                        plan: TransposePlan | None = None
                        ) -> tuple[jax.Array, jax.Array]:

@@ -9,6 +9,16 @@ read-modify-write on HBM (each compact row is written exactly once), and
 no cross-program races: the grid is sequential on TPU and the
 accumulator/cursor live in scratch, which persists across grid steps.
 
+Flushes are PIPELINED: the accumulator is double-buffered (two VMEM
+slots, one DMA semaphore each). A flush starts the active slot's copy to
+its compact row and immediately switches accumulation to the other slot
+— so flush t's HBM write overlaps run t+1's accumulate stream instead of
+stalling it (the old kernel start()+wait()ed every flush inline). A
+slot's outstanding copy is drained only when that slot is about to be
+reused (the NEXT flush), or at the sentinel tail; the in-flight flag and
+destination row ride in the SMEM cursor so the matching copy descriptor
+can be rebuilt for the deferred wait.
+
 The kernel emits the COMPACT (U+1, 2m) result — one row per distinct id
 in plan order plus a trailing zero row — and the caller densifies it
 with the plan's ``inv_compact`` gather. That keeps the kernel free of
@@ -38,14 +48,29 @@ from jax.experimental.pallas import tpu as pltpu
 
 
 def _kernel(row_ids_ref, sample_ref, vals_ref, dz_ref, out_ref,
-            acc, cursor, sem, *, block_e: int, num_kept: int, total: int):
+            acc, cursor, sems, *, block_e: int, num_kept: int, total: int):
+    # SMEM cursor layout (persists across sequential grid steps):
+    #   [0] id of the current run          [1] next compact row to write
+    #   [2] active accumulator slot        [3+s] slot s copy in flight?
+    #   [5+s] slot s in-flight destination row
     pid = pl.program_id(0)
 
     @pl.when(pid == 0)
     def _init():
         acc[...] = jnp.zeros_like(acc)
         cursor[0] = row_ids_ref[0]   # id of the first run
-        cursor[1] = 0                # next compact row to write
+        for i in range(1, 7):
+            cursor[i] = 0
+
+    def drain(slot):
+        # deferred wait: rebuild slot's outstanding copy descriptor from
+        # the tracked destination row and settle its semaphore
+        @pl.when(cursor[3 + slot] == 1)
+        def _():
+            pltpu.make_async_copy(
+                acc.at[slot], out_ref.at[cursor[5 + slot]],
+                sems.at[slot]).wait()
+            cursor[3 + slot] = 0
 
     def entry(e, carry):
         gid = pid * block_e + e
@@ -53,24 +78,38 @@ def _kernel(row_ids_ref, sample_ref, vals_ref, dz_ref, out_ref,
 
         @pl.when(rid != cursor[0])
         def _flush():
-            pltpu.make_async_copy(acc.at[0], out_ref.at[cursor[1]], sem).start()
-            pltpu.make_async_copy(acc.at[0], out_ref.at[cursor[1]], sem).wait()
-            acc[...] = jnp.zeros_like(acc)
+            slot = cursor[2]
+            other = 1 - slot
+            drain(other)  # the slot we are about to accumulate into
+            copy = pltpu.make_async_copy(
+                acc.at[slot], out_ref.at[cursor[1]], sems.at[slot])
+            copy.start()  # overlaps the next run's accumulation below
+            cursor[3 + slot] = 1
+            cursor[5 + slot] = cursor[1]
+            acc[other, :] = jnp.zeros_like(acc[other, :])
             cursor[0] = rid
             cursor[1] = cursor[1] + 1
+            cursor[2] = other
 
         @pl.when(gid < num_kept)
         def _accumulate():
             n = sample_ref[gid]
-            acc[0, :] = acc[0, :] + vals_ref[e].astype(jnp.float32) * dz_ref[n, :]
+            s = cursor[2]
+            acc[s, :] = acc[s, :] + vals_ref[e].astype(jnp.float32) * dz_ref[n, :]
 
         # last entry overall: the sentinel tail flushed the final real run
-        # above and accumulated nothing since, so acc is zero — write it to
-        # the trailing zero row that inv_sorted points untouched ids at.
+        # above and accumulated nothing since, so the active slot is zero —
+        # write it to the trailing zero row that inv_sorted points untouched
+        # ids at, after draining the other slot (nothing may stay in flight
+        # past kernel end).
         @pl.when(gid == total - 1)
         def _zero_row():
-            pltpu.make_async_copy(acc.at[0], out_ref.at[cursor[1]], sem).start()
-            pltpu.make_async_copy(acc.at[0], out_ref.at[cursor[1]], sem).wait()
+            slot = cursor[2]
+            drain(1 - slot)
+            copy = pltpu.make_async_copy(
+                acc.at[slot], out_ref.at[cursor[1]], sems.at[slot])
+            copy.start()
+            copy.wait()
 
         return carry
 
@@ -110,9 +149,9 @@ def lsplm_sparse_scatter_compact(
         ],
         out_specs=pl.BlockSpec(memory_space=pltpu.ANY),
         scratch_shapes=[
-            pltpu.VMEM((1, m2), jnp.float32),
-            pltpu.SMEM((2,), jnp.int32),
-            pltpu.SemaphoreType.DMA(()),
+            pltpu.VMEM((2, m2), jnp.float32),   # double-buffered accumulator
+            pltpu.SMEM((7,), jnp.int32),        # run/row/slot/in-flight cursor
+            pltpu.SemaphoreType.DMA((2,)),      # one per accumulator slot
         ],
     )
     return pl.pallas_call(

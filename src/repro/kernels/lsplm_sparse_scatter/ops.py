@@ -44,8 +44,9 @@ from repro.kernels.lsplm_sparse_scatter.plan import (  # noqa: F401  (re-export)
     TransposePlan,
     build_transpose_plan,
 )
+from repro.tune import table as tune
 
-_SCATTER_BLOCK_E = 1024  # entry block for the Pallas run-length kernel
+_SCATTER_BLOCK_E = 1024  # builtin default entry block (autotune table wins)
 
 
 def _take(a: jax.Array, idx: jax.Array, *, unique: bool = False) -> jax.Array:
@@ -94,11 +95,16 @@ def scatter_add_planned(
     dz: jax.Array,     # (N, 2m)
     *,
     mode: str = "auto",
-    block_e: int = _SCATTER_BLOCK_E,
+    block_e: int | None = None,
 ) -> jax.Array:
     """dTheta (D, 2m) from the precomputed transpose plan. Race-free by
-    construction: every output row is produced by exactly one segment."""
+    construction: every output row is produced by exactly one segment.
+    ``block_e=None`` resolves from the autotune table (``repro.tune``)
+    by the (entry-count, 2m) envelope; an explicit value wins."""
     if _use_kernel(mode):
+        if block_e is None:
+            env = tune.scatter_envelope(plan.num_kept, dz.shape[-1])
+            block_e = tune.resolve("scatter", env, mode=mode)["block_e"]
         row_ids, sample_sorted, vals_sorted = pad_plan_entries(
             plan, vals, block_e=block_e)
         compact = lsplm_sparse_scatter_compact(

@@ -38,6 +38,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.io import checkpoint
+from repro.launch.tuning import (
+    add_tuning_flags,
+    apply_tuning_flags,
+    tune_job_shapes,
+)
 from repro.serve import (
     QueueConfig,
     ScoringEngine,
@@ -114,7 +119,9 @@ def main() -> int:
     ap.add_argument("--max-pending", type=int, default=256,
                     help="admission control: shed load past this backlog")
     ap.add_argument("--seed", type=int, default=0)
+    add_tuning_flags(ap)
     args = ap.parse_args()
+    apply_tuning_flags(args)  # value check up front; geometry check below
 
     theta = _trained_theta(args)
     d = theta.shape[0]
@@ -160,6 +167,18 @@ def main() -> int:
     # sizes the G>1 path can round onto) up front, then the whole replay
     # is steady state
     envelopes = {engine.envelope(r) for r in requests}
+    # the engine pads K/N up to its buckets before the kernels run, so
+    # the geometry the knobs must fit is the PADDED envelope set
+    kmax = max(max(ku, ka) for ku, ka, _n in envelopes)
+    nmax = engine.max_batch * max(n for _ku, _ka, n in envelopes)
+    apply_tuning_flags(args, batch_n=nmax, batch_k=kmax)
+    if args.tune:
+        m = theta.shape[1] // 2
+        tune_job_shapes(
+            {(g * n, ka, d, m) for _ku, ka, n in envelopes
+             for g in (1, engine.max_batch)}
+            | {(g, ku, d, m) for ku, _ka, _n in envelopes
+               for g in (1, engine.max_batch)})
     engine.warm(envelopes, batch_sizes=engine.g_buckets)
     warm_compiles = engine.stats.compiles
     single = engine.score_many(requests)

@@ -50,6 +50,12 @@ from repro.data import CTRDataConfig, auc, generate, pad_to_multiple, to_dense_b
 from repro.dist import make_distributed_step, shard_batch, shard_state
 from repro.io import checkpoint
 from repro.launch.mesh import make_debug_mesh
+from repro.launch.tuning import (
+    add_tuning_flags,
+    apply_tuning_flags,
+    tune_job_shapes,
+    tuning_flags_set,
+)
 from repro.optim import OWLQNPlus
 
 
@@ -82,6 +88,13 @@ def train_sparse(args) -> int:
     theta0 = jnp.asarray(
         0.01 * np.random.default_rng(args.seed).normal(size=(d, 2 * m)),
         jnp.float32)
+    ku = train.user_ids.shape[-1]
+    ka = train.ad_ids.shape[-1]
+    apply_tuning_flags(args, batch_n=train.ad_ids.shape[0],
+                       batch_k=max(ku, ka))
+    if args.tune:
+        tune_job_shapes([(train.user_ids.shape[0], ku, d, m),
+                         (train.ad_ids.shape[0], ka, d, m)])
     kern = ("pipelined block-DMA kernel" if jax.default_backend() == "tpu"
             else "scan-chunked jnp fallback")
     print(f"sparse mode: d={d:,} columns, Theta {theta0.shape} "
@@ -177,6 +190,15 @@ def train_stream(args) -> int:
             f"need {args.mesh_data * args.mesh_model} devices, "
             f"have {jax.device_count()} (set REPRO_DEVICES)")
         mesh = make_debug_mesh(data=args.mesh_data, model=args.mesh_model)
+    if tuning_flags_set(args):
+        day0 = stream.day(0)
+        ku, ka = day0.user_ids.shape[-1], day0.ad_ids.shape[-1]
+        apply_tuning_flags(args, batch_k=max(ku, ka))
+        if args.tune:
+            g, b = day0.user_ids.shape[0], day0.ad_ids.shape[0]
+            w = args.window
+            tune_job_shapes({(g, ku, d, m), (b, ka, d, m),
+                             (g * w, ku, d, m), (b * w, ka, d, m)})
     trainer = StreamTrainer(
         stream, lam=args.lam, beta=args.beta, window=args.window,
         inner_iters=args.inner_iters, history=args.history, mesh=mesh,
@@ -262,8 +284,14 @@ def main():
                          "re-planner (synchronous fallback)")
     ap.add_argument("--resume", action="store_true",
                     help="--stream: resume from --ckpt if it exists")
+    add_tuning_flags(ap)
     args = ap.parse_args()
 
+    if tuning_flags_set(args) and not (args.sparse or args.stream):
+        raise SystemExit(
+            "--block-n/--block-k/--chunk/--tune steer the sparse kernels; "
+            "combine them with --sparse or --stream (the dense path has "
+            "no tunable block sizes)")
     if args.stream:
         return train_stream(args)
     if args.sparse:

@@ -1,0 +1,85 @@
+"""Launch-layer autotune knobs shared by the train and serve drivers.
+
+``--block-n/--block-k/--chunk`` pin a kernel knob process-wide (they map
+onto :func:`repro.tune.set_overrides`, which beats the committed table
+but loses to explicit call-site kwargs); ``--tune`` runs a fresh sweep
+at the job's own shapes and installs the result as the active in-memory
+table for this process — nothing is written to disk.
+
+Values are validated LOUDLY at launch: a non-positive knob, or one that
+mismatches the job geometry (``--chunk``/``--block-k`` wider than the
+batch's K, ``--block-n`` taller than the batch), is a ``SystemExit`` —
+the kernels would silently clamp, and a silently-clamped flag reporting
+timings for a config it never ran is worse than no flag at all.
+"""
+from __future__ import annotations
+
+import argparse
+
+from repro.tune import fused_envelope, set_active_table, set_overrides
+
+
+def add_tuning_flags(ap: argparse.ArgumentParser) -> None:
+    g = ap.add_argument_group(
+        "autotune", "kernel block-size knobs (default: the committed "
+        "autotune table — see repro.tune and README 'Autotuning')")
+    g.add_argument("--block-n", type=int, default=None,
+                   help="fused-forward batch tile (Pallas backends)")
+    g.add_argument("--block-k", type=int, default=None,
+                   help="fused-forward K tile (Pallas backends)")
+    g.add_argument("--chunk", type=int, default=None,
+                   help="K-chunk of the scan fallbacks (fwd AND bwd)")
+    g.add_argument("--tune", action="store_true",
+                   help="sweep this job's shapes up front and use the "
+                        "fresh result instead of the committed table")
+
+
+def tuning_flags_set(args: argparse.Namespace) -> bool:
+    return (args.block_n is not None or args.block_k is not None
+            or args.chunk is not None or args.tune)
+
+
+def apply_tuning_flags(args: argparse.Namespace, *,
+                       batch_n: int | None = None,
+                       batch_k: int | None = None) -> None:
+    """Install the flag overrides; loud ``SystemExit`` on bad values.
+
+    ``batch_n``/``batch_k`` are the job's batch geometry (rows, widest
+    id-list K) once known — a knob exceeding them would be silently
+    clamped by the kernels, so it is rejected here instead."""
+    try:
+        set_overrides(block_n=args.block_n, block_k=args.block_k,
+                      chunk=args.chunk)
+    except ValueError as e:
+        raise SystemExit(f"autotune flags: {e}") from None
+    if batch_k is not None:
+        for name, val in (("--chunk", args.chunk), ("--block-k", args.block_k)):
+            if val is not None and val > batch_k:
+                raise SystemExit(
+                    f"{name} {val} exceeds the job's K={batch_k} id columns "
+                    "— the kernel would silently clamp it; pass a value "
+                    f"<= {batch_k} or drop the flag")
+    if batch_n is not None and args.block_n is not None \
+            and args.block_n > batch_n:
+        raise SystemExit(
+            f"--block-n {args.block_n} exceeds the job's batch of "
+            f"{batch_n} rows — the kernel would silently clamp it; pass "
+            f"a value <= {batch_n} or drop the flag")
+
+
+def tune_job_shapes(shapes, *, mode: str = "auto", log=print) -> None:
+    """``--tune``: sweep the job's (n, k, d, m) shapes and make the
+    result THIS process's active table (committed files untouched).
+    Flag overrides still beat it — pinning a knob while sweeping the
+    rest is legitimate."""
+    from repro.tune.sweep import sweep_shapes
+
+    # shapes sharing a table envelope resolve identically — sweep each
+    # envelope once, at its largest member (closest to the bucket edge)
+    uniq: dict[str, tuple] = {}
+    for n, k, d, m in sorted(set(shapes)):
+        uniq[fused_envelope(n, k, 2 * m)] = (n, k, d, m)
+    shapes = sorted(uniq.values())
+    log(f"--tune: sweeping {len(shapes)} job shape(s) "
+        f"{shapes} (in-memory table; committed files untouched)")
+    set_active_table(sweep_shapes(shapes, mode=mode, log=log))

@@ -50,6 +50,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.serve.score import ScoreBundle, as_model, score_bundles
+from repro.tune import round_up
 
 # default bucket edges; above the top edge, round up to a multiple of it.
 # K edges are dense at the small end (production id lists are tens),
@@ -134,15 +135,11 @@ class EngineStats:
         }
 
 
-def _round_up(x: int, buckets: Sequence[int]) -> int:
-    """Smallest bucket edge >= x; past the top edge, next multiple of it."""
-    if x <= 0:
-        raise ValueError(f"dimension must be positive, got {x}")
-    for b in buckets:
-        if x <= b:
-            return b
-    top = buckets[-1]
-    return -(-x // top) * top
+# The engine's envelope rounding and the autotune table's shape buckets
+# share ONE rule: a request padded to its engine bucket lands on the
+# same table envelope every time, so block-size resolution is as
+# recompile-free as the executable cache itself.
+_round_up = round_up
 
 
 class ScoringEngine:

@@ -1,0 +1,27 @@
+"""Kernel autotune subsystem: swept block sizes behind every hot path.
+
+``repro.tune.table`` holds the persisted ``(backend, kernel, envelope) ->
+config`` table the sparse ops resolve their block sizes from;
+``repro.tune.sweep`` regenerates it (timed + parity-gated). See the
+README "Autotuning" section.
+"""
+from repro.tune.table import (  # noqa: F401
+    AutotuneTable,
+    BUILTIN_DEFAULTS,
+    E_BUCKETS,
+    K_BUCKETS,
+    KERNEL_PARAMS,
+    M2_BUCKETS,
+    N_BUCKETS,
+    TABLES_DIR,
+    active_table,
+    backend_key,
+    clear_overrides,
+    fused_envelope,
+    get_overrides,
+    resolve,
+    round_up,
+    scatter_envelope,
+    set_active_table,
+    set_overrides,
+)

@@ -1,0 +1,368 @@
+"""Autotune sweep harness: time kernel configs, parity-gate, persist.
+
+For each shape envelope the harness times every config in a small grid
+(best-of-``REPS`` wall clock on real device buffers) and accepts the
+fastest config WHOSE OUTPUT MATCHES THE REF ORACLE — a config that loses
+parity is rejected before it can ever be timed into the table, so a
+miscompiled block size can make the sweep fail, never make training
+wrong. A winner that does not beat the measured builtin default by
+:data:`MIN_GAIN` is discarded in favour of the default — the table only
+commits to wins that survive timing noise.
+
+What gets swept depends on the backend (``repro.tune.table.backend_key``):
+
+  * ``cpu`` (mode auto/jnp off-TPU): ``chunk_fwd``/``chunk_bwd`` — the
+    K-chunk of the ``lax.scan`` fallbacks, forward and backward
+    independently (their optima differ; see ``benchmarks/bench_tune.py``).
+  * ``interpret`` (mode=interpret): ``fused_fwd`` (block_n, block_k) and
+    ``scatter`` (block_e). Interpret timings exercise the machinery and
+    pick sane pipeline shapes for CI; they are not TPU performance.
+  * ``tpu`` (mode auto/kernel on TPU): ``fused_fwd`` and ``scatter`` at
+    the production shapes.
+
+CLI (regeneration flow — see README "Autotuning"):
+
+    PYTHONPATH=src python -m repro.tune.sweep --out src/repro/tune/tables/cpu.json
+    PYTHONPATH=src python -m repro.tune.sweep --mode interpret --smoke \\
+        --out src/repro/tune/tables/interpret.json
+    # on a TPU host:
+    PYTHONPATH=src python -m repro.tune.sweep --mode kernel \\
+        --out src/repro/tune/tables/tpu.json
+
+``--check TABLE.json`` re-times the committed config for every envelope
+this sweep covers and fails (exit 1) if it is missing, loses parity, or
+is slower than the fresh best by more than ``--check-tol`` — the CI
+autotune job's freshness gate (timing-noise tolerant by design).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.lsplm_sparse_fused.lsplm_sparse_fused import (
+    lsplm_sparse_fused_forward,
+)
+from repro.kernels.lsplm_sparse_fused.ops import (
+    _chunked_zmap,
+    _dtheta_chunked,
+    _dvals_chunked,
+    pad_theta,
+)
+from repro.kernels.lsplm_sparse_fused.ref import sparse_matmul_ref
+from repro.kernels.lsplm_sparse_scatter.ops import (
+    build_transpose_plan,
+    scatter_add_planned,
+    scatter_add_ref,
+)
+from repro.tune import table as tabmod
+
+# the production envelope bench_sparse_fused sweeps, the wide-K shapes
+# bench_tune gates on, and the CI smoke shape — (N, K, d, m)
+PROD_SHAPES = [(4096, 16, 16_384, 12), (8192, 16, 100_000, 8),
+               (16384, 24, 500_000, 12), (32768, 48, 1_000_000, 4),
+               (2048, 64, 100_000, 16), (8192, 64, 200_000, 8)]
+SMOKE_SHAPES = [(512, 8, 4_096, 4)]
+
+REPS = 5
+# A non-default winner must beat the MEASURED default config by this
+# factor to earn a table entry. Best-of-reps timing flatters marginal
+# configs (the max of noisy estimates — winner's curse over the grid);
+# a config that only "wins" by a few percent in the sweep routinely
+# loses at bench time, so near-ties stay on the builtin default.
+MIN_GAIN = 1.10
+PARITY_RTOL = 2e-4
+PARITY_ATOL = 2e-4
+
+BLOCK_N_GRID = (64, 128, 256, 512)
+BLOCK_K_GRID = (2, 4, 8, 16)
+BLOCK_E_GRID = (256, 512, 1024, 2048, 4096)
+CHUNK_GRID = (2, 4, 8, 16, 32, 48, 64)
+
+
+def _make(n: int, k: int, d: int, m: int, seed: int = 0):
+    """Deterministic sweep batch: padded Theta, pad-free uniform ids."""
+    rng = np.random.default_rng(seed)
+    ids = jnp.asarray(rng.integers(0, d, (n, k)), jnp.int32)
+    vals = jnp.asarray(rng.normal(size=(n, k)).astype(np.float32))
+    theta = jnp.asarray(rng.normal(size=(d, 2 * m)).astype(np.float32) * 0.1)
+    dz = jnp.asarray(rng.normal(size=(n, 2 * m)).astype(np.float32))
+    return ids, vals, pad_theta(theta), dz
+
+
+def time_best(fn, *args, reps: int = REPS) -> float:
+    """Best-of-``reps`` wall microseconds (after a compile + warm run)."""
+    jax.block_until_ready(fn(*args))
+    jax.block_until_ready(fn(*args))
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6
+
+
+def _parity(out, ref) -> bool:
+    return bool(np.allclose(np.asarray(out), np.asarray(ref),
+                            rtol=PARITY_RTOL, atol=PARITY_ATOL))
+
+
+def _pick(rows: list[dict], default: dict | None = None) -> dict:
+    """Fastest PARITY-PASSING config; raises if every config failed.
+
+    With ``default`` (the kernel's builtin config), a non-default winner
+    is only accepted when it beats the default's own measured time by
+    :data:`MIN_GAIN`; otherwise the default row is returned."""
+    ok = [r for r in rows if r["parity"]]
+    if not ok:
+        raise RuntimeError(f"no config passed parity: {rows}")
+    best = min(ok, key=lambda r: r["us"])
+    if default is not None and best["config"] != default:
+        base = [r for r in ok if r["config"] == default]
+        if base and base[0]["us"] < best["us"] * MIN_GAIN:
+            return base[0]
+    return best
+
+
+def _sweep_rows(grid, make_fn, ref, *, reps: int) -> list[dict]:
+    """Time each config in ``grid``; parity-gate before timing."""
+    rows = []
+    for cfg in grid:
+        fn, args = make_fn(cfg)
+        if not _parity(fn(*args), ref):
+            rows.append({"config": cfg, "us": float("inf"), "parity": False})
+            continue
+        rows.append({"config": cfg, "us": time_best(fn, *args, reps=reps),
+                     "parity": True})
+    return rows
+
+
+# ------------------------------------------------------------ per-kernel
+def sweep_fused(n, k, d, m, *, mode: str, reps: int = REPS,
+                extra: tuple = ()) -> list[dict]:
+    """(block_n, block_k) grid for the Pallas fused forward."""
+    ids, vals, tp, _ = _make(n, k, d, m)
+    ref = sparse_matmul_ref(ids, vals, tp)
+    grid = [(bn, bk) for bn in BLOCK_N_GRID if bn <= n
+            for bk in BLOCK_K_GRID if bk <= k]
+    grid = sorted(set(grid) | {e for e in extra if e[0] <= n and e[1] <= k})
+
+    def make_fn(cfg):
+        bn, bk = cfg
+
+        def fn(i, v, t):
+            _, z = lsplm_sparse_fused_forward(
+                i, v, t, block_n=bn, block_k=bk,
+                interpret=mode == "interpret")
+            return z
+
+        return fn, (ids, vals, tp)
+
+    rows = _sweep_rows(grid, make_fn, ref, reps=reps)
+    for r in rows:
+        r["config"] = {"block_n": r["config"][0], "block_k": r["config"][1]}
+    return rows
+
+
+def sweep_scatter(n, k, d, m, *, mode: str, reps: int = REPS,
+                  extra: tuple = ()) -> tuple[list[dict], int]:
+    """block_e grid for the Pallas run-length scatter; returns
+    (rows, kept-entry count) so the caller can key the envelope."""
+    ids, vals, tp, dz = _make(n, k, d, m)
+    plan = build_transpose_plan(np.asarray(ids), num_rows=tp.shape[0])
+    ref = scatter_add_ref(ids, vals, dz, tp.shape[0])
+    grid = sorted(set(e for e in BLOCK_E_GRID) | set(extra))
+
+    def make_fn(block_e):
+        fn = jax.jit(lambda v, g: scatter_add_planned(
+            plan, v, g, mode=mode, block_e=block_e))
+        return fn, (vals, dz)
+
+    rows = _sweep_rows(grid, make_fn, ref, reps=reps)
+    for r in rows:
+        r["config"] = {"block_e": r["config"]}
+    return rows, plan.num_kept
+
+
+def sweep_chunk_fwd(n, k, d, m, *, reps: int = REPS,
+                    extra: tuple = ()) -> list[dict]:
+    """chunk grid for the forward ``lax.scan`` fallback (jnp path)."""
+    ids, vals, tp, _ = _make(n, k, d, m)
+    ref = sparse_matmul_ref(ids, vals, tp)
+    grid = sorted(c for c in set(CHUNK_GRID) | {k} | set(extra) if c <= k)
+
+    def make_fn(chunk):
+        fn = jax.jit(lambda i, v, t: _chunked_zmap(i, v, t, chunk))
+        return fn, (ids, vals, tp)
+
+    rows = _sweep_rows(grid, make_fn, ref, reps=reps)
+    for r in rows:
+        r["config"] = {"chunk": r["config"]}
+    return rows
+
+
+def sweep_chunk_bwd(n, k, d, m, *, reps: int = REPS,
+                    extra: tuple = ()) -> list[dict]:
+    """chunk grid for the backward scans (scatter-add + gather-dot)."""
+    ids, vals, tp, dz = _make(n, k, d, m)
+    dt_ref = scatter_add_ref(ids, vals, dz, tp.shape[0])
+    dv_ref = jnp.einsum("nkm,nm->nk", jnp.take(tp, ids, axis=0), dz)
+    ref = np.concatenate([np.asarray(dt_ref).ravel(),
+                          np.asarray(dv_ref).ravel()])
+    grid = sorted(c for c in set(CHUNK_GRID) | {k} | set(extra) if c <= k)
+
+    def make_fn(chunk):
+        def raw(i, v, t, g):
+            return (_dtheta_chunked(i, v, t, g, chunk),
+                    _dvals_chunked(i, v, t, g, chunk))
+
+        jitted = jax.jit(raw)
+
+        def fn(i, v, t, g):
+            dt, dv = jitted(i, v, t, g)
+            return jnp.concatenate([dt.ravel(), dv.ravel()])
+
+        return fn, (ids, vals, tp, dz)
+
+    rows = _sweep_rows(grid, make_fn, ref, reps=reps)
+    for r in rows:
+        r["config"] = {"chunk": r["config"]}
+    return rows
+
+
+# --------------------------------------------------------------- driver
+def kernels_for_backend(backend: str) -> tuple[str, ...]:
+    """Which table kernels matter on a backend: Pallas block sizes where
+    the kernels actually compile/interpret, scan chunks elsewhere."""
+    if backend in ("interpret", "tpu"):
+        return ("fused_fwd", "scatter")
+    return ("chunk_fwd", "chunk_bwd")
+
+
+def sweep_shapes(shapes, *, mode: str = "auto", reps: int = REPS,
+                 table: tabmod.AutotuneTable | None = None,
+                 log=print) -> tabmod.AutotuneTable:
+    """Sweep every applicable kernel at every shape into ``table``."""
+    backend = tabmod.backend_key(mode)
+    table = table if table is not None else tabmod.AutotuneTable()
+    for n, k, d, m in shapes:
+        m2 = 2 * m
+        env = tabmod.fused_envelope(n, k, m2)
+        for kernel in kernels_for_backend(backend):
+            if kernel == "fused_fwd":
+                rows = sweep_fused(n, k, d, m, mode=mode, reps=reps)
+            elif kernel == "scatter":
+                rows, kept = sweep_scatter(n, k, d, m, mode=mode, reps=reps)
+                env_k = tabmod.scatter_envelope(kept, m2)
+            elif kernel == "chunk_fwd":
+                rows = sweep_chunk_fwd(n, k, d, m, reps=reps)
+            else:
+                rows = sweep_chunk_bwd(n, k, d, m, reps=reps)
+            env_k = env_k if kernel == "scatter" else env
+            best = _pick(rows, default=tabmod.BUILTIN_DEFAULTS[kernel])
+            table.put(backend, kernel, env_k, best["config"])
+            log(f"tune/{backend}/{kernel}/{env_k}: best {best['config']} "
+                f"{best['us']:.0f}us over {len(rows)} configs "
+                f"({sum(not r['parity'] for r in rows)} parity-rejected)")
+    table.meta.setdefault(backend, {}).update({
+        "reps": reps, "mode": mode,
+        "shapes": [list(s) for s in shapes],
+        "generator": "python -m repro.tune.sweep",
+    })
+    return table
+
+
+def check_table(shapes, committed: tabmod.AutotuneTable, *,
+                mode: str = "auto", reps: int = REPS, tol: float = 2.0,
+                log=print) -> list[str]:
+    """Freshness gate: the committed config for every envelope covered by
+    ``shapes`` must exist, hold parity, and stay within ``tol`` x of a
+    fresh sweep's best time. Returns failure strings (empty == pass)."""
+    backend = tabmod.backend_key(mode)
+    failures = []
+    for n, k, d, m in shapes:
+        m2 = 2 * m
+        for kernel in kernels_for_backend(backend):
+            env = tabmod.fused_envelope(n, k, m2)
+            if kernel == "scatter":
+                env = tabmod.scatter_envelope(n * k, m2)
+            cfg = committed.get(backend, kernel, env)
+            if cfg is None:
+                failures.append(f"{backend}/{kernel}/{env}: no committed entry")
+                continue
+            extra = (tuple(cfg[p] for p in ("block_n", "block_k"))
+                     if kernel == "fused_fwd"
+                     else tuple(cfg.values()))
+            if kernel == "fused_fwd":
+                rows = sweep_fused(n, k, d, m, mode=mode, reps=reps,
+                                   extra=(extra,))
+            elif kernel == "scatter":
+                rows, _ = sweep_scatter(n, k, d, m, mode=mode, reps=reps,
+                                        extra=extra)
+            elif kernel == "chunk_fwd":
+                rows = sweep_chunk_fwd(n, k, d, m, reps=reps, extra=extra)
+            else:
+                rows = sweep_chunk_bwd(n, k, d, m, reps=reps, extra=extra)
+            best = _pick(rows)
+            mine = [r for r in rows if r["config"] == cfg]
+            if not mine or not mine[0]["parity"]:
+                failures.append(f"{backend}/{kernel}/{env}: committed {cfg} "
+                                "lost parity with the ref oracle")
+                continue
+            ratio = mine[0]["us"] / best["us"]
+            status = "ok" if ratio <= tol else f"STALE (> {tol:.1f}x)"
+            log(f"check/{backend}/{kernel}/{env}: committed {cfg} "
+                f"{mine[0]['us']:.0f}us vs fresh best {best['config']} "
+                f"{best['us']:.0f}us — {ratio:.2f}x {status}")
+            if ratio > tol:
+                failures.append(
+                    f"{backend}/{kernel}/{env}: committed {cfg} is "
+                    f"{ratio:.2f}x slower than fresh best {best['config']}")
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--mode", default="auto",
+                    choices=("auto", "kernel", "interpret", "jnp"))
+    ap.add_argument("--smoke", action="store_true",
+                    help="sweep the CI smoke shape only")
+    ap.add_argument("--reps", type=int, default=REPS)
+    ap.add_argument("--out", default=None,
+                    help="write/merge the swept table into this JSON file")
+    ap.add_argument("--check", default=None,
+                    help="freshness-gate a committed table instead of writing")
+    ap.add_argument("--check-tol", type=float, default=2.0)
+    args = ap.parse_args(argv)
+
+    shapes = SMOKE_SHAPES if args.smoke else PROD_SHAPES + SMOKE_SHAPES
+    if args.check:
+        committed = tabmod.AutotuneTable.load(args.check)
+        failures = check_table(shapes, committed, mode=args.mode,
+                               reps=args.reps, tol=args.check_tol)
+        for f in failures:
+            print(f"FAIL {f}", file=sys.stderr)
+        return 1 if failures else 0
+
+    table = None
+    if args.out:
+        try:  # merge into the existing file so envelopes accumulate
+            table = tabmod.AutotuneTable.load(args.out)
+        except OSError:
+            table = None
+    table = sweep_shapes(shapes, mode=args.mode, reps=args.reps, table=table)
+    backend = tabmod.backend_key(args.mode)
+    if args.out:
+        table.save(args.out, backend)
+        print(f"wrote {args.out} [{backend}]")
+    else:
+        print(table.to_json(backend))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

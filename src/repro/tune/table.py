@@ -1,0 +1,265 @@
+"""Persisted kernel autotune table — the repo's one source of block sizes.
+
+Every hot path (fused sparse forward, plan-driven scatter backward, the
+K-chunked jnp fallbacks) takes block-size knobs that used to be
+hand-picked constants. This module replaces the constants with a lookup
+keyed on ``(backend, kernel, shape envelope)``:
+
+  * **backend** — ``"interpret"`` for interpret-mode Pallas runs, else
+    ``jax.default_backend()`` (``"cpu"``, ``"tpu"``, ...). A config swept
+    on one backend never leaks onto another.
+  * **kernel** — one of :data:`KERNEL_PARAMS`: ``"fused_fwd"``
+    (block_n, block_k), ``"scatter"`` (block_e), ``"chunk_fwd"`` /
+    ``"chunk_bwd"`` (chunk — forward and backward scans tune
+    independently; their optimal chunks differ, see
+    ``benchmarks/bench_tune.py``).
+  * **envelope** — the shape bucket, rounded with the same
+    :func:`round_up` rule the serving engine uses for its executable
+    cache (smallest bucket edge >= x; past the top edge, next multiple of
+    it). Envelopes are deliberately **d-free**: kernel cost does not
+    depend on the Theta row count, and keying on (N, K, 2m) only keeps
+    pruned-vs-full scoring on the same envelope — same config, bitwise
+    identical results.
+
+Resolution precedence (what a call site actually gets):
+
+    explicit kwarg  >  set_overrides()  >  table entry  >  builtin default
+
+Tables are JSON, one file per backend, under ``src/repro/tune/tables/``
+(``cpu.json`` and ``interpret.json`` are committed; regenerate with
+``python -m repro.tune.sweep`` — see the README "Autotuning" section).
+The active table is loaded lazily ONCE per process and every
+:func:`resolve` after that is a dict lookup: zero steady-state sweeps,
+zero file I/O on the hot path.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import Mapping, Sequence
+
+import jax
+
+# Bucket edges for envelope rounding. N covers batch-tile row counts from
+# serving slates to full training batches; K/M2 mirror the serving
+# engine's dense-at-the-small-end id-list edges; E covers sorted-entry
+# counts (~N*K) for the scatter kernel.
+N_BUCKETS = (256, 512, 1024, 2048, 4096, 8192, 16384, 32768, 65536)
+K_BUCKETS = (4, 8, 16, 24, 32, 48, 64)
+M2_BUCKETS = (4, 8, 16, 24, 32, 48, 64)
+E_BUCKETS = (4096, 16384, 65536, 262144, 1048576, 4194304)
+
+# kernel name -> the config keys a table entry for it must carry
+KERNEL_PARAMS: dict[str, tuple[str, ...]] = {
+    "fused_fwd": ("block_n", "block_k"),
+    "scatter": ("block_e",),
+    "chunk_fwd": ("chunk",),
+    "chunk_bwd": ("chunk",),
+}
+
+# the hand-picked constants the repo shipped with — the fallback when no
+# table entry exists (unknown backend, unswept envelope) and the baseline
+# every tuned config is benched against
+BUILTIN_DEFAULTS: dict[str, dict[str, int]] = {
+    "fused_fwd": {"block_n": 256, "block_k": 8},
+    "scatter": {"block_e": 1024},
+    "chunk_fwd": {"chunk": 8},
+    "chunk_bwd": {"chunk": 8},
+}
+
+# every overridable knob, with the kernels it applies to
+_PARAM_KERNELS = {
+    "block_n": ("fused_fwd",),
+    "block_k": ("fused_fwd",),
+    "block_e": ("scatter",),
+    "chunk": ("chunk_fwd", "chunk_bwd"),
+}
+
+TABLES_DIR = Path(__file__).resolve().parent / "tables"
+
+
+def round_up(x: int, buckets: Sequence[int]) -> int:
+    """Smallest bucket edge >= x; past the top edge, next multiple of it.
+
+    The one envelope-rounding rule, shared with the serving engine's
+    executable cache (``repro.serve.engine``)."""
+    if x <= 0:
+        raise ValueError(f"dimension must be positive, got {x}")
+    for b in buckets:
+        if x <= b:
+            return b
+    top = buckets[-1]
+    return -(-x // top) * top
+
+
+def fused_envelope(n: int, k: int, m2: int) -> str:
+    """Envelope key for the forward-side kernels (fused_fwd, chunk_*)."""
+    return (f"n{round_up(n, N_BUCKETS)}"
+            f"_k{round_up(k, K_BUCKETS)}"
+            f"_m{round_up(m2, M2_BUCKETS)}")
+
+
+def scatter_envelope(entries: int, m2: int) -> str:
+    """Envelope key for the scatter kernel: sorted-entry count + 2m.
+
+    ``entries`` is the plan's kept entry count (~N*K minus pads)."""
+    return f"e{round_up(max(entries, 1), E_BUCKETS)}_m{round_up(m2, M2_BUCKETS)}"
+
+
+def backend_key(mode: str = "auto") -> str:
+    """The table backend a call under ``mode`` resolves against."""
+    if mode == "interpret":
+        return "interpret"
+    return jax.default_backend()
+
+
+def _check_config(kernel: str, config: Mapping[str, int]) -> dict[str, int]:
+    if kernel not in KERNEL_PARAMS:
+        raise ValueError(
+            f"unknown kernel {kernel!r}; expected one of {sorted(KERNEL_PARAMS)}")
+    want = set(KERNEL_PARAMS[kernel])
+    got = set(config)
+    if got != want:
+        raise ValueError(
+            f"kernel {kernel!r} config must have keys {sorted(want)}, got {sorted(got)}")
+    for key, val in config.items():
+        if isinstance(val, bool) or not isinstance(val, int) or val < 1:
+            raise ValueError(f"{kernel}.{key} must be a positive int, got {val!r}")
+    return dict(config)
+
+
+class AutotuneTable:
+    """In-memory ``(backend, kernel, envelope) -> config`` mapping with
+    JSON persistence (one file per backend)."""
+
+    VERSION = 1
+
+    def __init__(self):
+        # backend -> kernel -> envelope -> {param: int}
+        self._entries: dict[str, dict[str, dict[str, dict[str, int]]]] = {}
+        self.meta: dict[str, dict] = {}  # backend -> provenance blob
+
+    def put(self, backend: str, kernel: str, envelope: str,
+            config: Mapping[str, int]) -> None:
+        cfg = _check_config(kernel, config)
+        self._entries.setdefault(backend, {}).setdefault(kernel, {})[envelope] = cfg
+
+    def get(self, backend: str, kernel: str, envelope: str) -> dict[str, int] | None:
+        """The stored config, or None (no silent defaulting here —
+        :func:`resolve` owns the fallback chain)."""
+        cfg = self._entries.get(backend, {}).get(kernel, {}).get(envelope)
+        return dict(cfg) if cfg is not None else None
+
+    def backends(self) -> tuple[str, ...]:
+        return tuple(sorted(self._entries))
+
+    def entries(self, backend: str) -> dict[str, dict[str, dict[str, int]]]:
+        """``kernel -> envelope -> config`` for one backend (a copy)."""
+        return {k: {e: dict(c) for e, c in envs.items()}
+                for k, envs in self._entries.get(backend, {}).items()}
+
+    # ----------------------------------------------------------- JSON I/O
+    def to_json(self, backend: str) -> str:
+        doc = {
+            "version": self.VERSION,
+            "backend": backend,
+            "entries": self.entries(backend),
+            "meta": self.meta.get(backend, {}),
+        }
+        return json.dumps(doc, indent=2, sort_keys=True) + "\n"
+
+    def merge_json(self, text: str) -> str:
+        """Merge one backend file into this table; returns the backend."""
+        doc = json.loads(text)
+        if doc.get("version") != self.VERSION:
+            raise ValueError(f"unsupported table version {doc.get('version')!r}")
+        backend = doc["backend"]
+        for kernel, envs in doc.get("entries", {}).items():
+            for envelope, cfg in envs.items():
+                self.put(backend, kernel, envelope, cfg)
+        if doc.get("meta"):
+            self.meta[backend] = doc["meta"]
+        return backend
+
+    def save(self, path: str | Path, backend: str) -> None:
+        Path(path).write_text(self.to_json(backend))
+
+    @classmethod
+    def load(cls, *paths: str | Path) -> "AutotuneTable":
+        table = cls()
+        for p in paths:
+            table.merge_json(Path(p).read_text())
+        return table
+
+    @classmethod
+    def load_dir(cls, directory: str | Path = TABLES_DIR) -> "AutotuneTable":
+        """Load every ``*.json`` backend file under ``directory``."""
+        return cls.load(*sorted(Path(directory).glob("*.json")))
+
+
+# ------------------------------------------------- process-wide resolution
+_active_table: AutotuneTable | None = None
+_overrides: dict[str, int] = {}
+
+
+def active_table() -> AutotuneTable:
+    """The process-wide table, lazily loaded from the committed files
+    ONCE (missing/empty dir -> empty table, builtin defaults apply)."""
+    global _active_table
+    if _active_table is None:
+        try:
+            _active_table = AutotuneTable.load_dir()
+        except (OSError, ValueError):
+            _active_table = AutotuneTable()
+    return _active_table
+
+
+def set_active_table(table: AutotuneTable | None) -> None:
+    """Install a table (``--tune`` fresh sweeps, tests); None re-arms the
+    lazy load of the committed files."""
+    global _active_table
+    _active_table = table
+
+
+def set_overrides(**params: int | None) -> None:
+    """Process-wide knob overrides (the launch ``--block-n/--block-k/
+    --chunk`` flags): beat the table, lose to explicit call kwargs.
+    ``chunk`` applies to both chunk_fwd and chunk_bwd. A value of None
+    clears that override. Unknown knobs and non-positive/non-int values
+    raise — never silently clamped."""
+    for key, val in params.items():
+        if key not in _PARAM_KERNELS:
+            raise ValueError(
+                f"unknown tunable {key!r}; expected one of {sorted(_PARAM_KERNELS)}")
+        if val is None:
+            _overrides.pop(key, None)
+            continue
+        if isinstance(val, bool) or not isinstance(val, int) or val < 1:
+            raise ValueError(f"override {key}={val!r} must be a positive int")
+        _overrides[key] = val
+
+
+def clear_overrides() -> None:
+    _overrides.clear()
+
+
+def get_overrides() -> dict[str, int]:
+    return dict(_overrides)
+
+
+def resolve(kernel: str, envelope: str, *, mode: str = "auto") -> dict[str, int]:
+    """The config a call site should run with — builtin defaults, beaten
+    by the active table's ``(backend, kernel, envelope)`` entry, beaten
+    by :func:`set_overrides`. Pure dict lookups: zero steady-state
+    sweeps or I/O."""
+    if kernel not in KERNEL_PARAMS:
+        raise ValueError(
+            f"unknown kernel {kernel!r}; expected one of {sorted(KERNEL_PARAMS)}")
+    cfg = dict(BUILTIN_DEFAULTS[kernel])
+    entry = active_table().get(backend_key(mode), kernel, envelope)
+    if entry is not None:
+        cfg.update(entry)
+    for param in KERNEL_PARAMS[kernel]:
+        if param in _overrides:
+            cfg[param] = _overrides[param]
+    return cfg

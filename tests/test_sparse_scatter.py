@@ -6,6 +6,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.kernels.lsplm_sparse_scatter.lsplm_sparse_scatter import (
+    lsplm_sparse_scatter_compact,
+)
 from repro.kernels.lsplm_sparse_scatter.ops import (
     build_transpose_plan,
     dvals_planned,
@@ -137,6 +140,64 @@ def test_planned_scatter_under_jit_with_plan_argument():
                                 jnp.asarray(dz))
     np.testing.assert_allclose(np.asarray(dt), np.asarray(dt_ref),
                                rtol=1e-4, atol=1e-5)
+
+
+# ------------------------------------------ pipelined-flush kernel edges
+def test_compact_kernel_trailing_row_is_exactly_zero():
+    """The sentinel-tail flush must write an EXACT zero trailing row —
+    untouched pad entries gather from it, so any residue from the
+    double-buffered accumulator would leak into real gradients."""
+    ids, vals, _, dz = _batch(24, 8, 60, 3, pad_frac=0.375, seed=11)
+    plan = build_transpose_plan(ids, 61, pad_id=60)
+    row_ids, sample, vals_sorted = pad_plan_entries(
+        plan, jnp.asarray(vals), block_e=32)
+    compact = lsplm_sparse_scatter_compact(
+        row_ids, sample, vals_sorted, jnp.asarray(dz),
+        num_unique=plan.num_unique, num_kept=plan.num_kept,
+        block_e=32, interpret=True)
+    assert compact.shape == (plan.num_unique + 1, 6)
+    assert (np.asarray(compact)[-1] == 0.0).all()   # exact, not allclose
+
+
+def test_compact_kernel_all_unique_ids_flush_every_entry():
+    """Every entry is its own run: a flush (and a slot swap) fires on
+    every single entry — the double-buffer drain logic gets no slack."""
+    N, K, d, m = 16, 4, 200, 2
+    rng = np.random.default_rng(12)
+    ids = rng.permutation(d)[:N * K].reshape(N, K)   # all distinct
+    vals = rng.normal(size=(N, K)).astype(np.float32)
+    dz = rng.normal(size=(N, 2 * m)).astype(np.float32)
+    plan = build_transpose_plan(ids, d + 1)
+    assert plan.num_unique == N * K
+    dt = scatter_add_planned(plan, jnp.asarray(vals), jnp.asarray(dz),
+                             mode="interpret", block_e=8)  # many grid blocks
+    _, dt_ref = scatter_bwd_ref(jnp.asarray(ids, jnp.int32),
+                                jnp.asarray(vals),
+                                jnp.zeros((d + 1, 2 * m), jnp.float32),
+                                jnp.asarray(dz))
+    np.testing.assert_allclose(np.asarray(dt), np.asarray(dt_ref),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_compact_kernel_run_spanning_grid_blocks():
+    """One hot id dominating the batch: its run spans several grid
+    blocks, so the accumulator must persist across sequential steps and
+    the in-flight flush state must survive block boundaries."""
+    N, K, d, m = 32, 8, 50, 3
+    rng = np.random.default_rng(13)
+    ids = np.where(rng.random((N, K)) < 0.7, 7, rng.integers(0, d, (N, K)))
+    vals = rng.normal(size=(N, K)).astype(np.float32)
+    dz = rng.normal(size=(N, 2 * m)).astype(np.float32)
+    plan = build_transpose_plan(ids, d + 1)
+    for block_e in (16, 64):
+        dt = scatter_add_planned(plan, jnp.asarray(vals), jnp.asarray(dz),
+                                 mode="interpret", block_e=block_e)
+        _, dt_ref = scatter_bwd_ref(jnp.asarray(ids, jnp.int32),
+                                    jnp.asarray(vals),
+                                    jnp.zeros((d + 1, 2 * m), jnp.float32),
+                                    jnp.asarray(dz))
+        np.testing.assert_allclose(np.asarray(dt), np.asarray(dt_ref),
+                                   rtol=1e-4, atol=1e-5)
 
 
 def test_pad_plan_entries_appends_sentinels():

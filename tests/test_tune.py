@@ -1,0 +1,214 @@
+"""Autotune table: envelope bucketing edges, JSON round-trip, fallback
+chain (explicit kwarg > overrides > table entry > builtin defaults),
+override validation, and call-site resolution on the fused ops."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.lsplm_sparse_fused.ops import _resolve_fused
+from repro.tune import (
+    BUILTIN_DEFAULTS,
+    E_BUCKETS,
+    K_BUCKETS,
+    N_BUCKETS,
+    AutotuneTable,
+    backend_key,
+    clear_overrides,
+    fused_envelope,
+    get_overrides,
+    resolve,
+    round_up,
+    scatter_envelope,
+    set_active_table,
+    set_overrides,
+)
+
+
+@pytest.fixture(autouse=True)
+def _isolated_table():
+    """Every test runs against an explicit table and no overrides; the
+    lazy committed-file load is re-armed on exit."""
+    set_active_table(AutotuneTable())
+    clear_overrides()
+    yield
+    set_active_table(None)
+    clear_overrides()
+
+
+def _table(kernel, envelope, config, backend=None):
+    t = AutotuneTable()
+    t.put(backend or backend_key(), kernel, envelope, config)
+    set_active_table(t)
+    return t
+
+
+# ------------------------------------------------------------- bucketing
+def test_round_up_picks_smallest_edge_at_or_above():
+    assert round_up(1, N_BUCKETS) == 256          # below the first edge
+    assert round_up(256, N_BUCKETS) == 256        # exactly on an edge
+    assert round_up(257, N_BUCKETS) == 512        # just past an edge
+    assert round_up(65536, N_BUCKETS) == 65536    # exactly the top edge
+
+
+def test_round_up_past_top_edge_rounds_to_multiples_of_it():
+    top = N_BUCKETS[-1]
+    assert round_up(top + 1, N_BUCKETS) == 2 * top
+    assert round_up(2 * top, N_BUCKETS) == 2 * top
+    assert round_up(2 * top + 1, N_BUCKETS) == 3 * top
+
+
+def test_round_up_rejects_non_positive():
+    with pytest.raises(ValueError):
+        round_up(0, N_BUCKETS)
+    with pytest.raises(ValueError):
+        round_up(-4, K_BUCKETS)
+
+
+def test_envelopes_bucket_every_dimension():
+    assert fused_envelope(4096, 16, 24) == "n4096_k16_m24"
+    assert fused_envelope(4000, 13, 17) == "n4096_k16_m24"   # rounds up
+    # d-free by construction: no theta row count in the key
+    assert scatter_envelope(60_000, 8) == "e65536_m8"
+    assert scatter_envelope(0, 8) == f"e{E_BUCKETS[0]}_m8"   # empty plan
+    assert scatter_envelope(E_BUCKETS[-1] + 1, 8) == f"e{2 * E_BUCKETS[-1]}_m8"
+
+
+def test_backend_key_interpret_is_its_own_backend():
+    assert backend_key("interpret") == "interpret"
+    assert backend_key() != "interpret"
+
+
+# ---------------------------------------------------------- JSON round-trip
+def test_table_json_round_trip_preserves_entries_and_meta():
+    t = AutotuneTable()
+    t.put("cpu", "chunk_fwd", "n4096_k16_m24", {"chunk": 16})
+    t.put("cpu", "fused_fwd", "n512_k8_m8", {"block_n": 64, "block_k": 4})
+    t.meta["cpu"] = {"generator": "test", "reps": 3}
+    back = AutotuneTable()
+    assert back.merge_json(t.to_json("cpu")) == "cpu"
+    assert back.entries("cpu") == t.entries("cpu")
+    assert back.meta["cpu"] == t.meta["cpu"]
+    # and the get() view agrees
+    assert back.get("cpu", "fused_fwd", "n512_k8_m8") == {
+        "block_n": 64, "block_k": 4}
+
+
+def test_table_rejects_wrong_version_and_bad_configs():
+    with pytest.raises(ValueError):
+        AutotuneTable().merge_json('{"version": 99, "backend": "cpu"}')
+    t = AutotuneTable()
+    with pytest.raises(ValueError):
+        t.put("cpu", "warp_drive", "n512_k8_m8", {"chunk": 8})
+    with pytest.raises(ValueError):   # wrong key set for the kernel
+        t.put("cpu", "fused_fwd", "n512_k8_m8", {"block_n": 64})
+    with pytest.raises(ValueError):   # non-positive
+        t.put("cpu", "chunk_fwd", "n512_k8_m8", {"chunk": 0})
+    with pytest.raises(ValueError):   # bool is not an int here
+        t.put("cpu", "chunk_fwd", "n512_k8_m8", {"chunk": True})
+
+
+def test_table_save_load_dir(tmp_path):
+    t = AutotuneTable()
+    t.put("cpu", "chunk_bwd", "n4096_k16_m24", {"chunk": 4})
+    t.put("interpret", "scatter", "e4096_m8", {"block_e": 256})
+    t.save(tmp_path / "cpu.json", "cpu")
+    t.save(tmp_path / "interpret.json", "interpret")
+    back = AutotuneTable.load_dir(tmp_path)
+    assert back.backends() == ("cpu", "interpret")
+    assert back.get("cpu", "chunk_bwd", "n4096_k16_m24") == {"chunk": 4}
+    assert back.get("interpret", "scatter", "e4096_m8") == {"block_e": 256}
+
+
+# --------------------------------------------------------- resolution chain
+def test_resolve_falls_back_to_builtin_defaults():
+    # empty table (fixture) and an envelope nobody swept
+    for kernel in BUILTIN_DEFAULTS:
+        assert resolve(kernel, "n256_k4_m4") == BUILTIN_DEFAULTS[kernel]
+
+
+def test_resolve_ignores_entries_from_other_backends():
+    # a tpu-only table must not leak onto this (cpu) backend
+    _table("chunk_fwd", "n4096_k16_m24", {"chunk": 64}, backend="tpu")
+    assert resolve("chunk_fwd", "n4096_k16_m24") == BUILTIN_DEFAULTS["chunk_fwd"]
+
+
+def test_resolve_prefers_table_entry_over_default():
+    _table("chunk_fwd", "n4096_k16_m24", {"chunk": 16})
+    assert resolve("chunk_fwd", "n4096_k16_m24") == {"chunk": 16}
+    # unswept envelope on the same backend still defaults
+    assert resolve("chunk_fwd", "n256_k4_m4") == BUILTIN_DEFAULTS["chunk_fwd"]
+
+
+def test_overrides_beat_the_table():
+    _table("chunk_fwd", "n4096_k16_m24", {"chunk": 16})
+    set_overrides(chunk=4)
+    assert resolve("chunk_fwd", "n4096_k16_m24") == {"chunk": 4}
+    assert resolve("chunk_bwd", "n4096_k16_m24") == {"chunk": 4}  # both scans
+    set_overrides(chunk=None)  # None clears
+    assert get_overrides() == {}
+    assert resolve("chunk_fwd", "n4096_k16_m24") == {"chunk": 16}
+
+
+def test_set_overrides_validates_loudly():
+    with pytest.raises(ValueError):
+        set_overrides(block_q=7)          # unknown knob
+    with pytest.raises(ValueError):
+        set_overrides(chunk=0)            # not positive
+    with pytest.raises(ValueError):
+        set_overrides(block_n=True)       # bool sneaking in as int
+    assert get_overrides() == {}          # nothing half-applied
+
+
+def test_resolve_rejects_unknown_kernel():
+    with pytest.raises(ValueError):
+        resolve("warp_drive", "n256_k4_m4")
+
+
+# ------------------------------------------------- call-site resolution
+def test_explicit_kwarg_beats_table_at_the_call_site():
+    ids = jnp.zeros((4096, 16), jnp.int32)
+    theta = jnp.zeros((100, 24), jnp.float32)
+    t = AutotuneTable()
+    t.put(backend_key(), "fused_fwd", "n4096_k16_m24",
+          {"block_n": 64, "block_k": 4})
+    t.put(backend_key(), "chunk_fwd", "n4096_k16_m24", {"chunk": 16})
+    t.put(backend_key(), "chunk_bwd", "n4096_k16_m24", {"chunk": 4})
+    set_active_table(t)
+    # None knobs pull the table entries (chunk as a (fwd, bwd) pair)
+    bn, bk, chunk = _resolve_fused(ids, theta, "auto", None, None, None)
+    assert (bn, bk) == (64, 4)
+    assert chunk == (16, 4)
+    # explicit kwargs win over all of it, including per-knob mixes
+    bn, bk, chunk = _resolve_fused(ids, theta, "auto", 512, 2, 32)
+    assert (bn, bk, chunk) == (512, 2, (32, 32))
+    bn, bk, _ = _resolve_fused(ids, theta, "auto", 512, None, None)
+    assert (bn, bk) == (512, 4)           # table still fills the other knob
+    # explicit also beats overrides
+    set_overrides(chunk=8)
+    _, _, chunk = _resolve_fused(ids, theta, "auto", None, None, 32)
+    assert chunk == (32, 32)
+    _, _, chunk = _resolve_fused(ids, theta, "auto", None, None, None)
+    assert chunk == (8, 8)
+
+
+def test_resolved_configs_do_not_change_results():
+    """The table only picks block sizes — same math either way."""
+    from repro.kernels.lsplm_sparse_fused.ops import (
+        pad_theta,
+        sparse_gather_matmul,
+    )
+    from repro.kernels.lsplm_sparse_fused.ref import sparse_matmul_ref
+
+    rng = np.random.default_rng(0)
+    ids = jnp.asarray(rng.integers(0, 64, (32, 6)), jnp.int32)
+    vals = jnp.asarray(rng.normal(size=(32, 6)).astype(np.float32))
+    tp = pad_theta(jnp.asarray(rng.normal(size=(64, 8)).astype(np.float32)))
+    env = fused_envelope(32, 6, 8)
+    _table("chunk_fwd", env, {"chunk": 2})
+    z_tab = sparse_gather_matmul(ids, vals, tp)          # table chunk=2
+    z_exp = sparse_gather_matmul(ids, vals, tp, chunk=6)  # explicit
+    z_ref = sparse_matmul_ref(ids, vals, tp)
+    np.testing.assert_allclose(np.asarray(z_tab), np.asarray(z_ref),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(z_exp), np.asarray(z_ref),
+                               rtol=1e-5, atol=1e-6)
