@@ -1,0 +1,148 @@
+"""Observability overhead benchmark — instrumented vs uninstrumented
+OWLQN+ train-step wall.
+
+The obs layer (``repro.obs``) promises a near-free disabled fast path
+and cheap enabled instrumentation: a span is two ``perf_counter_ns``
+calls, a ledger record one dict + one JSONL line. This bench drives the
+SAME warmed, jitted sparse train step through two identical host loops —
+one against the null tracer/ledger (obs off: exactly what an
+un-instrumented run pays), one against an enabled :class:`~repro.obs.Tracer`
+plus a file-backed :class:`~repro.obs.RunLedger` — and reports the wall
+ratio. Both loops mirror ``OWLQNPlus.run``'s per-iteration work
+(device_get of the step stats included), so the ratio isolates the
+instrumentation itself.
+
+The trajectory must be BIT-IDENTICAL between modes (observation never
+feeds back into the math) — asserted before timing counts.
+
+Enforcement: with REPRO_BENCH_ENFORCE=1 (and not --smoke) the
+instrumented loop must stay within :data:`MAX_OVERHEAD` (2%) of the
+uninstrumented wall — the ISSUE's "overhead measured and negligible"
+gate. Reps interleave base/instrumented and keep each mode's best wall
+so slow-drift on shared runners cancels.
+
+CSV rows: obs/{base,instrumented}/<tag>,us_per_iter and an
+obs/overhead/<tag> ratio row; ``benchmarks/run.py --json`` writes the
+same numbers into BENCH_obs.json.
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro import obs
+
+# (sessions, d, m, iters) — the step wall must dwarf per-iter
+# instrumentation (~tens of us) for a 2% gate to be meaningful, so the
+# enforced config is a mid-size sparse problem (~tens of ms per step)
+CONFIGS = [(1024, 100_000, 8, 8)]
+SMOKE_CONFIGS = [(64, 5_000, 2, 4)]
+MAX_OVERHEAD = 1.02
+REPS = 3
+
+
+def _make_step(sessions: int, d: int, m: int):
+    from repro.core.objective import smooth_loss_and_grad
+    from repro.data.sparse import generate_sparse
+    from repro.optim import OWLQNPlus
+
+    train = generate_sparse(
+        num_features=d, num_user_features_range=(max(1, int(0.6 * d)), d),
+        sessions=sessions, seed=3)
+    theta0 = jnp.asarray(
+        0.01 * np.random.default_rng(5).normal(size=(d, 2 * m)), jnp.float32)
+    opt = OWLQNPlus(lambda t: smooth_loss_and_grad(t, train),
+                    lam=0.1, beta=0.1)
+    state0 = opt.init(theta0)
+    step_fn = jax.jit(opt.step)
+    state, stats = step_fn(state0)  # one compile + warm step
+    jax.block_until_ready(state.theta)
+    return step_fn, state0
+
+
+def _drive(step_fn, state0, iters: int, tracer, ledger):
+    """One timed loop mirroring ``OWLQNPlus.run``'s per-iteration
+    instrumentation (span + stats device_get + guarded ledger emit)."""
+    state = state0
+    fs = []
+    t_start = time.perf_counter()
+    for k in range(iters):
+        t0 = time.perf_counter()
+        with tracer.step_span("train/iter", k):
+            state, stats = step_fn(state)
+            st = jax.device_get(stats)
+        if ledger.enabled:
+            ledger.emit(
+                "train_iter", step=k, f=float(st.f), f_new=float(st.f_new),
+                alpha=float(st.alpha), ls_iters=int(st.ls_iters),
+                grad_norm=float(st.grad_norm), nnz=int(st.nnz),
+                wall_s=time.perf_counter() - t0)
+        fs.append(float(st.f_new))
+    wall = time.perf_counter() - t_start
+    return wall, fs
+
+
+def run(smoke: bool | None = None, collect: dict | None = None):
+    if smoke is None:
+        smoke = os.environ.get("REPRO_BENCH_SMOKE", "") == "1"
+    enforce = os.environ.get("REPRO_BENCH_ENFORCE", "") == "1"
+    configs = SMOKE_CONFIGS if smoke else CONFIGS
+    rows = []
+    results: dict = {}
+    if collect is not None:
+        collect["backend"] = jax.default_backend()
+        collect["smoke"] = smoke
+        collect["max_overhead_ratio"] = MAX_OVERHEAD
+        collect["configs"] = results
+
+    ratios = []
+    for sessions, d, m, iters in configs:
+        tag = f"G{sessions}_d{d}_m{m}_i{iters}"
+        step_fn, state0 = _make_step(sessions, d, m)
+        base_wall = instr_wall = float("inf")
+        base_fs = instr_fs = None
+        with tempfile.TemporaryDirectory() as tmp:
+            for rep in range(REPS):  # interleave so drift hits both modes
+                wall, fs = _drive(step_fn, state0, iters,
+                                  obs.NULL_TRACER, obs.NULL_LEDGER)
+                if wall < base_wall:
+                    base_wall, base_fs = wall, fs
+                tracer = obs.Tracer(enabled=True)
+                ledger = obs.RunLedger(f"{tmp}/ledger_{rep}.jsonl")
+                wall, fs = _drive(step_fn, state0, iters, tracer, ledger)
+                ledger.close()
+                if wall < instr_wall:
+                    instr_wall, instr_fs = wall, fs
+        assert base_fs == instr_fs, \
+            f"obs changed the trajectory: {base_fs} != {instr_fs}"
+        ratio = instr_wall / base_wall
+        ratios.append(ratio)
+        rows.append((f"obs/base/{tag}", base_wall * 1e6 / iters,
+                     f"{iters / base_wall:.2f}steps_per_sec"))
+        rows.append((f"obs/instrumented/{tag}", instr_wall * 1e6 / iters,
+                     f"{iters / instr_wall:.2f}steps_per_sec"))
+        rows.append((f"obs/overhead/{tag}", 0.0,
+                     f"{ratio:.4f}x_instr_vs_base"))
+        results[tag] = {
+            "sessions": sessions, "d": d, "m": m, "iters": iters,
+            "base_us_per_iter": base_wall * 1e6 / iters,
+            "instrumented_us_per_iter": instr_wall * 1e6 / iters,
+            "overhead_ratio": ratio,
+            "parity": "ok",
+        }
+
+    emit(rows)
+    if enforce and not smoke:
+        worst = max(ratios)
+        if worst > MAX_OVERHEAD:
+            raise AssertionError(
+                f"obs instrumentation overhead {worst:.4f}x exceeds the "
+                f"{MAX_OVERHEAD}x train-step gate; per-config: "
+                f"{[round(r, 4) for r in ratios]}")
+    return results

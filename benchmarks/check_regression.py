@@ -52,6 +52,10 @@ import sys
 # kinds: exact | higher_better | lower_better | forbidden | info
 RULES: list[tuple[str, str, float]] = [
     (r"(^|\.)error$", "forbidden", 0.0),
+    # provenance stamp (git rev, backend, device/cpu counts, module
+    # wall): self-description, never a gate — must precede the speed
+    # rules or meta.wall_seconds would gate on runner drift
+    (r"(^|\.)meta\.", "info", 0.0),
     # open-loop load rows: latency/throughput gate loosely, the flush
     # mix / occupancy / shed counts follow real service walls -> info
     (r"\.load\..*latency_p\d+_us$", "lower_better", 4.0),
@@ -74,9 +78,15 @@ RULES: list[tuple[str, str, float]] = [
     # quality: seeded, should not move
     (r"(^|\.)auc_\w+$", "higher_better", 0.02),
     (r"(^|\.)calibration_\w+$", "info", 0.0),
+    # obs instrumentation overhead: the real <=2% gate runs in the bench
+    # itself under REPRO_BENCH_ENFORCE; here a loose backstop that only
+    # catches a hot path growing pathologically slow on smoke shapes
+    (r"(^|\.)max_overhead_ratio$", "exact", 0.0),
+    (r"(^|\.)overhead_ratio$", "lower_better", 0.5),
     # speed: loose (shared-runner noise), catches order-of-magnitude only
     (r"(speedup_geomean|speedup)$", "higher_better", 0.5),
     (r"(_us|_seconds)$", "lower_better", 4.0),
+    (r"_us_per_iter$", "lower_better", 4.0),
     (r"(per_sec|steps_per_sec)$", "higher_better", 0.8),
 ]
 DEFAULT_RULE = ("info", 0.0)

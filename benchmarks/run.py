@@ -9,6 +9,7 @@ Prints ``name,us_per_call,derived`` CSV rows:
   * bench_tune            — autotuned configs vs the hand-picked defaults
   * bench_stream          — streaming trainer: overlapped re-planner
   * bench_serve           — serving: pruned artifacts, shared bundles, engine
+  * bench_obs             — observability overhead: instrumented train step
   * roofline_report       — §Roofline rows from the dry-run artifacts
 
 Usage:
@@ -23,9 +24,16 @@ rest. ``--smoke`` asks modules that support it for tiny shapes;
 CI archives as artifacts: ``BENCH_sparse_fused.json`` (kernel
 fwd/bwd timings + speedups), ``BENCH_stream.json`` (streaming
 steps/sec, overlap ratio, overlapped-vs-sync speedup, per-day decay
-table) and ``BENCH_serve.json`` (pruned-vs-full, shared-vs-naive,
-engine latency). The CI smoke steps run ``--only sparse_fused``,
-``--only stream`` and ``--only serve`` with ``--smoke --json`` on CPU.
+table), ``BENCH_serve.json`` (pruned-vs-full, shared-vs-naive,
+engine latency) and ``BENCH_obs.json`` (instrumentation overhead
+ratio). The CI smoke steps run ``--only sparse_fused``, ``--only
+stream``, ``--only serve`` and ``--only obs`` with ``--smoke --json``
+on CPU.
+
+Every ``--json`` artifact also carries a ``meta`` block — git rev,
+backend, device/cpu counts and the module's wall seconds — so an
+archived trajectory is self-describing. ``check_regression.py`` treats
+``meta.*`` as info-only: provenance drift never fails the gate.
 """
 from __future__ import annotations
 
@@ -42,13 +50,39 @@ if "REPRO_DEVICES" in os.environ:  # must precede any jax import: the
 import argparse
 import inspect
 import json
+import subprocess
 import sys
+import time
 import traceback
 
 SPARSE_FUSED_JSON = "BENCH_sparse_fused.json"
 TUNE_JSON = "BENCH_tune.json"
 STREAM_JSON = "BENCH_stream.json"
 SERVE_JSON = "BENCH_serve.json"
+OBS_JSON = "BENCH_obs.json"
+
+
+def _git_rev() -> str:
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"], capture_output=True,
+            text=True, timeout=10, check=True).stdout.strip()
+    except Exception:  # noqa: BLE001 — provenance only, never fail a bench
+        return "unknown"
+
+
+def _meta(wall_seconds: float) -> dict:
+    """Provenance stamped into every BENCH_*.json. Info-only for the
+    regression gate (``check_regression.py`` matches ``meta.*``)."""
+    import jax
+
+    return {
+        "git_rev": _git_rev(),
+        "backend": jax.default_backend(),
+        "device_count": jax.device_count(),
+        "cpu_count": os.cpu_count(),
+        "wall_seconds": wall_seconds,
+    }
 
 
 def _select(mods, only: str):
@@ -81,14 +115,15 @@ def main() -> None:
                     help="tiny shapes where supported (CI)")
     ap.add_argument("--json", action="store_true",
                     help=f"write {SPARSE_FUSED_JSON} / {TUNE_JSON} / "
-                         f"{STREAM_JSON} / {SERVE_JSON} with the "
-                         "machine-readable timings (CI artifacts)")
+                         f"{STREAM_JSON} / {SERVE_JSON} / {OBS_JSON} with "
+                         "the machine-readable timings (CI artifacts)")
     args = ap.parse_args()
 
     from benchmarks import (
         bench_common_feature,
         bench_division,
         bench_lr_vs_lsplm,
+        bench_obs,
         bench_regularization,
         bench_router_balance,
         bench_serve,
@@ -100,11 +135,13 @@ def main() -> None:
 
     mods = [bench_division, bench_regularization, bench_common_feature,
             bench_lr_vs_lsplm, bench_router_balance, bench_sparse_fused,
-            bench_tune, bench_stream, bench_serve, roofline_report]
+            bench_tune, bench_stream, bench_serve, bench_obs,
+            roofline_report]
     json_paths = {bench_sparse_fused: SPARSE_FUSED_JSON,
                   bench_tune: TUNE_JSON,
                   bench_stream: STREAM_JSON,
-                  bench_serve: SERVE_JSON}
+                  bench_serve: SERVE_JSON,
+                  bench_obs: OBS_JSON}
     if args.only:
         mods = _select(mods, args.only)
 
@@ -117,6 +154,7 @@ def main() -> None:
         collect: dict = {}
         if args.json and mod in json_paths:
             kwargs["collect"] = collect
+        t0 = time.perf_counter()
         try:
             mod.run(**kwargs)
         except Exception:  # noqa: BLE001
@@ -126,6 +164,7 @@ def main() -> None:
             if "collect" in kwargs:
                 collect["error"] = traceback.format_exc()
         if "collect" in kwargs:
+            collect["meta"] = _meta(time.perf_counter() - t0)
             # written even when a gate raised (possibly partial, plus the
             # "error" traceback): CI archives the trajectory either way
             # and the regression gate reports WHAT was missing instead of

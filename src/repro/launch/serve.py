@@ -37,6 +37,7 @@ import time
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.io import checkpoint
 from repro.launch.tuning import (
     add_tuning_flags,
@@ -66,7 +67,7 @@ def _trained_theta(args) -> jnp.ndarray:
         if "theta" not in data:
             raise SystemExit(f"--ckpt {args.ckpt!r} has no 'theta' entry")
         theta = jnp.asarray(data["theta"])
-        print(f"loaded theta {theta.shape} from {args.ckpt}")
+        obs.log(f"loaded theta {theta.shape} from {args.ckpt}")
         return theta
 
     from repro.core.objective import smooth_loss_and_grad
@@ -84,9 +85,9 @@ def _trained_theta(args) -> jnp.ndarray:
                     lam=args.lam, beta=args.beta)
     t0 = time.perf_counter()
     theta, trace = opt.run(theta0, max_iters=args.train_iters)
-    print(f"trained {args.train_iters} OWLQN+ iters on d={d:,} in "
-          f"{time.perf_counter() - t0:.1f}s (f={float(trace[-1].f_new):.2f}, "
-          f"nnz={int(trace[-1].nnz):,})")
+    obs.log(f"trained {args.train_iters} OWLQN+ iters on d={d:,} in "
+            f"{time.perf_counter() - t0:.1f}s (f={float(trace[-1].f_new):.2f}, "
+            f"nnz={int(trace[-1].nnz):,})")
     return theta
 
 
@@ -120,20 +121,29 @@ def main() -> int:
                     help="admission control: shed load past this backlog")
     ap.add_argument("--seed", type=int, default=0)
     add_tuning_flags(ap)
+    obs.add_flags(ap)
     args = ap.parse_args()
     apply_tuning_flags(args)  # value check up front; geometry check below
 
+    session = obs.configure_from_args(args, driver="repro.launch.serve")
+    try:
+        return _serve(args)
+    finally:
+        session.close()
+
+
+def _serve(args) -> int:
     theta = _trained_theta(args)
     d = theta.shape[0]
 
     art = compress(theta)
     full_mb = theta.size * 4 / 2**20
     art_mb = (art.theta.size + art.remap.size + art.alive_ids.size) * 4 / 2**20
-    print(f"pruned: {art.num_alive:,}/{d:,} rows alive "
-          f"({art.compression:.2%}); ship {art_mb:.2f} MiB vs "
-          f"{full_mb:.2f} MiB full")
+    obs.log(f"pruned: {art.num_alive:,}/{d:,} rows alive "
+            f"({art.compression:.2%}); ship {art_mb:.2f} MiB vs "
+            f"{full_mb:.2f} MiB full")
     if args.artifact:
-        print(f"artifact -> {save_artifact(args.artifact, art)}")
+        obs.log(f"artifact -> {save_artifact(args.artifact, art)}")
 
     # pruned-vs-full parity probe (bit-identical on the sparse path)
     rng = np.random.default_rng(args.seed + 7)
@@ -142,7 +152,7 @@ def main() -> int:
     np.testing.assert_array_equal(
         np.asarray(score_sparse(as_model(theta), ids, vals)),
         np.asarray(score_sparse(art, ids, vals)))
-    print("parity: pruned scoring bit-identical to full Theta (512 probes)")
+    obs.log("parity: pruned scoring bit-identical to full Theta (512 probes)")
 
     model = art
     if args.int8:
@@ -155,10 +165,10 @@ def main() -> int:
             np.asarray(score_sparse(model, ids, vals))
             - np.asarray(score_sparse(art, ids, vals))).max())
         assert dp <= 1e-2, f"int8 moved p by {dp:.2e} (> 1e-2)"
-        print(f"int8: rows payload {q.codes.size + q.scales.size * 4:,} B vs "
-              f"{art.theta.size * 4:,} B fp32 "
-              f"({art.theta.size * 4 / (q.codes.size + q.scales.size * 4):.1f}x"
-              f" smaller); round-tripped save/load; max |dp| = {dp:.1e}")
+        obs.log(f"int8: rows payload {q.codes.size + q.scales.size * 4:,} B "
+                f"vs {art.theta.size * 4:,} B fp32 "
+                f"({art.theta.size * 4 / (q.codes.size + q.scales.size * 4):.1f}x"
+                f" smaller); round-tripped save/load; max |dp| = {dp:.1e}")
 
     engine = ScoringEngine(model)
     requests = synthetic_requests(args.requests, num_features=d,
@@ -188,12 +198,12 @@ def main() -> int:
     s = engine.stats
     assert s.compiles == warm_compiles, \
         f"steady state recompiled: {s.compiles} != {warm_compiles}"
-    print(f"engine: {s.requests} requests / {s.candidates} candidates over "
-          f"{len(s.bucket_hits)} buckets; {s.compiles} compiles "
-          f"({s.compile_seconds:.2f}s, all in warmup), steady state "
-          f"0 recompiles; single-vs-batched scores bit-identical; "
-          f"{s.latency_us:.0f} us/request, {s.candidates_per_sec:,.0f} ads/s, "
-          f"batched occupancy {s.occupancy:.2f}")
+    obs.log(f"engine: {s.requests} requests / {s.candidates} candidates "
+            f"over {len(s.bucket_hits)} buckets; {s.compiles} compiles "
+            f"({s.compile_seconds:.2f}s, all in warmup), steady state "
+            f"0 recompiles; single-vs-batched scores bit-identical; "
+            f"{s.latency_us:.0f} us/request, {s.candidates_per_sec:,.0f} ads/s, "
+            f"batched occupancy {s.occupancy:.2f}")
 
     if args.load_qps:
         cfg = QueueConfig(max_batch=args.max_batch,
@@ -205,17 +215,17 @@ def main() -> int:
                                    seed=args.seed + 2)
             assert engine.stats.compiles == before, \
                 "queue replay recompiled in steady state"
-            print(f"load {qps:,.0f} qps offered: "
-                  f"p50 {rep['latency_p50_us']:,.0f} us, "
-                  f"p99 {rep['latency_p99_us']:,.0f} us, "
-                  f"achieved {rep['achieved_qps']:,.0f} qps, "
-                  f"{rep['candidates_per_sec']:,.0f} ads/s, "
-                  f"occupancy {rep['occupancy']:.2f}, "
-                  f"{rep['dispatches']} dispatches "
-                  f"({rep['flushes']['full']} full / "
-                  f"{rep['flushes']['deadline']} deadline / "
-                  f"{rep['flushes']['drain']} drain), "
-                  f"rejected {rep['rejected']}")
+            obs.log(f"load {qps:,.0f} qps offered: "
+                    f"p50 {rep['latency_p50_us']:,.0f} us, "
+                    f"p99 {rep['latency_p99_us']:,.0f} us, "
+                    f"achieved {rep['achieved_qps']:,.0f} qps, "
+                    f"{rep['candidates_per_sec']:,.0f} ads/s, "
+                    f"occupancy {rep['occupancy']:.2f}, "
+                    f"{rep['dispatches']} dispatches "
+                    f"({rep['flushes']['full']} full / "
+                    f"{rep['flushes']['deadline']} deadline / "
+                    f"{rep['flushes']['drain']} drain), "
+                    f"rejected {rep['rejected']}")
     return 0
 
 

@@ -43,6 +43,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core import predict_proba
 from repro.core.lsplm import params_from_theta
 from repro.core.objective import smooth_loss_and_grad
@@ -97,12 +98,12 @@ def train_sparse(args) -> int:
                          (train.ad_ids.shape[0], ka, d, m)])
     kern = ("pipelined block-DMA kernel" if jax.default_backend() == "tpu"
             else "scan-chunked jnp fallback")
-    print(f"sparse mode: d={d:,} columns, Theta {theta0.shape} "
-          f"({theta0.size:,} params), backend={jax.default_backend()} ({kern})")
+    obs.log(f"sparse mode: d={d:,} columns, Theta {theta0.shape} "
+            f"({theta0.size:,} params), backend={jax.default_backend()} ({kern})")
     for side, plan in (("user", train.user_plan), ("ad", train.ad_plan)):
-        print(f"  {side} transpose plan: {plan.num_kept:,} entries, "
-              f"{plan.num_unique:,} unique ids, "
-              f"{len(plan.class_width)} popularity classes")
+        obs.log(f"  {side} transpose plan: {plan.num_kept:,} entries, "
+                f"{plan.num_unique:,} unique ids, "
+                f"{len(plan.class_width)} popularity classes")
 
     part = None
     if distributed:
@@ -127,34 +128,39 @@ def train_sparse(args) -> int:
                         lam=args.lam, beta=args.beta)
         state = shard_state(opt.init(part.pad_rows(theta0)), mesh)
         step = make_distributed_step(opt, mesh)
-        print(f"mesh: data={args.mesh_data} x model={args.mesh_model} "
-              f"(PS mapping: workers x servers); Theta rows id-range "
-              f"sharded, {part.rows_per_shard:,} rows/shard, routed "
-              f"K user={sbatch.user_ids.shape[-1]} "
-              f"ad={sbatch.ad_ids.shape[-1]}")
+        obs.log(f"mesh: data={args.mesh_data} x model={args.mesh_model} "
+                f"(PS mapping: workers x servers); Theta rows id-range "
+                f"sharded, {part.rows_per_shard:,} rows/shard, routed "
+                f"K user={sbatch.user_ids.shape[-1]} "
+                f"ad={sbatch.ad_ids.shape[-1]}")
     else:
         opt = OWLQNPlus(lambda t: smooth_loss_and_grad(t, train),
                         lam=args.lam, beta=args.beta)
         state = opt.init(theta0)
         step = jax.jit(opt.step)
 
+    tracer = obs.get_tracer()
     for k in range(args.iters):
         t0 = time.perf_counter()
-        state, stats = step(state)
+        with tracer.step_span("train/iter", k):
+            state, stats = step(state)
         dt = time.perf_counter() - t0
         if k % 5 == 0 or k == args.iters - 1:
             theta_eval = state.theta if part is None else part.unpad_rows(
                 jnp.asarray(jax.device_get(state.theta)))
             p = np.asarray(sparse_predict(theta_eval, test))
             a = auc_fn(np.asarray(test.y), p)
-            print(f"iter {k:3d}  f={float(stats.f_new):12.2f} "
-                  f"alpha={float(stats.alpha):.3g} nnz={int(stats.nnz):8d} "
-                  f"test_auc={a:.4f}  ({dt * 1e3:.0f} ms/iter)")
+            st = jax.device_get(stats)
+            rec = dict(step=k, f=float(st.f), f_new=float(st.f_new),
+                       alpha=float(st.alpha), ls_iters=int(st.ls_iters),
+                       grad_norm=float(st.grad_norm), nnz=int(st.nnz),
+                       test_auc=float(a), wall_s=dt)
+            obs.log(obs.render_train_iter(rec), kind="train_iter", **rec)
     if args.ckpt:
         theta = state.theta if part is None else part.unpad_rows(
             jnp.asarray(jax.device_get(state.theta)))
         checkpoint.save(args.ckpt, {"theta": theta})
-        print(f"checkpoint -> {args.ckpt}")
+        obs.log(f"checkpoint -> {args.ckpt}")
     return 0
 
 
@@ -203,20 +209,22 @@ def train_stream(args) -> int:
         stream, lam=args.lam, beta=args.beta, window=args.window,
         inner_iters=args.inner_iters, history=args.history, mesh=mesh,
         overlap=not args.sync_planner)
-    print(f"stream: {args.days} days x {args.sessions} sessions, d={d:,}, "
-          f"window={args.window}, {args.inner_iters} inner iters/window, "
-          f"history={args.history}, planner="
-          f"{'synchronous' if args.sync_planner else 'overlapped'}"
-          + (f", mesh data={args.mesh_data} x model={args.mesh_model}"
-             if mesh is not None else ""))
+    obs.log(f"stream: {args.days} days x {args.sessions} sessions, d={d:,}, "
+            f"window={args.window}, {args.inner_iters} inner iters/window, "
+            f"history={args.history}, planner="
+            f"{'synchronous' if args.sync_planner else 'overlapped'}"
+            + (f", mesh data={args.mesh_data} x model={args.mesh_model}"
+               if mesh is not None else ""))
 
     if args.resume and ckpt and os.path.exists(ckpt):
         state = trainer.load(ckpt, theta0)
-        print(f"resumed from {ckpt} at day {state.day}")
+        obs.log(f"resumed from {ckpt} at day {state.day}")
     else:
         state = trainer.init(theta0)
 
     def cb(t, ws, st):
+        # the structured twin of this line is the trainer's own
+        # stream_window record; the held-out eval is the driver's
         msg = (f"day {t:3d}  window={ws.days_in_window}d "
                f"f={ws.fs[-1]:12.2f} alpha={ws.alpha:.3g} "
                f"nnz={ws.nnz:8d} plan={ws.build_seconds * 1e3:6.0f}ms "
@@ -228,7 +236,10 @@ def train_stream(args) -> int:
             a = auc_fn(np.asarray(nxt.y),
                        np.asarray(sparse_predict(theta, nxt)))
             msg += f"  next-day nll={nll:.4f} auc={a:.4f}"
-        print(msg)
+            obs.log(msg, kind="stream_eval", day=t, next_day_nll=nll,
+                    next_day_auc=float(a))
+        else:
+            obs.log(msg)
         if ckpt:  # every window is a resumable checkpoint
             trainer.save(ckpt, st)
 
@@ -237,11 +248,75 @@ def train_stream(args) -> int:
     state, _trace = trainer.run(state, callback=cb)
     dt = time.perf_counter() - t0
     ps = trainer.planner_stats
-    print(f"trained {days_left} windows in {dt:.1f}s; planner: "
-          f"{ps.build_seconds:.2f}s host build, {ps.wait_seconds:.2f}s "
-          f"exposed, overlap ratio {ps.overlap_ratio:.2f}")
+    obs.log(f"trained {days_left} windows in {dt:.1f}s; planner: "
+            f"{ps.build_seconds:.2f}s host build, {ps.wait_seconds:.2f}s "
+            f"exposed, overlap ratio {ps.overlap_ratio:.2f}")
     if ckpt:
-        print(f"stream checkpoint -> {ckpt} (resume with --resume)")
+        obs.log(f"stream checkpoint -> {ckpt} (resume with --resume)")
+    return 0
+
+
+def train_dense(args) -> int:
+    """Dense-matrix training on the common-feature objective (the
+    original small-d path; the default when neither --sparse nor
+    --stream is given)."""
+    cfg = CTRDataConfig(
+        num_user_features=args.user_features, num_ad_features=args.ad_features,
+        noise_features=args.noise_features, seed=args.seed,
+    )
+    train_cf, _ = generate(cfg, args.sessions, seed=1)
+    test_cf, _ = generate(cfg, max(args.sessions // 5, 64), seed=2)
+    d, m = cfg.num_features, args.regions
+    theta0 = jnp.asarray(
+        0.01 * np.random.default_rng(args.seed).normal(size=(d, 2 * m)),
+        jnp.float32)
+
+    distributed = args.mesh_data > 0 and args.mesh_model > 0
+    if distributed:
+        assert jax.device_count() >= args.mesh_data * args.mesh_model, (
+            f"need {args.mesh_data * args.mesh_model} devices, "
+            f"have {jax.device_count()} (set REPRO_DEVICES)")
+        mesh = make_debug_mesh(data=args.mesh_data, model=args.mesh_model)
+        batch = pad_to_multiple(train_cf, args.mesh_data)
+        batch = shard_batch(mesh, jax.tree.map(jnp.asarray, batch),
+                            common_feature=True)
+        opt = OWLQNPlus(
+            lambda t: smooth_loss_and_grad(t, batch, common_feature=True),
+            lam=args.lam, beta=args.beta)
+        state = shard_state(opt.init(theta0), mesh)
+        step = make_distributed_step(opt, mesh)
+        obs.log(f"mesh: data={args.mesh_data} x model={args.mesh_model} "
+                f"(PS mapping: workers x servers)")
+    else:
+        batch = jax.tree.map(jnp.asarray, pad_to_multiple(train_cf, 1))
+        opt = OWLQNPlus(
+            lambda t: smooth_loss_and_grad(t, batch, common_feature=True),
+            lam=args.lam, beta=args.beta)
+        state = opt.init(theta0)
+        step = jax.jit(opt.step)
+
+    test_dense = to_dense_batch(test_cf)
+    xs_test = jnp.asarray(test_dense.x)
+    tracer = obs.get_tracer()
+    for k in range(args.iters):
+        t0 = time.perf_counter()
+        with tracer.step_span("train/iter", k):
+            state, stats = step(state)
+        dt = time.perf_counter() - t0
+        if k % 5 == 0 or k == args.iters - 1:
+            theta_host = jax.device_get(state.theta)
+            p = predict_proba(params_from_theta(jnp.asarray(theta_host)), xs_test)
+            a = auc(test_dense.y, np.asarray(p))
+            st = jax.device_get(stats)
+            rec = dict(step=k, f=float(st.f), f_new=float(st.f_new),
+                       alpha=float(st.alpha), ls_iters=int(st.ls_iters),
+                       grad_norm=float(st.grad_norm), nnz=int(st.nnz),
+                       test_auc=float(a), wall_s=dt)
+            obs.log(obs.render_train_iter(rec, nnz_width=7),
+                    kind="train_iter", **rec)
+    if args.ckpt:
+        checkpoint.save(args.ckpt, {"theta": state.theta})
+        obs.log(f"checkpoint -> {args.ckpt}")
     return 0
 
 
@@ -285,6 +360,7 @@ def main():
     ap.add_argument("--resume", action="store_true",
                     help="--stream: resume from --ckpt if it exists")
     add_tuning_flags(ap)
+    obs.add_flags(ap)
     args = ap.parse_args()
 
     if tuning_flags_set(args) and not (args.sparse or args.stream):
@@ -292,63 +368,17 @@ def main():
             "--block-n/--block-k/--chunk/--tune steer the sparse kernels; "
             "combine them with --sparse or --stream (the dense path has "
             "no tunable block sizes)")
-    if args.stream:
-        return train_stream(args)
-    if args.sparse:
-        return train_sparse(args)
-
-    cfg = CTRDataConfig(
-        num_user_features=args.user_features, num_ad_features=args.ad_features,
-        noise_features=args.noise_features, seed=args.seed,
-    )
-    train_cf, _ = generate(cfg, args.sessions, seed=1)
-    test_cf, _ = generate(cfg, max(args.sessions // 5, 64), seed=2)
-    d, m = cfg.num_features, args.regions
-    theta0 = jnp.asarray(
-        0.01 * np.random.default_rng(args.seed).normal(size=(d, 2 * m)),
-        jnp.float32)
-
-    distributed = args.mesh_data > 0 and args.mesh_model > 0
-    if distributed:
-        assert jax.device_count() >= args.mesh_data * args.mesh_model, (
-            f"need {args.mesh_data * args.mesh_model} devices, "
-            f"have {jax.device_count()} (set REPRO_DEVICES)")
-        mesh = make_debug_mesh(data=args.mesh_data, model=args.mesh_model)
-        batch = pad_to_multiple(train_cf, args.mesh_data)
-        batch = shard_batch(mesh, jax.tree.map(jnp.asarray, batch),
-                            common_feature=True)
-        opt = OWLQNPlus(
-            lambda t: smooth_loss_and_grad(t, batch, common_feature=True),
-            lam=args.lam, beta=args.beta)
-        state = shard_state(opt.init(theta0), mesh)
-        step = make_distributed_step(opt, mesh)
-        print(f"mesh: data={args.mesh_data} x model={args.mesh_model} "
-              f"(PS mapping: workers x servers)")
-    else:
-        batch = jax.tree.map(jnp.asarray, pad_to_multiple(train_cf, 1))
-        opt = OWLQNPlus(
-            lambda t: smooth_loss_and_grad(t, batch, common_feature=True),
-            lam=args.lam, beta=args.beta)
-        state = opt.init(theta0)
-        step = jax.jit(opt.step)
-
-    test_dense = to_dense_batch(test_cf)
-    xs_test = jnp.asarray(test_dense.x)
-    for k in range(args.iters):
-        t0 = time.perf_counter()
-        state, stats = step(state)
-        dt = time.perf_counter() - t0
-        if k % 5 == 0 or k == args.iters - 1:
-            theta_host = jax.device_get(state.theta)
-            p = predict_proba(params_from_theta(jnp.asarray(theta_host)), xs_test)
-            a = auc(test_dense.y, np.asarray(p))
-            print(f"iter {k:3d}  f={float(stats.f_new):12.2f} "
-                  f"alpha={float(stats.alpha):.3g} nnz={int(stats.nnz):7d} "
-                  f"test_auc={a:.4f}  ({dt * 1e3:.0f} ms/iter)")
-    if args.ckpt:
-        checkpoint.save(args.ckpt, {"theta": state.theta})
-        print(f"checkpoint -> {args.ckpt}")
-    return 0
+    mode = "stream" if args.stream else "sparse" if args.sparse else "dense"
+    session = obs.configure_from_args(args, driver="repro.launch.train",
+                                      mode=mode)
+    try:
+        if args.stream:
+            return train_stream(args)
+        if args.sparse:
+            return train_sparse(args)
+        return train_dense(args)
+    finally:
+        session.close()
 
 
 if __name__ == "__main__":

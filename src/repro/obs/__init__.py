@@ -1,0 +1,169 @@
+"""Unified observability layer: metrics registry, span tracing, run ledger.
+
+Three primitives, one configuration point:
+
+  * :mod:`repro.obs.metrics` — process-wide thread-safe registry of
+    counters/gauges/histograms; the subsystem stats classes
+    (``PlannerStats``/``EngineStats``/``QueueStats``) are views over it.
+  * :mod:`repro.obs.trace` — nesting, thread-safe context-manager spans
+    exported as Chrome-trace/Perfetto JSON; optionally mirrored into
+    ``jax.profiler`` annotations.
+  * :mod:`repro.obs.ledger` — append-only JSONL run ledger of typed
+    event records (per optimizer iteration, stream window, serve
+    dispatch) that the launch drivers render human-readable lines from.
+
+Everything is DISABLED by default (null tracer, null ledger, an idle
+registry) so library code pays ~nothing when a driver doesn't ask for
+output. Drivers call :func:`configure` with their ``--metrics-out``/
+``--trace-out``/``--ledger-out`` flags and close the returned session
+when done::
+
+    obs = repro.obs.configure(metrics_out=args.metrics_out,
+                              trace_out=args.trace_out,
+                              ledger_out=args.ledger_out,
+                              meta={"driver": "repro.launch.train"})
+    try:
+        ...
+    finally:
+        obs.close()   # snapshots metrics/trace, closes the ledger
+"""
+from __future__ import annotations
+
+from .ledger import (  # noqa: F401
+    NULL_LEDGER,
+    NullLedger,
+    RunLedger,
+    SCHEMA,
+    get_ledger,
+    log,
+    read_jsonl,
+    render_stream_day,
+    render_train_iter,
+    set_ledger,
+    validate_event,
+    validate_events,
+    validate_file,
+)
+from .metrics import (  # noqa: F401
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+    get_registry,
+    next_instance,
+    set_registry,
+)
+from .trace import (  # noqa: F401
+    NULL_SPAN,
+    NULL_TRACER,
+    Tracer,
+    get_tracer,
+    set_tracer,
+)
+
+
+class ObsSession:
+    """A configured observability scope: owns the enabled tracer/ledger
+    it installed as process defaults and knows where to write snapshots.
+
+    ``close()`` writes the metrics/trace files (if requested), closes
+    the ledger file, and restores the previous process defaults —
+    idempotent, safe in a ``finally``.
+    """
+
+    def __init__(self, *, metrics_out=None, trace_out=None,
+                 ledger_out=None, registry=None, tracer=None, ledger=None,
+                 prev_tracer=None, prev_ledger=None):
+        self.metrics_out = metrics_out
+        self.trace_out = trace_out
+        self.ledger_out = ledger_out
+        self.registry = registry if registry is not None else get_registry()
+        self.tracer = tracer if tracer is not None else get_tracer()
+        self.ledger = ledger if ledger is not None else get_ledger()
+        self._prev_tracer = prev_tracer
+        self._prev_ledger = prev_ledger
+        self._closed = False
+
+    def close(self) -> None:
+        if self._closed:
+            return
+        self._closed = True
+        if self.metrics_out:
+            self.registry.write(self.metrics_out)
+        if self.trace_out:
+            self.tracer.write(self.trace_out)
+        self.ledger.close()
+        if self._prev_tracer is not None:
+            set_tracer(self._prev_tracer)
+        if self._prev_ledger is not None:
+            set_ledger(self._prev_ledger)
+
+    def __enter__(self) -> "ObsSession":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+def configure(*, metrics_out: str | None = None, trace_out: str | None = None,
+              ledger_out: str | None = None, trace_annotate: bool = False,
+              meta: dict | None = None) -> ObsSession:
+    """Install enabled process defaults for whichever outputs the driver
+    asked for and return the owning :class:`ObsSession`.
+
+    A tracer is enabled only when ``trace_out`` is given; a file-backed
+    ledger only when ``ledger_out`` is. When ``meta`` is given (and a
+    ledger is active) it is emitted as the leading ``run_meta`` record.
+    With no arguments this is a no-op session over the null defaults.
+    """
+    prev_tracer = prev_ledger = None
+    tracer = get_tracer()
+    ledger = get_ledger()
+    if trace_out:
+        tracer = Tracer(enabled=True, annotate=trace_annotate)
+        prev_tracer = set_tracer(tracer)
+    if ledger_out:
+        ledger = RunLedger(ledger_out)
+        prev_ledger = set_ledger(ledger)
+        if meta:
+            ledger.emit("run_meta", **meta)
+    return ObsSession(metrics_out=metrics_out, trace_out=trace_out,
+                      ledger_out=ledger_out, registry=get_registry(),
+                      tracer=tracer, ledger=ledger,
+                      prev_tracer=prev_tracer, prev_ledger=prev_ledger)
+
+
+def add_flags(parser) -> None:
+    """The launch drivers' shared observability flags."""
+    parser.add_argument("--metrics-out", default=None, metavar="PATH",
+                        help="write a metrics-registry snapshot on exit "
+                             "(.jsonl = one series per line, else JSON)")
+    parser.add_argument("--trace-out", default=None, metavar="PATH",
+                        help="record spans and write Chrome-trace JSON on "
+                             "exit (open in chrome://tracing or Perfetto)")
+    parser.add_argument("--ledger-out", default=None, metavar="PATH",
+                        help="append typed run-ledger records (JSONL): "
+                             "per-iteration, per-window, per-dispatch")
+    parser.add_argument("--trace-annotate", action="store_true",
+                        help="with --trace-out: mirror spans into "
+                             "jax.profiler annotations so an active "
+                             "profiler trace shows them on the device "
+                             "timeline")
+
+
+def configure_from_args(args, *, driver: str, mode: str | None = None,
+                        ) -> ObsSession:
+    """:func:`configure` from parsed :func:`add_flags` arguments, with a
+    ``run_meta`` record carrying the jax backend/device context."""
+    import sys
+
+    import jax
+
+    meta: dict = {"driver": driver, "backend": jax.default_backend(),
+                  "device_count": jax.device_count(),
+                  "argv": list(sys.argv[1:])}
+    if mode is not None:
+        meta["mode"] = mode
+    return configure(metrics_out=args.metrics_out, trace_out=args.trace_out,
+                     ledger_out=args.ledger_out,
+                     trace_annotate=args.trace_annotate, meta=meta)

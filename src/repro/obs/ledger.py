@@ -1,0 +1,330 @@
+"""Append-only structured run ledger: typed JSONL event records.
+
+Every run of the training/streaming/serving stack can write one JSONL
+file (``--ledger-out``) whose lines are typed event records — the
+machine-readable twin of the drivers' human log lines:
+
+  * ``train_iter``     one OWLQN+ iteration: objective before/after,
+                       accepted step, direction norm (the Eq. 4
+                       optimality measure), non-zero parameter count —
+                       the paper's Fig. 5/6 convergence-vs-sparsity
+                       curves replayed straight from the file;
+  * ``stream_window``  one streaming window: plan/compile/total build
+                       walls, exposed wait, prefetched flag, device
+                       step wall, carry policy — the planner's overlap
+                       ratio reconstructs from these records exactly;
+  * ``stream_summary`` the planner's end-of-run overlap accounting;
+  * ``serve_dispatch`` one engine dispatch: envelope key, group size,
+                       occupancy, queue delay, measured wall, flush
+                       reason;
+  * ``run_meta`` / ``stream_eval`` / ``log``  driver context, held-out
+                       per-day quality, and free-text lines that keep
+                       their human-readable rendering.
+
+Records validate against :data:`SCHEMA` on emit (cheap dict checks) and
+again offline: ``python -m repro.obs.ledger --check run.jsonl`` is the
+CI smoke gate over archived ledgers. Unknown EXTRA fields are allowed
+(forward compatibility); unknown KINDS, missing required fields and
+type mismatches are errors.
+
+The human lines the drivers print are renderers over these records
+(:func:`render_train_iter`, :func:`render_stream_day`) or, for one-off
+lines, ``log(text, ...)`` which emits a record carrying the exact text
+it prints — structure and stable output from one call.
+
+Disabled fast path: the module default is :data:`NULL_LEDGER`
+(``enabled=False``, ``emit`` returns immediately); instrumented code
+guards record construction behind ``ledger.enabled`` so an
+un-configured run pays a single attribute load per would-be event.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import threading
+import time
+from typing import Any, Callable, Iterator
+
+_NUM = (int, float)
+
+# kind -> {"required": {field: type(s)}, "optional": {field: type(s)}}.
+# "text" (str) is implicitly optional on every kind: any record may
+# carry the human line it rendered to.
+SCHEMA: dict[str, dict[str, dict[str, Any]]] = {
+    "run_meta": {
+        "required": {"driver": str},
+        "optional": {"mode": str, "backend": str, "device_count": int,
+                     "argv": list},
+    },
+    "log": {
+        "required": {"text": str},
+        "optional": {},
+    },
+    "train_iter": {
+        "required": {"step": int, "f": _NUM, "f_new": _NUM, "alpha": _NUM,
+                     "grad_norm": _NUM, "nnz": int},
+        "optional": {"ls_iters": int, "wall_s": _NUM, "day": int,
+                     "window_iter": int, "test_auc": _NUM},
+    },
+    "stream_window": {
+        "required": {"day": int, "days_in_window": int, "plan_s": _NUM,
+                     "compile_s": _NUM, "build_s": _NUM, "wait_s": _NUM,
+                     "prefetched": bool, "step_s": _NUM, "carry": str,
+                     "alpha": _NUM, "nnz": int, "fs": list},
+        "optional": {},
+    },
+    "stream_summary": {
+        "required": {"windows": int, "build_seconds": _NUM,
+                     "wait_seconds": _NUM, "prefetched_build_seconds": _NUM,
+                     "prefetched_wait_seconds": _NUM, "overlap_ratio": _NUM},
+        "optional": {},
+    },
+    "stream_eval": {
+        "required": {"day": int},
+        "optional": {"next_day_nll": _NUM, "next_day_auc": _NUM},
+    },
+    "serve_dispatch": {
+        "required": {"envelope": list, "g": int, "requests": int,
+                     "candidates": int, "occupancy": _NUM, "wall_s": _NUM,
+                     "flush_reason": str, "queue_delay_us": _NUM},
+        "optional": {},
+    },
+}
+
+
+def validate_event(event: Any) -> str | None:
+    """One record's schema error string, or None when it validates."""
+    if not isinstance(event, dict):
+        return f"record is not an object: {event!r}"
+    kind = event.get("kind")
+    if kind not in SCHEMA:
+        return f"unknown kind {kind!r} (known: {sorted(SCHEMA)})"
+    spec = SCHEMA[kind]
+    for field, typ in spec["required"].items():
+        if field not in event:
+            return f"{kind}: missing required field {field!r}"
+        if not _type_ok(event[field], typ):
+            return (f"{kind}.{field}: expected {_type_name(typ)}, "
+                    f"got {type(event[field]).__name__}")
+    for field, typ in spec["optional"].items():
+        if field in event and not _type_ok(event[field], typ):
+            return (f"{kind}.{field}: expected {_type_name(typ)}, "
+                    f"got {type(event[field]).__name__}")
+    if "text" in event and not isinstance(event["text"], str):
+        return f"{kind}.text: expected str, got {type(event['text']).__name__}"
+    if "t" in event and not isinstance(event["t"], float):
+        return f"{kind}.t: expected float timestamp"
+    return None
+
+
+def _type_ok(value: Any, typ: Any) -> bool:
+    if typ is bool:
+        return isinstance(value, bool)
+    if isinstance(value, bool):  # bool is an int subclass; keep kinds apart
+        return False
+    return isinstance(value, typ)
+
+
+def _type_name(typ: Any) -> str:
+    if isinstance(typ, tuple):
+        return "/".join(t.__name__ for t in typ)
+    return typ.__name__
+
+
+class RunLedger:
+    """Append-only event sink: in-memory list + optional JSONL file.
+
+    ``emit`` validates (raise on schema violation — a malformed record
+    is a bug at the emit site, not something to discover in CI), stamps
+    ``t`` (unix seconds) and ``kind``, appends, and — when ``path`` is
+    given — writes one JSON line immediately (line-buffered, so a
+    crashed run still leaves a readable prefix). Thread-safe: planner
+    threads and the main thread may emit concurrently.
+    """
+
+    enabled = True
+
+    def __init__(self, path: str | None = None, *, keep: bool = True,
+                 validate: bool = True):
+        self.path = path
+        self._keep = keep
+        self._validate = validate
+        self._lock = threading.Lock()
+        self._events: list[dict] = []
+        self._fh = None
+        if path:
+            parent = os.path.dirname(path)
+            if parent:
+                os.makedirs(parent, exist_ok=True)
+            self._fh = open(path, "w", buffering=1)
+
+    def emit(self, kind: str, **fields) -> dict:
+        event = {"kind": kind, "t": time.time(), **fields}
+        if self._validate:
+            err = validate_event(event)
+            if err is not None:
+                raise ValueError(f"invalid ledger record: {err}")
+        with self._lock:
+            if self._keep:
+                self._events.append(event)
+            if self._fh is not None:
+                self._fh.write(json.dumps(event, sort_keys=True) + "\n")
+        return event
+
+    def events(self, kind: str | None = None) -> list[dict]:
+        with self._lock:
+            evs = list(self._events)
+        if kind is None:
+            return evs
+        return [e for e in evs if e.get("kind") == kind]
+
+    def close(self) -> None:
+        with self._lock:
+            if self._fh is not None:
+                self._fh.close()
+                self._fh = None
+
+    def __enter__(self) -> "RunLedger":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+class NullLedger:
+    """The disabled default: ``emit`` is one early return."""
+
+    enabled = False
+    path = None
+
+    def emit(self, kind: str, **fields) -> None:
+        return None
+
+    def events(self, kind: str | None = None) -> list[dict]:
+        return []
+
+    def close(self) -> None:
+        return None
+
+
+NULL_LEDGER = NullLedger()
+_DEFAULT: RunLedger | NullLedger = NULL_LEDGER
+
+
+def get_ledger() -> RunLedger | NullLedger:
+    """The process default ledger — :data:`NULL_LEDGER` until a driver
+    configures ``--ledger-out`` (see ``repro.obs.configure``)."""
+    return _DEFAULT
+
+
+def set_ledger(ledger: RunLedger | NullLedger) -> RunLedger | NullLedger:
+    """Swap the process default ledger; returns the previous one."""
+    global _DEFAULT
+    prev, _DEFAULT = _DEFAULT, ledger
+    return prev
+
+
+def log(text: str, *, kind: str = "log", ledger=None,
+        printer: Callable[[str], None] = print, **fields) -> None:
+    """Structured logging: emit ``kind`` (with the rendered ``text`` and
+    any structured ``fields``) to the run ledger AND print the exact
+    same human line — the drivers' replacement for free-form print()."""
+    led = ledger if ledger is not None else _DEFAULT
+    if led.enabled:
+        led.emit(kind, text=text, **fields)
+    printer(text)
+
+
+# ------------------------------------------------------------- renderers
+def render_train_iter(rec: dict, *, nnz_width: int = 8) -> str:
+    """The training drivers' per-iteration line, rendered from a
+    ``train_iter`` record (``test_auc``/``wall_s`` included if present)."""
+    out = (f"iter {rec['step']:3d}  f={rec['f_new']:12.2f} "
+           f"alpha={rec['alpha']:.3g} nnz={rec['nnz']:{nnz_width}d}")
+    if "test_auc" in rec:
+        out += f" test_auc={rec['test_auc']:.4f} "
+    if "wall_s" in rec:
+        out += f" ({rec['wall_s'] * 1e3:.0f} ms/iter)"
+    return out
+
+
+def render_stream_day(rec: dict) -> str:
+    """``launch/train --stream``'s per-day line from a ``stream_window``
+    record (the held-out next-day suffix is the driver's own
+    ``stream_eval`` record)."""
+    return (f"day {rec['day']:3d}  window={rec['days_in_window']}d "
+            f"f={rec['fs'][-1]:12.2f} alpha={rec['alpha']:.3g} "
+            f"nnz={rec['nnz']:8d} plan={rec['build_s'] * 1e3:6.0f}ms "
+            f"step={rec['step_s'] * 1e3:6.0f}ms")
+
+
+# ----------------------------------------------------- offline validation
+def read_jsonl(path: str) -> list[dict]:
+    """Parse a ledger file back into records (raises on malformed JSON)."""
+    out = []
+    with open(path) as f:
+        for i, line in enumerate(f):
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                out.append(json.loads(line))
+            except json.JSONDecodeError as e:
+                raise ValueError(f"{path}:{i + 1}: not JSON: {e}") from e
+    return out
+
+
+def validate_events(events: Iterator[dict]) -> list[str]:
+    """Schema errors over a record stream (empty list == valid)."""
+    errors = []
+    for i, ev in enumerate(events):
+        err = validate_event(ev)
+        if err is not None:
+            errors.append(f"record {i}: {err}")
+    return errors
+
+
+def validate_file(path: str) -> list[str]:
+    try:
+        events = read_jsonl(path)
+    except (OSError, ValueError) as e:
+        return [str(e)]
+    errs = validate_events(events)
+    if not events:
+        errs.append(f"{path}: empty ledger (no records)")
+    return errs
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="validate run-ledger JSONL files against the typed "
+                    "event schema (the CI obs smoke gate)")
+    ap.add_argument("paths", nargs="+", help="ledger .jsonl file(s)")
+    ap.add_argument("--check", action="store_true",
+                    help="accepted for symmetry; validation is the only "
+                         "mode")
+    args = ap.parse_args(argv)
+    rc = 0
+    for path in args.paths:
+        errors = validate_file(path)
+        if errors:
+            rc = 1
+            for err in errors[:20]:
+                print(f"FAIL {path}: {err}", file=sys.stderr)
+            more = len(errors) - 20
+            if more > 0:
+                print(f"FAIL {path}: ... and {more} more", file=sys.stderr)
+        else:
+            events = read_jsonl(path)
+            kinds: dict[str, int] = {}
+            for e in events:
+                kinds[e["kind"]] = kinds.get(e["kind"], 0) + 1
+            summary = ", ".join(f"{k}={v}" for k, v in sorted(kinds.items()))
+            print(f"ledger OK: {path} ({len(events)} records: {summary})")
+    return rc
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -20,12 +20,14 @@ products reduce — the paper's worker/server split (see DESIGN.md §3).
 """
 from __future__ import annotations
 
+import time
 from functools import partial
 from typing import Any, Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.core import direction as dirlib
 from repro.optim import lbfgs
 
@@ -228,15 +230,43 @@ class OWLQNPlus:
         tol: float = 1e-6,
         callback: Callable[[int, StepStats], None] | None = None,
         jit: bool = True,
+        ledger=None,
+        tracer=None,
     ) -> tuple[Pytree, list[StepStats]]:
-        """Python-loop driver with early stopping on ||d|| and f stagnation."""
+        """Python-loop driver with early stopping on ||d|| and f stagnation.
+
+        Each iteration runs inside a ``train/iter`` span and — when a run
+        ledger is active — emits one ``train_iter`` record (objective,
+        accepted step, ``||d||`` optimality measure, non-zero count): the
+        paper's convergence-vs-sparsity curves as a replayable artifact.
+        The iteration math is untouched; observation happens on the host
+        values ``run`` already pulls back, so trajectories are
+        bit-for-bit identical with obs enabled or disabled.
+        """
+        led = ledger if ledger is not None else obs.get_ledger()
+        tr = tracer if tracer is not None else obs.get_tracer()
         step_fn = jax.jit(self.step) if jit else self.step
         state = self.init(theta0)
         trace: list[StepStats] = []
         prev_f = None
         for k in range(max_iters):
-            state, stats = step_fn(state)
-            trace.append(jax.device_get(stats))
+            t0 = time.perf_counter()
+            with tr.step_span("train/iter", k):
+                state, stats = step_fn(state)
+                trace.append(jax.device_get(stats))
+            if led.enabled:
+                st = trace[-1]
+                led.emit(
+                    "train_iter",
+                    step=k,
+                    f=float(st.f),
+                    f_new=float(st.f_new),
+                    alpha=float(st.alpha),
+                    ls_iters=int(st.ls_iters),
+                    grad_norm=float(st.grad_norm),
+                    nnz=int(st.nnz),
+                    wall_s=time.perf_counter() - t0,
+                )
             if callback is not None:
                 callback(k, trace[-1])
             f_new = float(trace[-1].f_new)

@@ -43,12 +43,14 @@ the scoring span (used by ``benchmarks/bench_serve.py`` and the
 from __future__ import annotations
 
 import time
+from contextlib import contextmanager
 from typing import NamedTuple, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.serve.score import ScoreBundle, as_model, score_bundles
 from repro.tune import round_up
 
@@ -73,19 +75,52 @@ class BundleRequest(NamedTuple):
 
 
 class EngineStats:
-    """Mutable serving ledger (one per engine)."""
+    """Serving counters (one labeled family per engine) — a view over the
+    process metrics registry: every field reads back out of a registry
+    series, so the same numbers export through ``--metrics-out`` while
+    the attribute/property API (and ``as_dict``) stays exactly as it was.
+    """
 
-    def __init__(self):
-        self.requests = 0
-        self.candidates = 0
-        self.dispatches = 0  # AOT executable calls (1 per padded batch)
-        self.slots = 0  # padded bundle slots across dispatches (sum of G)
-        self.compiles = 0
-        self.compile_seconds = 0.0
-        self.score_seconds = 0.0
-        self.bucket_hits: dict[tuple[int, int, int, int], int] = {}
+    def __init__(self, registry=None):
+        reg = registry if registry is not None else obs.get_registry()
+        labels = {"engine": obs.next_instance("engine")}
+        self._reg, self._labels = reg, labels
+        self._requests = reg.counter("serve_requests", **labels)
+        self._candidates = reg.counter("serve_candidates", **labels)
+        self._dispatches = reg.counter("serve_dispatches", **labels)
+        self._slots = reg.counter("serve_slots", **labels)
+        self._compiles = reg.counter("serve_compiles", **labels)
+        self._compile_s = reg.counter("serve_compile_seconds", **labels)
+        self._score_s = reg.counter("serve_score_seconds", **labels)
+        self._wall_hist = reg.histogram("serve_dispatch_wall_seconds",
+                                        **labels)
+        self._hits: dict[tuple[int, int, int, int], obs.Counter] = {}
         self._first_t: float | None = None
         self._last_t: float | None = None
+
+    # ------------------------------------------------------------- mutators
+    def note_compile(self, seconds: float) -> None:
+        self._compiles.inc(1.0)
+        self._compile_s.inc(seconds)
+
+    def note_dispatch(self, key: tuple[int, int, int, int], requests: int,
+                      candidates: int, wall_s: float) -> None:
+        """Book one AOT executable call: its padded envelope, the real
+        requests/candidates it carried, and its wall time."""
+        self._score_s.inc(wall_s)
+        self._wall_hist.observe(wall_s)
+        self.note_span()
+        self._dispatches.inc(1.0)
+        self._slots.inc(float(key[0]))
+        self._requests.inc(float(requests))
+        self._candidates.inc(float(candidates))
+        hit = self._hits.get(key)
+        if hit is None:
+            hit = self._reg.counter("serve_bucket_hits",
+                                    envelope="x".join(map(str, key)),
+                                    **self._labels)
+            self._hits[key] = hit
+        hit.inc(float(requests))
 
     def note_span(self) -> None:
         """Stamp the scoring span (first/last dispatch) for QPS."""
@@ -93,6 +128,39 @@ class EngineStats:
         if self._first_t is None:
             self._first_t = now
         self._last_t = now
+
+    # ---------------------------------------------------------------- views
+    @property
+    def requests(self) -> int:
+        return int(self._requests.value)
+
+    @property
+    def candidates(self) -> int:
+        return int(self._candidates.value)
+
+    @property
+    def dispatches(self) -> int:
+        return int(self._dispatches.value)
+
+    @property
+    def slots(self) -> int:
+        return int(self._slots.value)
+
+    @property
+    def compiles(self) -> int:
+        return int(self._compiles.value)
+
+    @property
+    def compile_seconds(self) -> float:
+        return self._compile_s.value
+
+    @property
+    def score_seconds(self) -> float:
+        return self._score_s.value
+
+    @property
+    def bucket_hits(self) -> dict[tuple[int, int, int, int], int]:
+        return {k: int(c.value) for k, c in self._hits.items()}
 
     @property
     def latency_us(self) -> float:
@@ -158,6 +226,7 @@ class ScoringEngine:
         self._pad_id = self._model.num_features  # original-space pad id
         self._compiled: dict[tuple[int, int, int, int], jax.stages.Compiled] = {}
         self.stats = EngineStats()
+        self._dispatch_ctx = ("direct", 0.0)  # (flush reason, queue delay us)
 
     @property
     def g_buckets(self) -> tuple[int, ...]:
@@ -191,16 +260,30 @@ class ScoringEngine:
                 return score_bundles(model, bundle, mode=mode, dedup=dedup)
 
             t0 = time.perf_counter()
-            comp = jax.jit(fn).lower(
-                jax.ShapeDtypeStruct((g, ku), jnp.int32),
-                jax.ShapeDtypeStruct((g, ku), jnp.float32),
-                jax.ShapeDtypeStruct((g * n, ka), jnp.int32),
-                jax.ShapeDtypeStruct((g * n, ka), jnp.float32),
-            ).compile()
-            self.stats.compile_seconds += time.perf_counter() - t0
-            self.stats.compiles += 1
+            with obs.get_tracer().span("serve/compile",
+                                       envelope="x".join(map(str, key))):
+                comp = jax.jit(fn).lower(
+                    jax.ShapeDtypeStruct((g, ku), jnp.int32),
+                    jax.ShapeDtypeStruct((g, ku), jnp.float32),
+                    jax.ShapeDtypeStruct((g * n, ka), jnp.int32),
+                    jax.ShapeDtypeStruct((g * n, ka), jnp.float32),
+                ).compile()
+            self.stats.note_compile(time.perf_counter() - t0)
             self._compiled[key] = comp
         return comp
+
+    @contextmanager
+    def dispatch_context(self, flush_reason: str, queue_delay_us: float):
+        """Attribute the dispatches inside this scope to a micro-batch
+        flush (``repro.serve.traffic`` wraps its drains in this so the
+        ``serve_dispatch`` ledger records carry the flush reason and the
+        oldest-request queue delay; un-wrapped calls book as "direct")."""
+        prev = self._dispatch_ctx
+        self._dispatch_ctx = (flush_reason, float(queue_delay_us))
+        try:
+            yield
+        finally:
+            self._dispatch_ctx = prev
 
     def warm(self, envelopes: Sequence[tuple[int, int, int]], *,
              batch_sizes: Sequence[int] = (1,)) -> None:
@@ -242,17 +325,22 @@ class ScoringEngine:
         key = (_round_up(len(requests), self._g_buckets), ku, ka, n)
         comp = self._executable(key)  # compile time books separately
         t0 = time.perf_counter()
-        ui, uv, ai, av = self._pad_batch(requests, key)
-        p = np.asarray(jax.block_until_ready(comp(ui, uv, ai, av)))
-        p = p.reshape(key[0], n)
-        self.stats.score_seconds += time.perf_counter() - t0
-        self.stats.note_span()
-        self.stats.dispatches += 1
-        self.stats.slots += key[0]
-        self.stats.requests += len(requests)
-        self.stats.candidates += sum(r.ad_ids.shape[0] for r in requests)
-        self.stats.bucket_hits[key] = \
-            self.stats.bucket_hits.get(key, 0) + len(requests)
+        with obs.get_tracer().span("serve/dispatch", g=key[0],
+                                   envelope="x".join(map(str, key))):
+            ui, uv, ai, av = self._pad_batch(requests, key)
+            p = np.asarray(jax.block_until_ready(comp(ui, uv, ai, av)))
+            p = p.reshape(key[0], n)
+        wall = time.perf_counter() - t0
+        n_cands = sum(r.ad_ids.shape[0] for r in requests)
+        self.stats.note_dispatch(key, len(requests), n_cands, wall)
+        led = obs.get_ledger()
+        if led.enabled:
+            reason, qdelay = self._dispatch_ctx
+            led.emit(
+                "serve_dispatch", envelope=list(key), g=key[0],
+                requests=len(requests), candidates=n_cands,
+                occupancy=len(requests) / key[0], wall_s=wall,
+                flush_reason=reason, queue_delay_us=qdelay)
         return [p[s, :r.ad_ids.shape[0]] for s, r in enumerate(requests)]
 
     def score(self, request: BundleRequest) -> np.ndarray:

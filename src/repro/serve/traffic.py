@@ -44,6 +44,7 @@ from typing import NamedTuple, Sequence
 
 import numpy as np
 
+from repro import obs
 from repro.serve.engine import BundleRequest, ScoringEngine
 
 
@@ -71,12 +72,43 @@ class Completion(NamedTuple):
 
 
 class QueueStats:
-    """Mutable queue ledger (one per queue)."""
+    """Queue counters (one labeled family per queue) — a registry view
+    with the same ``accepted``/``rejected``/``flushes`` API as before."""
 
-    def __init__(self):
-        self.accepted = 0
-        self.rejected = 0
-        self.flushes = {"full": 0, "deadline": 0, "drain": 0}
+    _REASONS = ("full", "deadline", "drain")
+
+    def __init__(self, registry=None):
+        reg = registry if registry is not None else obs.get_registry()
+        labels = {"queue": obs.next_instance("queue")}
+        self._accepted = reg.counter("serve_queue_accepted", **labels)
+        self._rejected = reg.counter("serve_queue_rejected", **labels)
+        self._flushes = {r: reg.counter("serve_queue_flushes",
+                                        reason=r, **labels)
+                         for r in self._REASONS}
+        self._delay_hist = reg.histogram("serve_queue_delay_seconds",
+                                         **labels)
+
+    def note_accept(self) -> None:
+        self._accepted.inc(1.0)
+
+    def note_reject(self) -> None:
+        self._rejected.inc(1.0)
+
+    def note_flush(self, reason: str, queue_delay_s: float) -> None:
+        self._flushes[reason].inc(1.0)
+        self._delay_hist.observe(queue_delay_s)
+
+    @property
+    def accepted(self) -> int:
+        return int(self._accepted.value)
+
+    @property
+    def rejected(self) -> int:
+        return int(self._rejected.value)
+
+    @property
+    def flushes(self) -> dict[str, int]:
+        return {r: int(c.value) for r, c in self._flushes.items()}
 
     def as_dict(self) -> dict:
         return {"accepted": self.accepted, "rejected": self.rejected,
@@ -122,14 +154,14 @@ class MicroBatchQueue:
         ticket, or None when admission control sheds it. A group hitting
         ``max_batch`` flushes immediately (trigger time = ``now``)."""
         if self.pending >= self.config.max_pending:
-            self.stats.rejected += 1
+            self.stats.note_reject()
             return None
         ticket = self._next_ticket
         self._next_ticket += 1
         env = self.engine.envelope(request)
         group = self._pending.setdefault(env, [])
         group.append((ticket, request, now))
-        self.stats.accepted += 1
+        self.stats.note_accept()
         if len(group) >= self.config.max_batch:
             self._flush(env, now, "full")
         return ticket
@@ -161,10 +193,14 @@ class MicroBatchQueue:
     def _flush(self, env: tuple[int, int, int], trigger: float,
                reason: str) -> list[Completion]:
         entries = self._pending.pop(env)
-        self.stats.flushes[reason] += 1
         started = max(trigger, self._busy_until)
+        # virtual queueing delay of the OLDEST request in the batch —
+        # the figure the deadline bounds
+        queue_delay_s = max(0.0, started - entries[0][2])
+        self.stats.note_flush(reason, queue_delay_s)
         before = self.engine.stats.score_seconds
-        scores = self.engine.score_batch([r for _, r, _ in entries])
+        with self.engine.dispatch_context(reason, queue_delay_s * 1e6):
+            scores = self.engine.score_batch([r for _, r, _ in entries])
         wall = self.engine.stats.score_seconds - before
         completed = started + wall
         self._busy_until = completed

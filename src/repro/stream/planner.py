@@ -31,12 +31,24 @@ Overlap accounting: every build is timed inside the worker; every
 is the fraction of prefetched build time hidden behind device work —
 ``1 - wait / build`` over prefetched windows (the first window of a run
 has nothing to hide behind and is excluded).
+
+The accounting lives in the process metrics registry (``repro.obs``):
+each planner owns a labeled family of ``stream_planner_*`` counters and
+:attr:`WindowPlanner.stats` is a view that reads them back into the same
+:class:`PlannerStats` tuple as before — same ``+=`` arithmetic in the
+same order, so ``overlap_ratio`` is preserved bit-for-bit. Builds run
+inside ``stream/plan_window`` spans on the worker thread and blocked
+time inside ``stream/wait`` on the trainer thread, so an exported trace
+shows exactly how window t+1's host build interleaves with window t's
+device steps.
 """
 from __future__ import annotations
 
 import time
 from concurrent.futures import Future, ThreadPoolExecutor
 from typing import Any, Callable, NamedTuple
+
+from repro import obs
 
 
 class PreparedWindow(NamedTuple):
@@ -46,6 +58,10 @@ class PreparedWindow(NamedTuple):
     batch: Any          # planned SparseCTRBatch | routed ShardedSparseBatch
     step: Any           # callable(state) -> (state, stats), ready to run
     build_seconds: float = 0.0
+    plan_seconds: float = 0.0     # batch-plan share of the build
+    compile_seconds: float = 0.0  # AOT-compile share of the build
+    wait_seconds: float = 0.0     # how long get() blocked (stamped by planner)
+    prefetched: bool = False      # built in the background vs inline
 
 
 class PlannerStats(NamedTuple):
@@ -102,16 +118,22 @@ class WindowPlanner:
     """
 
     def __init__(self, build: Callable[[int], PreparedWindow], *,
-                 overlap: bool = True):
+                 overlap: bool = True, registry=None):
         self._build = build
         self._pool = ThreadPoolExecutor(
             max_workers=1, thread_name_prefix="replanner") if overlap else None
         self._pending: dict[int, Future] = {}
-        self._windows = 0
-        self._build_s = 0.0
-        self._wait_s = 0.0
-        self._pre_build_s = 0.0
-        self._pre_wait_s = 0.0
+        reg = registry if registry is not None else obs.get_registry()
+        labels = {"planner": obs.next_instance("planner")}
+        self._windows = reg.counter("stream_planner_windows", **labels)
+        self._build_s = reg.counter("stream_planner_build_seconds", **labels)
+        self._wait_s = reg.counter("stream_planner_wait_seconds", **labels)
+        self._pre_build_s = reg.counter(
+            "stream_planner_prefetched_build_seconds", **labels)
+        self._pre_wait_s = reg.counter(
+            "stream_planner_prefetched_wait_seconds", **labels)
+        self._build_hist = reg.histogram(
+            "stream_planner_build_wall_seconds", **labels)
 
     @property
     def overlap(self) -> bool:
@@ -119,8 +141,10 @@ class WindowPlanner:
 
     def _timed(self, day: int) -> PreparedWindow:
         t0 = time.perf_counter()
-        out = self._build(day)
+        with obs.get_tracer().span("stream/plan_window", day=day):
+            out = self._build(day)
         dt = time.perf_counter() - t0
+        self._build_hist.observe(dt)
         return out._replace(build_seconds=dt)
 
     def prefetch(self, day: int) -> None:
@@ -135,26 +159,30 @@ class WindowPlanner:
         one is pending, else builds synchronously right here."""
         fut = self._pending.pop(day, None)
         t0 = time.perf_counter()
+        prefetched = fut is not None
         if fut is None:
             out = self._timed(day)
             wait = out.build_seconds  # fully exposed
         else:
-            out = fut.result()
+            with obs.get_tracer().span("stream/wait", day=day):
+                out = fut.result()
             wait = time.perf_counter() - t0
-            self._pre_build_s += out.build_seconds
-            self._pre_wait_s += min(wait, out.build_seconds)
-        self._windows += 1
-        self._build_s += out.build_seconds
-        self._wait_s += wait
-        return out
+            self._pre_build_s.inc(out.build_seconds)
+            self._pre_wait_s.inc(min(wait, out.build_seconds))
+        self._windows.inc(1.0)
+        self._build_s.inc(out.build_seconds)
+        self._wait_s.inc(wait)
+        return out._replace(wait_seconds=wait, prefetched=prefetched)
 
     @property
     def stats(self) -> PlannerStats:
+        """The familiar tuple, read back out of the registry counters."""
         return PlannerStats(
-            windows=self._windows, build_seconds=self._build_s,
-            wait_seconds=self._wait_s,
-            prefetched_build_seconds=self._pre_build_s,
-            prefetched_wait_seconds=self._pre_wait_s)
+            windows=int(self._windows.value),
+            build_seconds=self._build_s.value,
+            wait_seconds=self._wait_s.value,
+            prefetched_build_seconds=self._pre_build_s.value,
+            prefetched_wait_seconds=self._pre_wait_s.value)
 
     def close(self) -> None:
         for fut in self._pending.values():

@@ -52,6 +52,7 @@ from typing import Callable, NamedTuple
 
 import jax
 
+from repro import obs
 from repro.core.objective import smooth_loss_and_grad
 from repro.optim.owlqn_plus import OWLQNPlus, OWLQNState
 from repro.stream.planner import PlannerStats, PreparedWindow, WindowPlanner
@@ -201,9 +202,13 @@ class StreamTrainer:
         (optionally) AOT-compile the step. Runs on the planner thread."""
         from repro.stream.planner import plan_window
 
-        raw = self.stream.window(day, self.window)
-        batch = plan_window(raw, partition=self.partition,
-                            data_shards=self.data_shards, mesh=self.mesh)
+        tracer = obs.get_tracer()
+        t0 = time.perf_counter()
+        with tracer.span("stream/plan", day=day):
+            raw = self.stream.window(day, self.window)
+            batch = plan_window(raw, partition=self.partition,
+                                data_shards=self.data_shards, mesh=self.mesh)
+        plan_s = time.perf_counter() - t0
         opt = OWLQNPlus(self._make_loss(batch), lam=self.lam, beta=self.beta,
                         memory=self.memory)
         if self.mesh is not None:
@@ -212,9 +217,14 @@ class StreamTrainer:
             step = make_distributed_step(opt, self.mesh)
         else:
             step = jax.jit(opt.step)
+        compile_s = 0.0
         if self.jit_ahead and self._opt_struct is not None:
-            step = step.lower(self._opt_struct).compile()
-        return PreparedWindow(day=day, batch=batch, step=step)
+            t1 = time.perf_counter()
+            with tracer.span("stream/compile", day=day):
+                step = step.lower(self._opt_struct).compile()
+            compile_s = time.perf_counter() - t1
+        return PreparedWindow(day=day, batch=batch, step=step,
+                              plan_seconds=plan_s, compile_seconds=compile_s)
 
     def _window_start(self, win: PreparedWindow,
                       opt_state: OWLQNState) -> OWLQNState:
@@ -253,6 +263,9 @@ class StreamTrainer:
             lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), state.opt)
         trace: list[WindowStats] = []
         planner = WindowPlanner(self._prepare, overlap=self.overlap)
+        led = obs.get_ledger()
+        tracer = obs.get_tracer()
+        global_iter = 0  # train_iter record index across windows
         try:
             # the FIRST window has no device work to hide behind — let
             # get() build it synchronously so the overlap stats only
@@ -265,11 +278,16 @@ class StreamTrainer:
                 opt_state = self._window_start(win, state.opt)
                 t0 = time.perf_counter()
                 fs = []
+                iter_stats = []
                 last = None
-                for _ in range(self.inner_iters):
-                    opt_state, last = win.step(opt_state)
-                    fs.append(float(last.f_new))
-                jax.block_until_ready(opt_state.theta)
+                with tracer.span("stream/step", day=t):
+                    for j in range(self.inner_iters):
+                        with tracer.step_span("train/iter", global_iter + j,
+                                              day=t):
+                            opt_state, last = win.step(opt_state)
+                            fs.append(float(last.f_new))
+                        iter_stats.append(last)
+                    jax.block_until_ready(opt_state.theta)
                 dt = time.perf_counter() - t0
                 state = StreamState(opt=opt_state, day=t + 1)
                 ws = WindowStats(
@@ -278,9 +296,35 @@ class StreamTrainer:
                     nnz=int(last.nnz), step_seconds=dt,
                     build_seconds=win.build_seconds)
                 trace.append(ws)
+                if led.enabled:
+                    for j, st in enumerate(jax.device_get(iter_stats)):
+                        led.emit(
+                            "train_iter", step=global_iter + j, day=t,
+                            window_iter=j, f=float(st.f),
+                            f_new=float(st.f_new), alpha=float(st.alpha),
+                            ls_iters=int(st.ls_iters),
+                            grad_norm=float(st.grad_norm), nnz=int(st.nnz))
+                    led.emit(
+                        "stream_window", day=t,
+                        days_in_window=ws.days_in_window,
+                        plan_s=win.plan_seconds, compile_s=win.compile_seconds,
+                        build_s=win.build_seconds, wait_s=win.wait_seconds,
+                        prefetched=win.prefetched, step_s=dt,
+                        carry=self.history, alpha=ws.alpha, nnz=ws.nnz,
+                        fs=list(ws.fs))
+                global_iter += self.inner_iters
                 if callback is not None:
                     callback(t, ws, state)
         finally:
             self.planner_stats = planner.stats
+            if led.enabled:
+                ps = self.planner_stats
+                led.emit(
+                    "stream_summary", windows=ps.windows,
+                    build_seconds=ps.build_seconds,
+                    wait_seconds=ps.wait_seconds,
+                    prefetched_build_seconds=ps.prefetched_build_seconds,
+                    prefetched_wait_seconds=ps.prefetched_wait_seconds,
+                    overlap_ratio=ps.overlap_ratio)
             planner.close()
         return state, trace

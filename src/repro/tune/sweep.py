@@ -44,6 +44,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.kernels.lsplm_sparse_fused.lsplm_sparse_fused import (
     lsplm_sparse_fused_forward,
 )
@@ -245,7 +246,7 @@ def kernels_for_backend(backend: str) -> tuple[str, ...]:
 
 def sweep_shapes(shapes, *, mode: str = "auto", reps: int = REPS,
                  table: tabmod.AutotuneTable | None = None,
-                 log=print) -> tabmod.AutotuneTable:
+                 log=obs.log) -> tabmod.AutotuneTable:
     """Sweep every applicable kernel at every shape into ``table``."""
     backend = tabmod.backend_key(mode)
     table = table if table is not None else tabmod.AutotuneTable()
@@ -278,7 +279,7 @@ def sweep_shapes(shapes, *, mode: str = "auto", reps: int = REPS,
 
 def check_table(shapes, committed: tabmod.AutotuneTable, *,
                 mode: str = "auto", reps: int = REPS, tol: float = 2.0,
-                log=print) -> list[str]:
+                log=obs.log) -> list[str]:
     """Freshness gate: the committed config for every envelope covered by
     ``shapes`` must exist, hold parity, and stay within ``tol`` x of a
     fresh sweep's best time. Returns failure strings (empty == pass)."""
@@ -345,7 +346,8 @@ def main(argv=None) -> int:
         failures = check_table(shapes, committed, mode=args.mode,
                                reps=args.reps, tol=args.check_tol)
         for f in failures:
-            print(f"FAIL {f}", file=sys.stderr)
+            obs.log(f"FAIL {f}",
+                    printer=lambda msg: print(msg, file=sys.stderr))
         return 1 if failures else 0
 
     table = None
@@ -358,7 +360,7 @@ def main(argv=None) -> int:
     backend = tabmod.backend_key(args.mode)
     if args.out:
         table.save(args.out, backend)
-        print(f"wrote {args.out} [{backend}]")
+        obs.log(f"wrote {args.out} [{backend}]")
     else:
         print(table.to_json(backend))
     return 0

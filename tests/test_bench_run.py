@@ -80,7 +80,7 @@ def test_json_written_when_gate_raises_before_collecting(tmp_path,
     with pytest.raises(SystemExit):
         bench_run.main()
     data = json.loads((tmp_path / "BENCH_stream.json").read_text())
-    assert list(data) == ["error"]
+    assert sorted(data) == ["error", "meta"]  # provenance even on error
     assert "import-time shape bug" in data["error"]
 
 
@@ -96,4 +96,10 @@ def test_json_written_on_success(tmp_path, monkeypatch):
                         ["run.py", "--only", "stream", "--json", "--smoke"])
     bench_run.main()  # no SystemExit
     data = json.loads((tmp_path / "BENCH_stream.json").read_text())
-    assert data == {"steps_per_sec": 42.0}
+    assert data["steps_per_sec"] == 42.0
+    # every artifact self-describes: git rev, backend, device/cpu
+    # counts, module wall — info-only for the regression gate
+    meta = data["meta"]
+    assert set(meta) == {"git_rev", "backend", "device_count",
+                         "cpu_count", "wall_seconds"}
+    assert meta["wall_seconds"] >= 0.0

@@ -1,0 +1,138 @@
+"""End-to-end acceptance for the observability layer: one real
+``repro.launch.train --stream`` subprocess with ``--ledger-out`` /
+``--trace-out`` / ``--metrics-out`` must yield
+
+  * a schema-valid ledger from which the per-iteration NLL/nnz curves
+    and the planner's overlap ratio reconstruct exactly,
+  * a loadable Chrome-trace JSON whose plan/compile/step/iter spans
+    nest correctly,
+  * a metrics snapshot carrying the planner series,
+
+while the human console output keeps its pre-obs shape."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro import obs
+
+DAYS, WINDOW, INNER = 3, 2, 2
+
+
+def _contains(outer: dict, inner: dict) -> bool:
+    return (outer["tid"] == inner["tid"]
+            and outer["ts"] <= inner["ts"] + 1e-9
+            and inner["ts"] + inner["dur"] <= outer["ts"] + outer["dur"] + 1e-9)
+
+
+@pytest.fixture(scope="module")
+def stream_run(tmp_path_factory):
+    tmp = tmp_path_factory.mktemp("obs_launch")
+    paths = {"ledger": tmp / "run.jsonl", "trace": tmp / "trace.json",
+             "metrics": tmp / "metrics.jsonl"}
+    env = dict(os.environ, PYTHONPATH="src")
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.train", "--stream",
+         "--days", str(DAYS), "--window", str(WINDOW),
+         "--inner-iters", str(INNER), "--sessions", "24",
+         "--sparse-features", "1200", "--iters", "2",
+         "--ledger-out", str(paths["ledger"]),
+         "--trace-out", str(paths["trace"]),
+         "--metrics-out", str(paths["metrics"])],
+        capture_output=True, text=True, timeout=600, env=env,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+    assert proc.returncode == 0, proc.stderr
+    return paths, proc
+
+
+@pytest.mark.slow
+def test_ledger_validates_and_reconstructs_curves(stream_run):
+    paths, _ = stream_run
+    assert obs.validate_file(str(paths["ledger"])) == []
+    recs = obs.read_jsonl(str(paths["ledger"]))
+
+    assert recs[0]["kind"] == "run_meta"
+    assert recs[0]["driver"] == "repro.launch.train"
+    assert recs[0]["mode"] == "stream"
+
+    # per-iteration objective/nnz curves: DAYS x INNER records, with
+    # globally increasing step numbers
+    iters = [r for r in recs if r["kind"] == "train_iter"]
+    assert len(iters) == DAYS * INNER
+    assert [r["step"] for r in iters] == list(range(DAYS * INNER))
+    nll_curve = [r["f_new"] for r in iters]
+    nnz_curve = [r["nnz"] for r in iters]
+    assert all(isinstance(v, float) for v in nll_curve)
+    assert all(isinstance(v, int) and v >= 0 for v in nnz_curve)
+
+    # the window records carry the same per-iteration objective values
+    wins = [r for r in recs if r["kind"] == "stream_window"]
+    assert [w["day"] for w in wins] == list(range(DAYS))
+    assert [f for w in wins for f in w["fs"]] == nll_curve
+
+    # the planner's overlap ratio reconstructs from the window records
+    # with the exact accounting the summary reports
+    pre_build = sum(w["build_s"] for w in wins if w["prefetched"])
+    pre_wait = sum(min(w["wait_s"], w["build_s"])
+                   for w in wins if w["prefetched"])
+    want = 1.0 - pre_wait / pre_build if pre_build > 0 else 0.0
+    (summary,) = [r for r in recs if r["kind"] == "stream_summary"]
+    assert summary["windows"] == DAYS
+    assert summary["overlap_ratio"] == pytest.approx(want, abs=1e-9)
+
+    # held-out next-day eval exists for every day but the last
+    evals = [r for r in recs if r["kind"] == "stream_eval"]
+    assert [r["day"] for r in evals] == list(range(DAYS - 1))
+    assert all(r["next_day_nll"] > 0 for r in evals)
+
+
+@pytest.mark.slow
+def test_trace_loads_and_spans_nest(stream_run):
+    paths, _ = stream_run
+    doc = json.load(open(paths["trace"]))
+    assert set(doc) == {"traceEvents", "displayTimeUnit"}
+    spans = [e for e in doc["traceEvents"] if e["ph"] == "X"]
+    by_name = {}
+    for e in spans:
+        by_name.setdefault(e["name"], []).append(e)
+
+    assert len(by_name["stream/step"]) == DAYS
+    assert len(by_name["train/iter"]) == DAYS * INNER
+    assert len(by_name["stream/plan_window"]) == DAYS
+    # every train/iter nests inside exactly one stream/step
+    for it in by_name["train/iter"]:
+        assert sum(_contains(st, it) for st in by_name["stream/step"]) == 1
+    # every plan and compile nests inside a plan_window build
+    for name in ("stream/plan", "stream/compile"):
+        for sp in by_name[name]:
+            assert any(_contains(pw, sp)
+                       for pw in by_name["stream/plan_window"]), name
+    # prefetched builds run on the replanner thread, steps on the main
+    # thread — the trace must carry both thread_name metadata records
+    threads = {e["args"]["name"] for e in doc["traceEvents"]
+               if e["ph"] == "M" and e["name"] == "thread_name"}
+    assert any(n.startswith("replanner") for n in threads), threads
+
+
+@pytest.mark.slow
+def test_metrics_snapshot_and_console_text(stream_run):
+    paths, proc = stream_run
+    series = {json.loads(ln)["series"]: json.loads(ln)
+              for ln in open(paths["metrics"]) if ln.strip()}
+    (windows,) = [s for k, s in series.items()
+                  if k.startswith("stream_planner_windows")]
+    assert windows["value"] == float(DAYS)
+    assert any(k.startswith("stream_planner_build_wall_seconds")
+               for k in series)
+
+    # the human lines survived the print() -> obs.log migration
+    lines = proc.stdout.splitlines()
+    assert lines[0].startswith(f"stream: {DAYS} days x 24 sessions")
+    day_lines = [ln for ln in lines if ln.startswith("day ")]
+    assert len(day_lines) == DAYS
+    assert "plan=" in day_lines[0] and "step=" in day_lines[0]
+    assert "next-day nll=" in day_lines[0]
+    assert lines[-1].startswith(f"trained {DAYS} windows in ")
+    assert "overlap ratio" in lines[-1]

@@ -101,3 +101,15 @@ def test_planner_close_cancels_pending():
     planner.prefetch(0)
     planner.close()  # must not hang or raise
     assert planner.stats.windows == 0
+
+
+def test_overlap_ratio_zero_prefetched_build():
+    """Regression: overlap_ratio must be 0.0 (not a ZeroDivisionError)
+    when nothing was ever prefetched — fresh planner, sync planner, and
+    a stats object reconstructed from zeroed counters alike."""
+    from repro.stream.planner import PlannerStats
+
+    assert WindowPlanner(_build, overlap=True).stats.overlap_ratio == 0.0
+    assert PlannerStats(windows=3, build_seconds=1.0, wait_seconds=1.0,
+                        prefetched_build_seconds=0.0,
+                        prefetched_wait_seconds=0.0).overlap_ratio == 0.0
