@@ -1,5 +1,6 @@
 from repro.eval.metrics import (  # noqa: F401
     auc,
+    bucketed_calibration,
     calibration_ratio,
     log_loss,
     normalized_entropy,

@@ -55,6 +55,26 @@ def calibration_ratio(y: np.ndarray, p: np.ndarray) -> float:
     return float(p.sum() / clicks) if clicks else float("inf")
 
 
+def bucketed_calibration(y: np.ndarray, p: np.ndarray,
+                         edges: np.ndarray) -> np.ndarray:
+    """Per-score-bucket :func:`calibration_ratio`: predictions are
+    binned by ``edges`` (B+1 ascending bucket boundaries; values clamp
+    into the end buckets) and each bucket's ratio is computed from its
+    own (y, p) slice — ``inf`` where a bucket has no clicks, including
+    empty buckets. Returns shape (B,). This is the per-bucket view the
+    drift monitor compares against its train-time reference."""
+    y = np.asarray(y, np.float64).ravel()
+    p = np.asarray(p, np.float64).ravel()
+    edges = np.asarray(edges, np.float64)
+    nb = edges.size - 1
+    idx = np.clip(np.searchsorted(edges, p, side="right") - 1, 0, nb - 1)
+    sum_p = np.bincount(idx, weights=p, minlength=nb)
+    sum_y = np.bincount(idx, weights=y, minlength=nb)
+    return np.array([
+        calibration_ratio(np.asarray([sy]), np.asarray([sp]))
+        for sy, sp in zip(sum_y, sum_p)])
+
+
 def normalized_entropy(y: np.ndarray, p: np.ndarray) -> float:
     y = np.asarray(y, np.float64).ravel()
     base = y.mean()

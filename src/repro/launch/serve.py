@@ -124,6 +124,10 @@ def main() -> int:
     obs.add_flags(ap)
     args = ap.parse_args()
     apply_tuning_flags(args)  # value check up front; geometry check below
+    if args.drift_ref and not args.monitor:
+        raise SystemExit(
+            "--drift-ref arms the health monitor's drift detectors; "
+            "combine it with --monitor")
 
     session = obs.configure_from_args(args, driver="repro.launch.serve")
     try:
@@ -171,6 +175,13 @@ def _serve(args) -> int:
                 f" smaller); round-tripped save/load; max |dp| = {dp:.1e}")
 
     engine = ScoringEngine(model)
+    mon = obs.get_monitor()
+    if args.drift_ref:
+        ref = obs.load_drift_reference(args.drift_ref)
+        mon.arm_drift(ref)
+        obs.log(f"monitor armed from {args.drift_ref}: "
+                f"{ref.num_bins} score bins, top-{ref.top_ids.shape[0]} id "
+                f"traffic, reference calibration ratio {ref.ratio:.3f}")
     requests = synthetic_requests(args.requests, num_features=d,
                                   seed=args.seed + 1)
     # deploy-time warmup: compile the traffic's bucket set (all batch
@@ -226,6 +237,18 @@ def _serve(args) -> int:
                     f"{rep['flushes']['deadline']} deadline / "
                     f"{rep['flushes']['drain']} drain), "
                     f"rejected {rep['rejected']}")
+
+    if mon.enabled:
+        mon.evaluate()  # settle the last partial eval_every window
+        summ = mon.summary()
+        active = ", ".join(summ["active"]) if summ["active"] else "none"
+        drift = {k: v for k, v in summ["signals"].items()
+                 if k.startswith(("drift.", "calib."))}
+        obs.log(f"monitor: {summ['alerts']} alert state changes, "
+                f"active: {active}"
+                + (f"; drift signals: "
+                   + ", ".join(f"{k}={v:.4f}" for k, v in sorted(drift.items()))
+                   if drift else ""))
     return 0
 
 

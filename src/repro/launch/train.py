@@ -156,9 +156,18 @@ def train_sparse(args) -> int:
                        grad_norm=float(st.grad_norm), nnz=int(st.nnz),
                        test_auc=float(a), wall_s=dt)
             obs.log(obs.render_train_iter(rec), kind="train_iter", **rec)
+    theta = state.theta if part is None else part.unpad_rows(
+        jnp.asarray(jax.device_get(state.theta)))
+    if args.drift_ref:
+        p = np.asarray(sparse_predict(theta, test))
+        ids = np.concatenate([np.asarray(test.user_ids).ravel(),
+                              np.asarray(test.ad_ids).ravel()])
+        ref = obs.capture_reference(p, np.asarray(test.y), ids,
+                                    num_features=d)
+        obs.log(f"drift reference (held-out test, {p.shape[0]} scores, "
+                f"ratio={ref.ratio:.3f}) -> "
+                f"{obs.save_drift_reference(args.drift_ref, ref)}")
     if args.ckpt:
-        theta = state.theta if part is None else part.unpad_rows(
-            jnp.asarray(jax.device_get(state.theta)))
         checkpoint.save(args.ckpt, {"theta": theta})
         obs.log(f"checkpoint -> {args.ckpt}")
     return 0
@@ -222,6 +231,8 @@ def train_stream(args) -> int:
     else:
         state = trainer.init(theta0)
 
+    last_eval: dict = {}  # scores/labels/ids of the newest held-out day
+
     def cb(t, ws, st):
         # the structured twin of this line is the trainer's own
         # stream_window record; the held-out eval is the driver's
@@ -233,11 +244,17 @@ def train_stream(args) -> int:
             nxt = stream.day(t + 1)
             theta = trainer.theta(st)
             nll = float(nll_sparse(theta, nxt)) / nxt.y.shape[0]
-            a = auc_fn(np.asarray(nxt.y),
-                       np.asarray(sparse_predict(theta, nxt)))
+            p = np.asarray(sparse_predict(theta, nxt))
+            y = np.asarray(nxt.y)
+            a = auc_fn(y, p)
             msg += f"  next-day nll={nll:.4f} auc={a:.4f}"
             obs.log(msg, kind="stream_eval", day=t, next_day_nll=nll,
                     next_day_auc=float(a))
+            obs.get_monitor().observe_predictions(p, y)
+            if args.drift_ref:
+                last_eval.update(scores=p, labels=y, ids=np.concatenate(
+                    [np.asarray(nxt.user_ids).ravel(),
+                     np.asarray(nxt.ad_ids).ravel()]))
         else:
             obs.log(msg)
         if ckpt:  # every window is a resumable checkpoint
@@ -251,6 +268,18 @@ def train_stream(args) -> int:
     obs.log(f"trained {days_left} windows in {dt:.1f}s; planner: "
             f"{ps.build_seconds:.2f}s host build, {ps.wait_seconds:.2f}s "
             f"exposed, overlap ratio {ps.overlap_ratio:.2f}")
+    if args.drift_ref:
+        if not last_eval:
+            raise SystemExit(
+                "--drift-ref needs at least one held-out next-day eval; "
+                "run with --days >= 2 (or resume earlier in the stream)")
+        ref = obs.capture_reference(last_eval["scores"], last_eval["labels"],
+                                    last_eval["ids"],
+                                    num_features=args.sparse_features)
+        obs.log(f"drift reference (last held-out day, "
+                f"{last_eval['scores'].shape[0]} scores, "
+                f"ratio={ref.ratio:.3f}) -> "
+                f"{obs.save_drift_reference(args.drift_ref, ref)}")
     if ckpt:
         obs.log(f"stream checkpoint -> {ckpt} (resume with --resume)")
     return 0
@@ -369,6 +398,11 @@ def main():
             "combine them with --sparse or --stream (the dense path has "
             "no tunable block sizes)")
     mode = "stream" if args.stream else "sparse" if args.sparse else "dense"
+    if args.drift_ref and mode == "dense":
+        raise SystemExit(
+            "--drift-ref captures a sparse-id traffic reference; combine "
+            "it with --sparse or --stream (the dense path has no feature "
+            "ids to histogram)")
     session = obs.configure_from_args(args, driver="repro.launch.train",
                                       mode=mode)
     try:

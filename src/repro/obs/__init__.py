@@ -29,6 +29,18 @@ when done::
 """
 from __future__ import annotations
 
+from .drift import (  # noqa: F401
+    CalibrationTracker,
+    DriftReference,
+    IdTrafficTracker,
+    ScoreDriftTracker,
+    capture_reference,
+    kl,
+    load_drift_reference,
+    psi,
+    save_drift_reference,
+)
+from .fileio import atomic_write  # noqa: F401
 from .ledger import (  # noqa: F401
     NULL_LEDGER,
     NullLedger,
@@ -53,6 +65,17 @@ from .metrics import (  # noqa: F401
     next_instance,
     set_registry,
 )
+from .monitor import (  # noqa: F401
+    NULL_MONITOR,
+    HealthMonitor,
+    NullMonitor,
+    RollingWindow,
+    SLORule,
+    default_rules,
+    get_monitor,
+    parse_rule,
+    set_monitor,
+)
 from .trace import (  # noqa: F401
     NULL_SPAN,
     NULL_TRACER,
@@ -72,31 +95,50 @@ class ObsSession:
     """
 
     def __init__(self, *, metrics_out=None, trace_out=None,
-                 ledger_out=None, registry=None, tracer=None, ledger=None,
-                 prev_tracer=None, prev_ledger=None):
+                 ledger_out=None, report_out=None, registry=None,
+                 tracer=None, ledger=None, monitor=None,
+                 prev_tracer=None, prev_ledger=None, prev_monitor=None):
         self.metrics_out = metrics_out
         self.trace_out = trace_out
         self.ledger_out = ledger_out
+        self.report_out = report_out
         self.registry = registry if registry is not None else get_registry()
         self.tracer = tracer if tracer is not None else get_tracer()
         self.ledger = ledger if ledger is not None else get_ledger()
+        self.monitor = monitor if monitor is not None else get_monitor()
         self._prev_tracer = prev_tracer
         self._prev_ledger = prev_ledger
+        self._prev_monitor = prev_monitor
         self._closed = False
 
     def close(self) -> None:
         if self._closed:
             return
         self._closed = True
+        if self.monitor.enabled:
+            # settle any partial hysteresis window before the snapshot
+            self.monitor.evaluate()
+            self.monitor.detach()
         if self.metrics_out:
             self.registry.write(self.metrics_out)
         if self.trace_out:
             self.tracer.write(self.trace_out)
+        if self.report_out:
+            from . import report as _report
+
+            rep = _report.build_report(self.ledger.events())
+            text = (_report.render_html(rep)
+                    if self.report_out.endswith((".html", ".htm"))
+                    else _report.render_md(rep))
+            with atomic_write(self.report_out) as f:
+                f.write(text + "\n")
         self.ledger.close()
         if self._prev_tracer is not None:
             set_tracer(self._prev_tracer)
         if self._prev_ledger is not None:
             set_ledger(self._prev_ledger)
+        if self._prev_monitor is not None:
+            set_monitor(self._prev_monitor)
 
     def __enter__(self) -> "ObsSession":
         return self
@@ -106,31 +148,45 @@ class ObsSession:
 
 
 def configure(*, metrics_out: str | None = None, trace_out: str | None = None,
-              ledger_out: str | None = None, trace_annotate: bool = False,
+              ledger_out: str | None = None, report_out: str | None = None,
+              monitor: bool = False,
+              monitor_rules: list | None = None,
+              trace_annotate: bool = False,
               meta: dict | None = None) -> ObsSession:
     """Install enabled process defaults for whichever outputs the driver
     asked for and return the owning :class:`ObsSession`.
 
     A tracer is enabled only when ``trace_out`` is given; a file-backed
-    ledger only when ``ledger_out`` is. When ``meta`` is given (and a
-    ledger is active) it is emitted as the leading ``run_meta`` record.
-    With no arguments this is a no-op session over the null defaults.
+    ledger only when ``ledger_out`` is. ``monitor=True`` installs a
+    :class:`HealthMonitor` (default or ``monitor_rules``) attached to
+    the run ledger; ``report_out`` renders the ledger into a run report
+    on close (md, or html by extension). Both need ledger records, so
+    either implies an in-memory ledger when ``--ledger-out`` was not
+    given. When ``meta`` is given (and a ledger is active) it is
+    emitted as the leading ``run_meta`` record. With no arguments this
+    is a no-op session over the null defaults.
     """
-    prev_tracer = prev_ledger = None
+    prev_tracer = prev_ledger = prev_monitor = None
     tracer = get_tracer()
     ledger = get_ledger()
+    mon = get_monitor()
     if trace_out:
         tracer = Tracer(enabled=True, annotate=trace_annotate)
         prev_tracer = set_tracer(tracer)
-    if ledger_out:
-        ledger = RunLedger(ledger_out)
+    if ledger_out or monitor or report_out:
+        ledger = RunLedger(ledger_out)  # path=None -> in-memory only
         prev_ledger = set_ledger(ledger)
         if meta:
             ledger.emit("run_meta", **meta)
+    if monitor:
+        mon = HealthMonitor(monitor_rules).attach(ledger)
+        prev_monitor = set_monitor(mon)
     return ObsSession(metrics_out=metrics_out, trace_out=trace_out,
-                      ledger_out=ledger_out, registry=get_registry(),
-                      tracer=tracer, ledger=ledger,
-                      prev_tracer=prev_tracer, prev_ledger=prev_ledger)
+                      ledger_out=ledger_out, report_out=report_out,
+                      registry=get_registry(),
+                      tracer=tracer, ledger=ledger, monitor=mon,
+                      prev_tracer=prev_tracer, prev_ledger=prev_ledger,
+                      prev_monitor=prev_monitor)
 
 
 def add_flags(parser) -> None:
@@ -149,6 +205,27 @@ def add_flags(parser) -> None:
                              "jax.profiler annotations so an active "
                              "profiler trace shows them on the device "
                              "timeline")
+    parser.add_argument("--monitor", action="store_true",
+                        help="run the health monitor (repro.obs.monitor): "
+                             "rolling SLO rules over dispatch/eval records "
+                             "with hysteresis, emitting typed 'alert' "
+                             "ledger records")
+    parser.add_argument("--monitor-rule", action="append", default=None,
+                        metavar="RULE", dest="monitor_rules",
+                        help="replace the default SLO rule set "
+                             "(repeatable): '[name:] signal <=|>= "
+                             "threshold [for B/C]', e.g. "
+                             "'drift.id_psi <= 0.25 for 2/2'")
+    parser.add_argument("--drift-ref", default=None, metavar="PATH",
+                        help="drift-reference snapshot (.npz): training "
+                             "drivers CAPTURE one here from held-out "
+                             "eval; serving drivers LOAD it to arm the "
+                             "monitor's drift/calibration detectors")
+    parser.add_argument("--report-out", default=None, metavar="PATH",
+                        help="render the run ledger into one analytics "
+                             "report on exit (.html for HTML, else "
+                             "markdown; same renderer as "
+                             "python -m repro.obs.report)")
 
 
 def configure_from_args(args, *, driver: str, mode: str | None = None,
@@ -164,6 +241,12 @@ def configure_from_args(args, *, driver: str, mode: str | None = None,
                   "argv": list(sys.argv[1:])}
     if mode is not None:
         meta["mode"] = mode
+    rules = None
+    if getattr(args, "monitor_rules", None):
+        rules = [parse_rule(r) for r in args.monitor_rules]
     return configure(metrics_out=args.metrics_out, trace_out=args.trace_out,
                      ledger_out=args.ledger_out,
+                     report_out=getattr(args, "report_out", None),
+                     monitor=getattr(args, "monitor", False),
+                     monitor_rules=rules,
                      trace_annotate=args.trace_annotate, meta=meta)

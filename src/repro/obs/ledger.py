@@ -17,9 +17,18 @@ machine-readable twin of the drivers' human log lines:
   * ``serve_dispatch`` one engine dispatch: envelope key, group size,
                        occupancy, queue delay, measured wall, flush
                        reason;
+  * ``alert``          one health-monitor state change (firing or
+                       cleared): the rule, the signal value that
+                       crossed it and the hysteresis shape — see
+                       ``repro.obs.monitor``;
   * ``run_meta`` / ``stream_eval`` / ``log``  driver context, held-out
                        per-day quality, and free-text lines that keep
                        their human-readable rendering.
+
+OBSERVERS: ``add_observer(fn)`` subscribes a callable to every record
+the ledger accepts (the health monitor's live feed). Observers run on
+the emitting thread AFTER the ledger lock is released, so an observer
+may itself emit (the monitor's alert records) without deadlocking.
 
 Records validate against :data:`SCHEMA` on emit (cheap dict checks) and
 again offline: ``python -m repro.obs.ledger --check run.jsonl`` is the
@@ -91,6 +100,11 @@ SCHEMA: dict[str, dict[str, dict[str, Any]]] = {
                      "flush_reason": str, "queue_delay_us": _NUM},
         "optional": {},
     },
+    "alert": {
+        "required": {"rule": str, "state": str, "signal": str,
+                     "value": _NUM, "threshold": _NUM},
+        "optional": {"op": str, "breach_n": int, "clear_n": int, "day": int},
+    },
 }
 
 
@@ -153,6 +167,7 @@ class RunLedger:
         self._validate = validate
         self._lock = threading.Lock()
         self._events: list[dict] = []
+        self._observers: list = []
         self._fh = None
         if path:
             parent = os.path.dirname(path)
@@ -171,7 +186,21 @@ class RunLedger:
                 self._events.append(event)
             if self._fh is not None:
                 self._fh.write(json.dumps(event, sort_keys=True) + "\n")
+        # outside the lock: an observer may emit back into this ledger
+        # (the monitor's alert records) without deadlocking
+        for fn in list(self._observers):
+            fn(event)
         return event
+
+    def add_observer(self, fn) -> None:
+        """Subscribe ``fn(event)`` to every accepted record (called on
+        the emitting thread, after the record is stored/written)."""
+        if fn not in self._observers:
+            self._observers.append(fn)
+
+    def remove_observer(self, fn) -> None:
+        if fn in self._observers:
+            self._observers.remove(fn)
 
     def events(self, kind: str | None = None) -> list[dict]:
         with self._lock:
@@ -204,6 +233,12 @@ class NullLedger:
 
     def events(self, kind: str | None = None) -> list[dict]:
         return []
+
+    def add_observer(self, fn) -> None:
+        return None
+
+    def remove_observer(self, fn) -> None:
+        return None
 
     def close(self) -> None:
         return None

@@ -30,7 +30,6 @@ from __future__ import annotations
 
 import itertools
 import json
-import os
 import threading
 from typing import Iterator
 
@@ -125,6 +124,10 @@ class Histogram:
 
     def observe(self, value: float) -> None:
         v = float(value)
+        if v != v:  # NaN would poison min/max (min(inf, nan) -> inf but
+            # max(-inf, nan) -> nan on some paths) and make quantile()
+            # return garbage; reject at the source where the bug is
+            raise ValueError(f"histogram {self.name!r}: NaN observation")
         # linear scan is fine: bucket ladders are tens of entries and
         # observations land near the front for sub-second walls
         idx = len(self.bounds)
@@ -149,7 +152,19 @@ class Histogram:
 
     def quantile(self, q: float) -> float:
         """Estimate the q-quantile (q in [0, 1]) by linear interpolation
-        inside the covering bucket, clamped to the observed range."""
+        inside the covering bucket, clamped to the observed range.
+
+        Edge cases (all tested in ``tests/test_obs.py``): an EMPTY
+        histogram returns 0.0 (there is no observed range to clamp to);
+        ``q=0`` returns the observed min and ``q=1`` the observed max
+        (the clamp, not extrapolation into the bucket bounds); a
+        SINGLE-observation series returns that value for every q.
+        ``q`` outside [0, 1] raises — a quantile request like 99 where
+        0.99 was meant must not silently clamp to the max."""
+        if not 0.0 <= q <= 1.0:
+            raise ValueError(
+                f"quantile q must be in [0, 1], got {q!r} "
+                f"(pass 0.99, not 99)")
         with self._lock:
             count = self._count
             counts = list(self._counts)
@@ -228,12 +243,13 @@ class MetricsRegistry:
 
     def write(self, path: str) -> str:
         """Snapshot to ``path``: ``.jsonl`` writes one series per line,
-        anything else one nested JSON document."""
-        parent = os.path.dirname(path)
-        if parent:
-            os.makedirs(parent, exist_ok=True)
+        anything else one nested JSON document. The write is ATOMIC
+        (temp file + ``os.replace``) — a crash mid-snapshot leaves the
+        previous file intact, never a truncated JSON artifact."""
+        from repro.obs.fileio import atomic_write
+
         snap = self.as_dict()
-        with open(path, "w") as f:
+        with atomic_write(path) as f:
             if path.endswith(".jsonl"):
                 for key, payload in sorted(snap.items()):
                     f.write(json.dumps({"series": key, **payload},

@@ -145,10 +145,11 @@ class Tracer:
         return {"traceEvents": self.events(), "displayTimeUnit": "ms"}
 
     def write(self, path: str) -> str:
-        parent = os.path.dirname(path)
-        if parent:
-            os.makedirs(parent, exist_ok=True)
-        with open(path, "w") as f:
+        """Atomic (temp + ``os.replace``): a crash mid-export leaves the
+        previous trace intact, never a truncated JSON document."""
+        from repro.obs.fileio import atomic_write
+
+        with atomic_write(path) as f:
             json.dump(self.to_chrome_trace(), f)
             f.write("\n")
         return path

@@ -167,12 +167,24 @@ def dequantize(quant: QuantizedArtifact) -> ServingArtifact:
                            num_features=quant.num_features)
 
 
-def save_artifact(path: str, artifact: ServingArtifact | QuantizedArtifact) -> str:
+def save_artifact(path: str, artifact: ServingArtifact | QuantizedArtifact,
+                  *, drift_ref=None) -> str:
     """Write either artifact form as a flat npz via
     ``repro.io.checkpoint`` (npz keeps the int8/fp32 dtypes, so a
     quantised save really is ~4x smaller). Returns the real path
-    written (``.npz`` appended when missing)."""
-    return checkpoint.save(path, artifact)
+    written (``.npz`` appended when missing).
+
+    ``drift_ref`` (a :class:`repro.obs.drift.DriftReference`) embeds the
+    training-time drift-reference snapshot under ``drift_ref/*`` keys in
+    the same file, so one deploy artifact also arms the serving health
+    monitor (``repro.obs.load_drift_reference`` reads it back from the
+    artifact path). :func:`load_artifact` picks only the artifact's own
+    fields, so an embedded reference never changes what gets served."""
+    if drift_ref is None:
+        return checkpoint.save(path, artifact)
+    tree = {f: getattr(artifact, f) for f in artifact._fields}
+    tree["drift_ref"] = drift_ref
+    return checkpoint.save(path, tree)
 
 
 def load_artifact(path: str) -> ServingArtifact | QuantizedArtifact:

@@ -87,9 +87,13 @@ class QueueStats:
                          for r in self._REASONS}
         self._delay_hist = reg.histogram("serve_queue_delay_seconds",
                                          **labels)
+        self._pending = reg.gauge("serve_queue_pending", **labels)
 
     def note_accept(self) -> None:
         self._accepted.inc(1.0)
+
+    def note_pending(self, n: int) -> None:
+        self._pending.set(float(n))
 
     def note_reject(self) -> None:
         self._rejected.inc(1.0)
@@ -162,6 +166,7 @@ class MicroBatchQueue:
         group = self._pending.setdefault(env, [])
         group.append((ticket, request, now))
         self.stats.note_accept()
+        self.stats.note_pending(self.pending)
         if len(group) >= self.config.max_batch:
             self._flush(env, now, "full")
         return ticket
@@ -198,6 +203,7 @@ class MicroBatchQueue:
         # the figure the deadline bounds
         queue_delay_s = max(0.0, started - entries[0][2])
         self.stats.note_flush(reason, queue_delay_s)
+        self.stats.note_pending(self.pending)
         before = self.engine.stats.score_seconds
         with self.engine.dispatch_context(reason, queue_delay_s * 1e6):
             scores = self.engine.score_batch([r for _, r, _ in entries])

@@ -59,6 +59,28 @@ def test_histogram_quantiles_interpolate_and_clamp():
     # clamped to the observed range, never extrapolated into the bucket
     assert single.quantile(0.99) == pytest.approx(0.42)
     assert reg.histogram("empty").quantile(0.5) == 0.0
+    # empty histogram: every q (including the edges) reads 0.0
+    assert reg.histogram("empty").quantile(0.0) == 0.0
+    assert reg.histogram("empty").quantile(1.0) == 0.0
+    # single observation: every q collapses to that value
+    assert single.quantile(0.0) == pytest.approx(0.42)
+    assert single.quantile(0.5) == pytest.approx(0.42)
+    assert single.quantile(1.0) == pytest.approx(0.42)
+
+
+def test_histogram_rejects_out_of_range_q_and_nan():
+    reg = MetricsRegistry()
+    h = reg.histogram("lat")
+    h.observe(1e-3)
+    with pytest.raises(ValueError, match=r"pass 0.99, not 99"):
+        h.quantile(99)
+    with pytest.raises(ValueError, match="must be in"):
+        h.quantile(-0.1)
+    # NaN would silently poison min/max and every later quantile
+    with pytest.raises(ValueError, match="NaN observation"):
+        h.observe(float("nan"))
+    assert h.count == 1  # the rejected observation left no trace
+    assert h.quantile(1.0) == pytest.approx(1e-3)
 
 
 def test_registry_write_jsonl_and_json(tmp_path):
@@ -78,6 +100,60 @@ def test_registry_write_jsonl_and_json(tmp_path):
     p2 = reg.write(str(tmp_path / "m.json"))
     doc = json.load(open(p2))
     assert doc["b"] == {"type": "gauge", "value": 7.0}
+
+
+# ------------------------------------------------------- atomic writes
+def test_atomic_write_interruption_preserves_previous_file(tmp_path):
+    from repro.obs.fileio import atomic_write
+
+    target = tmp_path / "snap.json"
+    with atomic_write(str(target)) as f:
+        f.write("good")
+    assert target.read_text() == "good"
+
+    # a crash mid-write must leave the previous bytes, not a prefix
+    with pytest.raises(RuntimeError, match="simulated crash"):
+        with atomic_write(str(target)) as f:
+            f.write("partial garbage that must never be seen")
+            raise RuntimeError("simulated crash")
+    assert target.read_text() == "good"
+    # and no temp litter survives the failure
+    assert [p.name for p in tmp_path.iterdir()] == ["snap.json"]
+
+    with pytest.raises(ValueError, match="write mode"):
+        with atomic_write(str(target), mode="r"):
+            pass
+
+
+def test_registry_and_tracer_writes_are_atomic(tmp_path, monkeypatch):
+    import repro.obs.fileio as fileio
+
+    reg = MetricsRegistry()
+    reg.counter("a").inc()
+    mpath = str(tmp_path / "m.json")
+    reg.write(mpath)
+    tr = Tracer(enabled=True)
+    with tr.span("w"):
+        pass
+    tpath = str(tmp_path / "t.json")
+    tr.write(tpath)
+    before_m, before_t = open(mpath).read(), open(tpath).read()
+
+    def boom(src, dst):
+        raise RuntimeError("simulated replace crash")
+
+    monkeypatch.setattr(fileio.os, "replace", boom)
+    reg.counter("a").inc()
+    with pytest.raises(RuntimeError):
+        reg.write(mpath)
+    with tr.span("w2"):
+        pass
+    with pytest.raises(RuntimeError):
+        tr.write(tpath)
+    # both snapshots still read as complete documents from BEFORE
+    assert open(mpath).read() == before_m
+    assert open(tpath).read() == before_t
+    json.load(open(mpath)), json.load(open(tpath))
 
 
 # -------------------------------------------------------------- tracing
@@ -168,6 +244,45 @@ def test_ledger_schema_rejects_bad_records():
     led = obs.RunLedger(None)
     with pytest.raises(ValueError, match="invalid ledger record"):
         led.emit("train_iter", step="zero")
+
+
+def test_alert_records_validate_like_any_other_kind():
+    good = {"kind": "alert", "rule": "p99", "state": "firing",
+            "signal": "serve.p99_wall_us", "value": 3e5, "threshold": 2.5e5}
+    assert validate_event(good) is None
+    assert validate_event({**good, "op": "<=", "breach_n": 3,
+                           "clear_n": 3}) is None
+    assert "missing required" in validate_event(
+        {"kind": "alert", "rule": "p99"})
+    assert "expected str" in validate_event({**good, "state": 1})
+    led = obs.RunLedger(None)
+    with pytest.raises(ValueError, match="invalid ledger record"):
+        led.emit("alert", rule="r", state="firing", signal="s",
+                 value="high", threshold=1.0)
+
+
+def test_ledger_observers_see_records_and_can_emit_back():
+    led = obs.RunLedger(None)
+    seen: list[dict] = []
+
+    def observer(event):
+        seen.append(event["kind"])
+        # re-entrant emit from inside an observer must not deadlock
+        # (observers run outside the ledger lock)
+        if event["kind"] == "log":
+            led.emit("alert", rule="r", state="firing", signal="s",
+                     value=1.0, threshold=0.5)
+
+    led.add_observer(observer)
+    led.add_observer(observer)  # deduped: one subscription
+    led.emit("log", text="x")
+    assert seen == ["log", "alert"]
+    led.remove_observer(observer)
+    led.emit("log", text="y")
+    assert seen == ["log", "alert"]
+    # the null ledger accepts (and ignores) observers
+    obs.NULL_LEDGER.add_observer(observer)
+    obs.NULL_LEDGER.remove_observer(observer)
 
 
 def test_null_ledger_is_inert():

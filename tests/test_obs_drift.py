@@ -1,0 +1,242 @@
+"""Drift detection (``repro.obs.drift``): reference capture, PSI/KL,
+the rolling trackers, persistence (standalone + artifact-embedded), and
+the end-to-end detector check — the id-traffic PSI must fire on a
+replay of :class:`~repro.stream.source.DayStream`'s planted drift and
+stay silent on the stationary control at the same thresholds."""
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.obs.drift import _RollingCounts, capture_reference, kl, psi
+
+
+def _eval_pass(seed=0, n=4000, d=1000, hot=0.8):
+    """Synthetic eval pass with a hot-headed id distribution (geometric
+    over the first ids, like DayStream's exponential head)."""
+    rng = np.random.default_rng(seed)
+    p = rng.uniform(0.02, 0.9, n)
+    y = (rng.uniform(size=n) < p).astype(np.float64)
+    ids = np.minimum(rng.geometric(1 - hot, size=(n, 8)) - 1, d - 1)
+    return p, y, ids
+
+
+# ------------------------------------------------------------ reference
+def test_capture_reference_shapes_and_conservation():
+    p, y, ids = _eval_pass()
+    ref = capture_reference(p, y, ids, num_features=1000, bins=10, top_m=32)
+    assert ref.num_bins == 10
+    assert ref.score_edges.shape == (11,)
+    assert ref.score_counts.sum() == p.size
+    assert ref.bucket_p.sum() == pytest.approx(p.sum())
+    assert ref.bucket_y.sum() == pytest.approx(y.sum())
+    assert ref.top_ids.shape == (32,)
+    assert np.all(np.diff(ref.top_ids) > 0)  # sorted, unique
+    assert ref.top_counts.shape == (33,)  # +1 tail bucket
+    assert ref.top_counts.sum() == ids.size  # every real id counted once
+    assert 0.5 < ref.ratio < 2.0
+    assert ref.bucket_ratios().shape == (10,)
+
+
+def test_capture_reference_drops_pad_ids_and_validates():
+    p, y, ids = _eval_pass(n=500)
+    padded = np.concatenate([ids.ravel(), np.full(100, -1),
+                             np.full(100, 5000)])
+    ref = capture_reference(p, y, padded, num_features=1000)
+    assert ref.top_counts.sum() == ids.size  # pads never counted
+    with pytest.raises(ValueError, match="non-empty"):
+        capture_reference([], [], ids, num_features=1000)
+    with pytest.raises(ValueError, match="disagree"):
+        capture_reference(p, y[:-1], ids, num_features=1000)
+    with pytest.raises(ValueError, match="no real"):
+        capture_reference(p, y, np.full(10, -1), num_features=1000)
+
+
+def test_capture_reference_fewer_ids_than_top_m():
+    p, y, _ = _eval_pass(n=100)
+    ids = np.array([3, 3, 7, 7, 7, 11])
+    ref = capture_reference(p, y, ids, num_features=1000, top_m=128)
+    assert ref.top_ids.tolist() == [3, 7, 11]
+    assert ref.top_counts.tolist() == [2, 3, 1, 0]  # counts + empty tail
+
+
+# ---------------------------------------------------------- divergences
+def test_psi_and_kl_basics():
+    a = np.array([100, 200, 300, 400])
+    assert psi(a, a * 7) == pytest.approx(0.0)  # scale-invariant
+    assert kl(a, 3 * a) == pytest.approx(0.0)
+    shifted = np.array([400, 300, 200, 100])
+    assert psi(a, shifted) > 0.25  # a real shift reads as drifted
+    assert kl(a, shifted) > 0.0
+    assert psi(np.array([1000, 0]), np.array([0, 1000])) > 1.0  # finite
+    with pytest.raises(ValueError, match="empty"):
+        psi(np.zeros(3), a[:3])
+
+
+def test_rolling_counts_chunked_eviction():
+    roll = _RollingCounts(4, capacity=100)
+    roll.add(np.zeros(60, np.int64))
+    roll.add(np.full(60, 1, np.int64))
+    # 120 > 100: the oldest chunk evicts whole, leaving the newest 60
+    assert roll.total == 60
+    assert roll.counts.tolist() == [0, 60, 0, 0]
+    roll.add(np.full(200, 2, np.int64))  # one oversized chunk stays
+    assert roll.total == 200
+    assert roll.counts.tolist() == [0, 0, 200, 0]
+    roll.add(np.array([], dtype=np.int64))  # no-op
+    assert roll.total == 200
+
+
+# ------------------------------------------------------------- trackers
+def test_score_tracker_warmup_then_detects_shift():
+    p, y, ids = _eval_pass()
+    ref = capture_reference(p, y, ids, num_features=1000)
+    trk = obs.ScoreDriftTracker(ref, window=4096, min_count=256)
+    assert trk.psi() is None and trk.kl() is None  # cold: no verdict
+    rng = np.random.default_rng(1)
+    trk.update(rng.uniform(0.02, 0.9, 1000))  # same distribution
+    assert trk.ready
+    assert trk.psi() < 0.1
+    # rolling window forgets: flood with a shifted distribution
+    trk.update(rng.uniform(0.8, 0.99, 5000))
+    assert trk.psi() > 0.25
+    assert trk.kl() > 0.0
+
+
+def test_id_tracker_fires_on_head_rotation_only():
+    p, y, ids = _eval_pass(hot=0.9)
+    ref = capture_reference(p, y, ids, num_features=1000)
+    rng = np.random.default_rng(2)
+    same = obs.IdTrafficTracker(ref, min_count=512)
+    same.update(np.minimum(rng.geometric(0.1, size=8000) - 1, 999))
+    assert same.psi() < 0.1
+    rotated = obs.IdTrafficTracker(ref, min_count=512)
+    # the hot head moved: same shape, different ids (DayStream's drift)
+    rotated.update(np.minimum(500 + rng.geometric(0.1, size=8000) - 1, 999))
+    assert rotated.psi() > 0.25
+    # pad ids are dropped, never counted
+    pads = obs.IdTrafficTracker(ref, min_count=1)
+    pads.update(np.full(100, -1))
+    assert not pads.ready
+
+
+def test_calibration_tracker_rolling_ratio_and_bucket_dev():
+    p, y, ids = _eval_pass()
+    ref = capture_reference(p, y, ids, num_features=1000)
+    trk = obs.CalibrationTracker(ref, window=4096, min_count=64)
+    assert trk.ratio() is None
+    trk.update(p[:2000], y[:2000])  # calibrated by construction
+    assert trk.ratio() == pytest.approx(1.0, abs=0.1)
+    # per-bucket ratios are click-count noisy; just bounded, not tight
+    assert trk.max_bucket_deviation() < 1.0
+    # an over-predicting model pushes the ratio up
+    over = obs.CalibrationTracker(ref, min_count=64)
+    over.update(np.clip(p[:2000] * 2.0, 0, 1), y[:2000])
+    assert over.ratio() > 1.5
+    with pytest.raises(ValueError, match="disagree"):
+        trk.update(p[:5], y[:4])
+
+
+# ----------------------------------------------------------- persistence
+def test_reference_roundtrip_standalone_and_artifact_embedded(tmp_path):
+    import jax.numpy as jnp
+
+    from repro.serve import compress, load_artifact, save_artifact
+
+    p, y, ids = _eval_pass(n=600, d=300)
+    ref = capture_reference(p, y, ids, num_features=300)
+    path = obs.save_drift_reference(str(tmp_path / "ref"), ref)
+    back = obs.load_drift_reference(path)
+    for field in ref._fields:
+        np.testing.assert_array_equal(np.asarray(getattr(ref, field)),
+                                      np.asarray(getattr(back, field)))
+
+    # embedded in a serving artifact: same loader, artifact unchanged
+    rng = np.random.default_rng(0)
+    theta = jnp.asarray(rng.normal(size=(300, 4)).astype(np.float32))
+    theta = theta.at[100:].set(0.0)
+    art = compress(theta)
+    plain = save_artifact(str(tmp_path / "plain"), art)
+    embedded = save_artifact(str(tmp_path / "emb"), art, drift_ref=ref)
+    back2 = obs.load_drift_reference(embedded)
+    np.testing.assert_array_equal(back2.top_counts, ref.top_counts)
+    a0, a1 = load_artifact(plain), load_artifact(embedded)
+    np.testing.assert_array_equal(np.asarray(a0.theta), np.asarray(a1.theta))
+    np.testing.assert_array_equal(np.asarray(a0.remap), np.asarray(a1.remap))
+    with pytest.raises(ValueError, match="no drift reference"):
+        obs.load_drift_reference(plain)
+
+
+# -------------------------------------------- end-to-end on DayStream
+def _day_requests(batch, sessions, ads_per=2):
+    """Turn one DayStream day into engine bundle requests (user block +
+    a couple of its ad rows per request)."""
+    from repro.serve.engine import BundleRequest
+
+    reqs = []
+    ui = np.asarray(batch.user_ids)
+    uv = np.asarray(batch.user_vals)
+    ai = np.asarray(batch.ad_ids)
+    av = np.asarray(batch.ad_vals)
+    per = ai.shape[0] // ui.shape[0]
+    for s in range(ui.shape[0]):
+        rows = slice(s * per, s * per + ads_per)
+        reqs.append(BundleRequest(user_ids=ui[s], user_vals=uv[s],
+                                  ad_ids=ai[rows], ad_vals=av[rows]))
+    return reqs
+
+
+@pytest.mark.parametrize("drift,expect_alert", [(0.5, True), (0.0, False)])
+def test_id_psi_detector_on_daystream_replay(drift, expect_alert):
+    """The planted-drift acceptance check: day 0 is IDENTICAL across
+    drift values (the rotation offset is drift*day*span = 0), so one
+    day-0 reference serves both replays; the drifted stream's later days
+    must fire the id-PSI rule and the stationary stream must not."""
+    import jax.numpy as jnp
+
+    from repro.serve import ScoringEngine
+    from repro.stream import DayStream
+
+    d, sessions = 2000, 64
+    stream = DayStream(6, sessions_per_day=sessions, num_features=d,
+                       drift=drift, seed=3)
+    day0 = stream.day(0)
+    rng = np.random.default_rng(4)
+    theta = jnp.asarray(0.05 * rng.normal(size=(d, 4)).astype(np.float32))
+
+    # reference from day-0 traffic (scores/labels only matter for the
+    # calibration tracker, which this rule set never consults)
+    ids0 = np.concatenate([np.asarray(day0.user_ids).ravel(),
+                           np.asarray(day0.ad_ids).ravel()])
+    scores0 = np.random.default_rng(5).uniform(0.05, 0.95, 4000)
+    labels0 = (np.random.default_rng(6).uniform(size=4000) < scores0)
+    ref = capture_reference(scores0, labels0.astype(float), ids0,
+                            num_features=d)
+
+    # evaluate every 32 dispatches so the rule only ever judges a warm
+    # window (>= 1024 rolling ids) — early tiny samples are pure noise
+    led = obs.RunLedger(None)
+    mon = obs.HealthMonitor(
+        [obs.parse_rule("drift.id_psi <= 0.25 for 2/2")],
+        eval_every=32).attach(led)
+    mon.arm_drift(ref, id_window=1 << 16, min_count=1024)
+    prev = obs.set_monitor(mon)
+    prev_led = obs.set_ledger(led)
+    try:
+        engine = ScoringEngine(theta)
+        for day in (4, 5):  # 4-5 days of rotation at drift=0.5
+            for req in _day_requests(stream.day(day), sessions,
+                                     ads_per=4):
+                engine.score(req)
+        mon.evaluate()
+    finally:
+        obs.set_monitor(prev)
+        obs.set_ledger(prev_led)
+
+    fired = [a for a in mon.alerts() if a["state"] == "firing"]
+    if expect_alert:
+        assert fired, f"drifted replay stayed silent: {mon.signals()}"
+        assert fired[0]["rule"] == "drift.id_psi"
+        assert led.events("alert"), "alert never reached the ledger"
+    else:
+        assert not fired, f"stationary replay alerted: {fired}"
+        assert mon.signals()["drift.id_psi"] is not None  # warm, just OK

@@ -31,7 +31,8 @@ def _contains(outer: dict, inner: dict) -> bool:
 def stream_run(tmp_path_factory):
     tmp = tmp_path_factory.mktemp("obs_launch")
     paths = {"ledger": tmp / "run.jsonl", "trace": tmp / "trace.json",
-             "metrics": tmp / "metrics.jsonl"}
+             "metrics": tmp / "metrics.jsonl", "report": tmp / "report.md",
+             "drift_ref": tmp / "dref.npz"}
     env = dict(os.environ, PYTHONPATH="src")
     proc = subprocess.run(
         [sys.executable, "-m", "repro.launch.train", "--stream",
@@ -40,7 +41,10 @@ def stream_run(tmp_path_factory):
          "--sparse-features", "1200", "--iters", "2",
          "--ledger-out", str(paths["ledger"]),
          "--trace-out", str(paths["trace"]),
-         "--metrics-out", str(paths["metrics"])],
+         "--metrics-out", str(paths["metrics"]),
+         "--report-out", str(paths["report"]),
+         "--drift-ref", str(paths["drift_ref"]),
+         "--monitor"],
         capture_output=True, text=True, timeout=600, env=env,
         cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
     assert proc.returncode == 0, proc.stderr
@@ -134,5 +138,54 @@ def test_metrics_snapshot_and_console_text(stream_run):
     assert len(day_lines) == DAYS
     assert "plan=" in day_lines[0] and "step=" in day_lines[0]
     assert "next-day nll=" in day_lines[0]
-    assert lines[-1].startswith(f"trained {DAYS} windows in ")
-    assert "overlap ratio" in lines[-1]
+    (trained,) = [ln for ln in lines if ln.startswith("trained ")]
+    assert trained.startswith(f"trained {DAYS} windows in ")
+    assert "overlap ratio" in trained
+
+
+@pytest.mark.slow
+def test_report_reconstructs_stdout_numbers_bit_identically(stream_run):
+    from repro.obs import report
+
+    paths, proc = stream_run
+    recs = obs.read_jsonl(str(paths["ledger"]))
+    rep = report.build_report(recs)
+    text = paths["report"].read_text()
+
+    # the next-day decay table carries the EXACT {:.4f} strings the
+    # driver printed to the console during the run
+    day_lines = [ln for ln in proc.stdout.splitlines()
+                 if "next-day nll=" in ln]
+    assert len(day_lines) == DAYS - 1
+    for row, line in zip(rep["decay"], day_lines):
+        nll_str = f"{row['next_day_nll']:.4f}"
+        auc_str = f"{row['next_day_auc']:.4f}"
+        assert f"next-day nll={nll_str} auc={auc_str}" in line
+        assert f"| {nll_str} |" in text  # and the table agrees
+
+    # per-iteration convergence: the report rebuilds the ledger's
+    # NLL/nnz curve completely and in order
+    iters = [r for r in recs if r["kind"] == "train_iter"]
+    assert [r["f_new"] for r in rep["convergence"]["rows"]] == \
+        [r["f_new"] for r in iters]
+    assert [r["nnz"] for r in rep["convergence"]["rows"]] == \
+        [r["nnz"] for r in iters]
+    for row in rep["convergence"]["rows"]:
+        assert row["line"] in text  # reconstructed console block
+
+    # --monitor ran: any alert records it emitted are schema-valid
+    # (quality rules may or may not fire on a 2-iter smoke model)
+    assert obs.validate_file(str(paths["ledger"])) == []
+
+
+@pytest.mark.slow
+def test_drift_ref_written_and_arms_a_monitor(stream_run):
+    paths, proc = stream_run
+    assert "drift reference (last held-out day" in proc.stdout
+    ref = obs.load_drift_reference(str(paths["drift_ref"]))
+    assert ref.num_features == 1200
+    assert ref.score_counts.sum() > 0
+    mon = obs.HealthMonitor(registry=obs.MetricsRegistry())
+    mon.arm_drift(ref, min_count=1)
+    mon.observe_scores([0.5] * 8)
+    assert mon.signals()["drift.score_psi"] is not None

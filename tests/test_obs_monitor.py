@@ -1,0 +1,208 @@
+"""SLO monitoring (``repro.obs.monitor``): rule parsing, rolling
+windows, hysteresis semantics, the ledger-observer feed, alert records
+and registry views, reentrancy safety, and the configure() wiring."""
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.obs.ledger import validate_event
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.monitor import HealthMonitor, RollingWindow, parse_rule
+
+
+# ------------------------------------------------------- rolling window
+def test_rolling_window_views_and_bound():
+    w = RollingWindow(maxlen=4)
+    assert w.percentile(99) is None and w.mean() is None and w.last() is None
+    for v in (1.0, 2.0, 3.0, 4.0, 5.0):
+        w.push(v)
+    assert len(w) == 4  # the 1.0 fell out
+    assert w.last() == 5.0
+    assert w.mean() == pytest.approx(3.5)
+    assert w.percentile(0) == 2.0
+    assert w.percentile(100) == 5.0
+
+
+# --------------------------------------------------------- rule parsing
+def test_parse_rule_forms():
+    r = parse_rule("serve.p99_wall_us <= 250000")
+    assert r == ("serve.p99_wall_us", "serve.p99_wall_us", "<=",
+                 250000.0, 3, 3)
+    named = parse_rule("lat: serve.p99_wall_us <= 2.5e5 for 5/2")
+    assert named.name == "lat"
+    assert named.threshold == 2.5e5
+    assert (named.breach_n, named.clear_n) == (5, 2)
+    above = parse_rule("calib.ratio >= 0.75")
+    assert above.ok(0.8) and not above.ok(0.5)
+    below = parse_rule("drift.id_psi <= 0.25")
+    assert below.ok(0.1) and not below.ok(0.3)
+    for bad in ("nonsense", "sig < 5", "sig <= ", "sig <= 1 for 0/3"):
+        with pytest.raises(ValueError):
+            parse_rule(bad)
+
+
+def _dispatch(led, wall_s=0.001, occupancy=1.0, qdelay=0.0):
+    led.emit("serve_dispatch", envelope=[1, 8, 8, 4], g=1, requests=1,
+             candidates=4, occupancy=occupancy, wall_s=wall_s,
+             flush_reason="direct", queue_delay_us=qdelay)
+
+
+# ----------------------------------------------------------- hysteresis
+def test_hysteresis_fire_and_clear_on_consecutive_windows():
+    led = obs.RunLedger(None)
+    reg = MetricsRegistry()
+    mon = HealthMonitor([parse_rule("serve.p99_wall_us <= 1000 for 3/2")],
+                        window=4, eval_every=1, registry=reg).attach(led)
+    # 2 breaching evals: not yet (hysteresis holds)
+    _dispatch(led, wall_s=0.01)
+    _dispatch(led, wall_s=0.01)
+    assert mon.alerts() == []
+    _dispatch(led, wall_s=0.01)  # 3rd consecutive: FIRES
+    assert [a["state"] for a in mon.alerts()] == ["firing"]
+    assert mon.active_alerts() == ["serve.p99_wall_us"]
+    # steady breach: no re-emission (state changes only)
+    _dispatch(led, wall_s=0.01)
+    assert len(mon.alerts()) == 1
+    # window=4 forgets the slow dispatches after enough fast ones
+    _dispatch(led, wall_s=1e-5)
+    assert [a["state"] for a in mon.alerts()] == ["firing"]  # 1 OK: holds
+    for _ in range(4):
+        _dispatch(led, wall_s=1e-5)
+    assert [a["state"] for a in mon.alerts()] == ["firing", "cleared"]
+    assert mon.active_alerts() == []
+    # every emitted record validates against the ledger schema
+    for a in led.events("alert"):
+        assert validate_event(a) is None
+
+
+def test_one_noisy_window_never_fires_and_breach_counter_resets():
+    led = obs.RunLedger(None)
+    mon = HealthMonitor([parse_rule("serve.occupancy >= 0.5 for 3/3")],
+                        window=1, eval_every=1,
+                        registry=MetricsRegistry()).attach(led)
+    for occ in (0.1, 0.1, 0.9, 0.1, 0.1, 0.9):  # never 3 in a row
+        _dispatch(led, occupancy=occ)
+    assert mon.alerts() == []
+
+
+def test_cold_signals_are_skipped_not_breached():
+    reg = MetricsRegistry()
+    mon = HealthMonitor([parse_rule("drift.score_psi <= 0.25"),
+                         parse_rule("eval.next_day_nll <= 0.5")],
+                        registry=reg)
+    assert mon.evaluate() == []  # nothing warm: no rule evaluates
+    sigs = mon.signals()
+    assert sigs["drift.score_psi"] is None
+    assert sigs["serve.p99_wall_us"] is None
+
+
+def test_stream_eval_records_feed_eval_signals():
+    led = obs.RunLedger(None)
+    mon = HealthMonitor([parse_rule("eval.next_day_nll <= 0.5 for 2/2")],
+                        eval_every=1, registry=MetricsRegistry()).attach(led)
+    led.emit("stream_eval", day=0, next_day_nll=0.9, next_day_auc=0.5)
+    led.emit("stream_eval", day=1, next_day_nll=0.9, next_day_auc=0.5)
+    assert [a["state"] for a in mon.alerts()] == ["firing"]
+    assert mon.signals()["eval.next_day_nll"] == 0.9
+    assert mon.signals()["eval.next_day_auc"] == 0.5
+
+
+def test_registry_alert_series_and_queue_signals():
+    led = obs.RunLedger(None)
+    reg = MetricsRegistry()
+    prev_reg = obs.set_registry(reg)
+    try:
+        mon = HealthMonitor([parse_rule("queue.pending <= 2 for 1/1")],
+                            eval_every=1, registry=reg).attach(led)
+        reg.gauge("serve_queue_pending", queue="9").set(5.0)
+        _dispatch(led)
+        assert mon.active_alerts() == ["queue.pending"]
+        snap = reg.as_dict()
+        assert snap["obs_alerts{rule=queue.pending,state=firing}"][
+            "value"] == 1.0
+        assert snap["obs_alert_active{rule=queue.pending}"]["value"] == 1.0
+        reg.gauge("serve_queue_pending", queue="9").set(0.0)
+        _dispatch(led)
+        assert mon.active_alerts() == []
+        assert reg.as_dict()["obs_alert_active{rule=queue.pending}"][
+            "value"] == 0.0
+    finally:
+        obs.set_registry(prev_reg)
+
+
+def test_queue_updates_pending_gauge():
+    import jax.numpy as jnp
+
+    from repro.serve import MicroBatchQueue, QueueConfig, ScoringEngine
+    from repro.serve import synthetic_requests
+
+    rng = np.random.default_rng(0)
+    theta = jnp.asarray(rng.normal(size=(300, 6)).astype(np.float32) * 0.3)
+    reqs = synthetic_requests(3, num_features=300, seed=1,
+                              k_user=(4, 4), k_ad=(2, 2), n_ads=(3, 3))
+    queue = MicroBatchQueue(ScoringEngine(theta),
+                            QueueConfig(max_batch=8, max_delay_us=1e6))
+    gauge = queue.stats._pending
+    queue.submit(reqs[0], now=0.0)
+    queue.submit(reqs[1], now=1e-5)
+    assert gauge.value == float(queue.pending) > 0
+    queue.drain(now=1.0)
+    assert gauge.value == 0.0 == float(queue.pending)
+
+
+def test_monitor_reentrancy_alert_records_are_not_reingested():
+    # the monitor alerts INTO the ledger it observes; its own alert
+    # records must not recurse back through ingest
+    led = obs.RunLedger(None)
+    mon = HealthMonitor([parse_rule("serve.occupancy >= 0.9 for 1/1")],
+                        eval_every=1, registry=MetricsRegistry()).attach(led)
+    _dispatch(led, occupancy=0.1)  # fires inside the observer callback
+    assert [a["state"] for a in mon.alerts()] == ["firing"]
+    assert len(led.events("alert")) == 1  # exactly one, no echo
+
+    mon.detach()
+    _dispatch(led, occupancy=0.1)
+    assert len(led.events("serve_dispatch")) == 2
+    assert len(mon.alerts()) == 1  # detached: no longer listening
+
+
+def test_null_monitor_is_inert_and_is_the_default():
+    assert obs.get_monitor() is obs.NULL_MONITOR
+    assert obs.NULL_MONITOR.enabled is False
+    obs.NULL_MONITOR.observe_scores(np.array([0.5]))
+    obs.NULL_MONITOR.observe_ids(np.array([1]))
+    obs.NULL_MONITOR.observe_predictions(np.array([0.5]), np.array([1.0]))
+    obs.NULL_MONITOR.ingest({"kind": "serve_dispatch"})
+    assert obs.NULL_MONITOR.evaluate() == []
+    assert obs.NULL_MONITOR.alerts() == []
+    assert obs.NULL_MONITOR.summary()["alerts"] == 0
+
+
+def test_configure_monitor_installs_and_restores_default(tmp_path):
+    report = tmp_path / "report.md"
+    session = obs.configure(monitor=True, report_out=str(report),
+                            meta={"driver": "test", "mode": "unit"})
+    try:
+        mon = obs.get_monitor()
+        assert mon.enabled and isinstance(mon, HealthMonitor)
+        assert obs.get_ledger().enabled  # monitor implied a ledger
+        _dispatch(obs.get_ledger())
+    finally:
+        session.close()
+    assert obs.get_monitor() is obs.NULL_MONITOR
+    text = report.read_text()
+    assert text.startswith("# Run report")
+    assert "serve_dispatch" in text  # the dispatch made it to the report
+
+
+def test_default_rules_cover_documented_signals():
+    from repro.obs.monitor import default_rules
+
+    rules = default_rules()
+    signals = {r.signal for r in rules}
+    assert {"serve.p99_wall_us", "serve.p99_queue_delay_us",
+            "serve.occupancy", "calib.ratio", "drift.score_psi",
+            "drift.id_psi"} <= signals
+    mon = HealthMonitor(registry=MetricsRegistry())  # default set loads
+    known = set(mon.signals())
+    assert signals <= known

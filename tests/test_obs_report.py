@@ -1,0 +1,125 @@
+"""The ledger analytics CLI (``repro.obs.report``): section folding,
+md/html rendering, bit-identical reconstruction of driver console
+lines, and the CLI's error paths. Everything here feeds on ledger
+records only — no model, data, or clock ever enters the report."""
+import json
+
+import pytest
+
+from repro import obs
+from repro.obs import report
+from repro.obs.ledger import render_train_iter
+
+
+def _ledger(path=None):
+    led = obs.RunLedger(path)
+    led.emit("run_meta", driver="repro.launch.train", mode="stream",
+             backend="cpu", device_count=1, argv=["--stream"])
+    for k, (f, nnz) in enumerate([(100.0, 50), (90.0, 40), (85.5, 38)]):
+        led.emit("train_iter", step=k, f=f + 1, f_new=f, alpha=0.5,
+                 grad_norm=0.1, nnz=nnz, ls_iters=1, test_auc=0.7 + k / 100)
+    led.emit("stream_window", day=0, days_in_window=1, plan_s=0.01,
+             compile_s=0.1, build_s=0.02, wait_s=0.0, prefetched=False,
+             step_s=0.2, carry="reset", alpha=0.5, nnz=38, fs=[2.0, 1.5])
+    led.emit("stream_eval", day=0, next_day_nll=0.512345,
+             next_day_auc=0.698765)
+    led.emit("stream_summary", windows=2, build_seconds=0.1,
+             wait_seconds=0.02, prefetched_build_seconds=0.05,
+             prefetched_wait_seconds=0.01, overlap_ratio=0.8)
+    for reason, wall in (("full", 0.002), ("deadline", 0.001),
+                         ("full", 0.003)):
+        led.emit("serve_dispatch", envelope=[4, 8, 8, 2], g=4, requests=4,
+                 candidates=8, occupancy=1.0, wall_s=wall,
+                 flush_reason=reason, queue_delay_us=100.0)
+    led.emit("alert", rule="lat", state="firing",
+             signal="serve.p99_wall_us", value=3000.0, threshold=2500.0,
+             op="<=")
+    return led
+
+
+def test_build_report_sections():
+    rep = report.build_report(_ledger().events())
+    assert rep["records"] == 11
+    assert rep["kinds"]["train_iter"] == 3
+    assert rep["meta"]["driver"] == "repro.launch.train"
+    conv = rep["convergence"]
+    assert conv["iters"] == 3
+    assert (conv["f_first"], conv["f_last"]) == (100.0, 85.5)
+    assert conv["nnz_last"] == 38
+    assert rep["decay"] == [{"day": 0, "next_day_nll": 0.512345,
+                             "next_day_auc": 0.698765}]
+    assert rep["windows"]["count"] == 1
+    assert rep["windows"]["overlap_ratio"] == 0.8
+    serving = rep["serving"]
+    assert serving["dispatches"] == 3
+    assert serving["requests"] == 12
+    assert serving["flush_mix"]["full"]["dispatches"] == 2
+    assert serving["wall_p50_us"] == pytest.approx(2000.0)
+    assert rep["alerts"][0]["rule"] == "lat"
+
+
+def test_report_reconstructs_console_lines_bit_identically():
+    led = _ledger()
+    rep = report.build_report(led.events())
+    # the exact strings the driver printed during the run, rebuilt from
+    # ledger records alone
+    want = [render_train_iter(r) for r in led.events("train_iter")]
+    assert [r["line"] for r in rep["convergence"]["rows"]] == want
+    md = report.render_md(rep)
+    for line in want:
+        assert line in md
+    # the decay table carries the driver's own {:.4f} formatting
+    assert "0.5123" in md and "0.6988" in md
+
+
+def test_render_md_and_html_agree_on_numbers():
+    rep = report.build_report(_ledger().events())
+    md, html_doc = report.render_md(rep), report.render_html(rep)
+    for token in ("85.50", "0.5123", "firing", "deadline", "full"):
+        assert token in md, token
+        assert token in html_doc, token
+    assert html_doc.startswith("<!doctype html>")
+    assert "<script" not in html_doc  # self-contained, no external deps
+
+
+def test_report_without_serving_or_alert_records():
+    led = obs.RunLedger(None)
+    led.emit("log", text="just a log line")
+    rep = report.build_report(led.events())
+    assert "serving" not in rep and "convergence" not in rep
+    md = report.render_md(rep)
+    assert "## Alerts" in md and "_none_" in md
+    report.render_html(rep)  # renders without KeyError
+
+
+def test_cli_writes_report_and_validates(tmp_path, capsys):
+    ledger_path = str(tmp_path / "run.jsonl")
+    with _ledger(ledger_path):
+        pass
+    out = tmp_path / "report.md"
+    assert report.main([ledger_path, "--out", str(out)]) == 0
+    assert out.read_text().startswith("# Run report")
+    capsys.readouterr()
+
+    html_out = tmp_path / "report.html"
+    assert report.main([ledger_path, "--format", "html",
+                        "--out", str(html_out)]) == 0
+    assert html_out.read_text().startswith("<!doctype html>")
+
+    assert report.main([ledger_path]) == 0  # stdout mode
+    assert "# Run report" in capsys.readouterr().out
+
+
+def test_cli_rejects_missing_invalid_and_empty_ledgers(tmp_path, capsys):
+    assert report.main([str(tmp_path / "nope.jsonl")]) == 1
+    assert "FAIL" in capsys.readouterr().err
+
+    bad = tmp_path / "bad.jsonl"
+    bad.write_text(json.dumps({"kind": "mystery"}) + "\n")
+    assert report.main([str(bad)]) == 1
+    assert "FAIL" in capsys.readouterr().err
+
+    empty = tmp_path / "empty.jsonl"
+    empty.write_text("")
+    assert report.main([str(empty)]) == 1
+    assert "empty" in capsys.readouterr().err
