@@ -22,6 +22,19 @@ of d columns, N-candidate page-view bundles):
   * serve/int8/<tag> — the int8-quantised artifact after a save/load
     round trip: scores must stay within INT8_MAX_DP (1e-2) of fp32
     (asserted), deployed payload ~4x smaller rows;
+  * serve/int8_{native,dequantized}/<tag> — the engine serving the
+    QuantizedArtifact int8-NATIVE (codes DMA'd as int8, per-row scale
+    fused into the gather epilogue) vs serving dequantize(q) (fp32 rows
+    rebuilt up front). Scores agree to <= 1e-6 (asserted before timing);
+    the native row-gather moves rows_dma_ratio = (2m+4)/(8m) of the
+    bytes. With REPRO_BENCH_ENFORCE=1 (and not --smoke) the native path
+    must reach INT8_TARGET_SPEEDUP (1.3x) candidates/sec on KERNEL
+    backends (tpu), where the win is DMA bytes; on cpu the jnp fallback
+    does the same flops either way, so the row is informational;
+  * serve/coalesce_{off,on}/<tag> — the same Poisson arrival tape
+    through the micro-batching queue with cross-envelope coalescing off
+    vs on: per-ticket scores BITWISE identical (asserted), the win is
+    fewer device rounds at deadline-dominated rates;
   * serve/load_qps*/<tag> — open-loop Poisson traffic through the
     micro-batching queue (deadline-aware flushing + admission control):
     p50/p99 request latency and candidates/sec at each offered QPS —
@@ -45,6 +58,8 @@ from benchmarks.common import emit, time_fn
 SERVE_TARGET_SPEEDUP = 1.5  # shared-vs-naive bundle throughput (enforced)
 BATCH_TARGET_SPEEDUP = 1.3  # batched-vs-single engine dispatch (smoke gate)
 INT8_MAX_DP = 1e-2  # max |p_int8 - p_fp32| after a save/load round trip
+INT8_TARGET_SPEEDUP = 1.3  # int8-native vs dequantized engine (kernel
+INT8_NATIVE_TOL = 1e-6  # .. backends only; the win is row-DMA bytes)
 
 # (d, m, nnz_frac, sessions, ads_per_session, Ku, Ka, flat_requests)
 CONFIGS = [
@@ -65,12 +80,16 @@ def run(smoke: bool | None = None, collect: dict | None = None):
     from repro.data.sparse import generate_sparse
     from repro.eval import auc, calibration_ratio
     from repro.serve import (
+        MicroBatchQueue,
         QueueConfig,
         ScoreBundle,
         ScoringEngine,
         as_model,
         compress,
+        dequantize,
+        envelope_closure,
         load_artifact,
+        poisson_arrivals,
         quantize,
         replay_open_loop,
         save_artifact,
@@ -79,6 +98,28 @@ def run(smoke: bool | None = None, collect: dict | None = None):
         score_sparse,
         synthetic_requests,
     )
+
+    def _queue_replay(engine, reqs, arrivals, qcfg):
+        """Virtual-clock queue replay returning per-ticket scores + the
+        round/latency ledger (the coalescing comparison needs scores BY
+        TICKET, which replay_open_loop doesn't expose)."""
+        q = MicroBatchQueue(engine, qcfg)
+        for t, r in zip(arrivals, reqs):
+            q.flush_due(t)
+            q.submit(r, t)
+        q.flush_due(arrivals[-1] + 1.0)
+        q.drain(arrivals[-1] + 1.0)
+        comps = q.completions
+        makespan = max(c.completed for c in comps) - arrivals[0]
+        cand = sum(c.scores.shape[0] for c in comps)
+        lat = np.array([c.latency_us for c in comps])
+        return ({c.ticket: c.scores for c in comps},
+                {"rounds": sum(q.stats.flushes.values()),
+                 "flushes": dict(q.stats.flushes),
+                 "coalesced_groups": q.stats.coalesced_groups,
+                 "candidates_per_sec": float(cand / makespan),
+                 "p50_us": float(np.percentile(lat, 50)),
+                 "p99_us": float(np.percentile(lat, 99))})
 
     if smoke is None:
         smoke = os.environ.get("REPRO_BENCH_SMOKE", "") == "1"
@@ -217,6 +258,46 @@ def run(smoke: bool | None = None, collect: dict | None = None):
                 (f"batched dispatch only {batch_speedup:.2f}x vs per-request "
                  f"at smoke shapes (target {BATCH_TARGET_SPEEDUP}x)")
 
+        # ---- int8-native vs dequantized engine: same QuantizedArtifact
+        # served as int8 codes + fused scales vs rebuilt fp32 rows.
+        # Parity <= 1e-6 asserted BEFORE timing; the native win is the
+        # row-gather DMA bytes, so the speedup gate applies on kernel
+        # backends only (cpu's jnp fallback does the same flops)
+        eng_q = ScoringEngine(q)
+        eng_dq = ScoringEngine(dequantize(q))
+        eng_q.warm(envs, batch_sizes=eng_q.g_buckets)
+        eng_dq.warm(envs, batch_sizes=eng_dq.g_buckets)
+        warm_q, warm_dq = eng_q.stats.compiles, eng_dq.stats.compiles
+        for _ in range(reps):
+            p_native = eng_q.score_batch(requests)
+            p_deq = eng_dq.score_batch(requests)
+        assert eng_q.stats.compiles == warm_q, "int8-native engine recompiled"
+        assert eng_dq.stats.compiles == warm_dq, "dequantized engine recompiled"
+        native_dp = max(float(np.abs(a - b).max())
+                        for a, b in zip(p_native, p_deq))
+        assert native_dp <= INT8_NATIVE_TOL, \
+            (f"int8-native moved p by {native_dp:.2e} vs dequantized "
+             f"(> {INT8_NATIVE_TOL})")
+        sq, sdq = eng_q.stats, eng_dq.stats
+        int8_speedup = sq.candidates_per_sec / sdq.candidates_per_sec
+        # per gathered row: 2m int8 code bytes + one fp32 scale vs 2m fp32
+        rows_dma_ratio = (2 * m + 4) / (8 * m)
+        rows.append((f"serve/int8_dequantized/{tag}", sdq.latency_us,
+                     f"{sdq.candidates_per_sec:.0f}ads_per_sec;"
+                     f"compiles={sdq.compiles};steady_state_recompiles=0"))
+        rows.append((f"serve/int8_native/{tag}", sq.latency_us,
+                     f"{sq.candidates_per_sec:.0f}ads_per_sec;"
+                     f"{int8_speedup:.2f}x_vs_dequantized;"
+                     f"max_dp={native_dp:.1e};"
+                     f"rows_dma_ratio={rows_dma_ratio:.3f};"
+                     f"compiles={sq.compiles};steady_state_recompiles=0"))
+        if enforce and not smoke and jax.default_backend() != "cpu" \
+                and int8_speedup < INT8_TARGET_SPEEDUP:
+            raise AssertionError(
+                f"int8-native serving only {int8_speedup:.2f}x vs the "
+                f"dequantized engine (target {INT8_TARGET_SPEEDUP}x on "
+                f"kernel backends)")
+
         # ---- open-loop Poisson load through the micro-batching queue:
         # tail latency + throughput at each offered QPS (traffic-shaped
         # serving, steady-state no-recompile asserted)
@@ -227,7 +308,10 @@ def run(smoke: bool | None = None, collect: dict | None = None):
             k_user=(max(2, ku // 2), ku), k_ad=(max(2, ka // 2), ka),
             n_ads=(max(2, A // 2), A), seed=4)
         eng_l = ScoringEngine(art)
-        eng_l.warm({eng_l.envelope(r) for r in load_reqs},
+        # warm the elementwise-max CLOSURE of the traffic's envelopes:
+        # coalesced flushes dispatch at merged envelopes, which must not
+        # recompile either
+        eng_l.warm(envelope_closure({eng_l.envelope(r) for r in load_reqs}),
                    batch_sizes=eng_l.g_buckets)
         warm_l = eng_l.stats.compiles
         load = {}
@@ -246,6 +330,46 @@ def run(smoke: bool | None = None, collect: dict | None = None):
         assert eng_l.stats.compiles == warm_l, \
             "queue replay recompiled in steady state"
 
+        # ---- cross-envelope coalescing: the SAME arrival tape with
+        # coalesce off vs on, per-ticket scores asserted BITWISE before
+        # the round counts mean anything. Run at the lower (deadline-
+        # dominated) rate on a FINER-bucketed engine — coarse buckets
+        # fold ragged traffic into one envelope, which leaves nothing to
+        # coalesce (the exact regime the optimisation targets is many
+        # small per-envelope groups)
+        co_qps = 500.0 if smoke else 200.0
+        eng_c = ScoringEngine(art,
+                              k_buckets=(2, 4, 8, 16, 32),
+                              n_buckets=(2, 4, 8, 16, 32))
+        eng_c.warm(envelope_closure({eng_c.envelope(r) for r in load_reqs}),
+                   batch_sizes=eng_c.g_buckets)
+        warm_c = eng_c.stats.compiles
+        arrivals = poisson_arrivals(len(load_reqs), co_qps, seed=6)
+        scores_off, rep_off = _queue_replay(
+            eng_c, load_reqs, arrivals, qcfg)
+        scores_on, rep_on = _queue_replay(
+            eng_c, load_reqs, arrivals, qcfg._replace(coalesce=True))
+        assert scores_off.keys() == scores_on.keys()
+        for t in scores_off:
+            np.testing.assert_array_equal(scores_off[t], scores_on[t])
+        assert eng_c.stats.compiles == warm_c, \
+            "coalesced replay recompiled in steady state"
+        assert rep_on["flushes"]["coalesced"] > 0, \
+            "coalescing never fired on the deadline-dominated tape"
+        round_ratio = rep_on["rounds"] / rep_off["rounds"]
+        rows.append((f"serve/coalesce_off/{tag}", rep_off["p50_us"],
+                     f"p99={rep_off['p99_us']:.0f}us;"
+                     f"rounds={rep_off['rounds']};"
+                     f"{rep_off['candidates_per_sec']:.0f}ads_per_sec"))
+        rows.append((f"serve/coalesce_on/{tag}", rep_on["p50_us"],
+                     f"p99={rep_on['p99_us']:.0f}us;"
+                     f"rounds={rep_on['rounds']};"
+                     f"round_ratio={round_ratio:.2f};"
+                     f"coalesced={rep_on['flushes']['coalesced']}"
+                     f"(merging {rep_on['coalesced_groups']} groups);"
+                     f"{rep_on['candidates_per_sec']:.0f}ads_per_sec;"
+                     "parity=bitwise"))
+
         results[tag] = {
             "d": d, "m": m, "nnz_frac": nnz, "sessions": G,
             "ads_per_session": A, "k_user": ku, "k_ad": ka,
@@ -260,6 +384,13 @@ def run(smoke: bool | None = None, collect: dict | None = None):
             "int8": {"max_dp": max_dp,
                      "rows_ratio": int8_rows_bytes / fp32_rows_bytes,
                      "deployed_bytes": int(q.deployed_bytes)},
+            "int8_native": {"max_dp_vs_dequantized": native_dp,
+                            "speedup_vs_dequantized": float(int8_speedup),
+                            "rows_dma_ratio": float(rows_dma_ratio),
+                            "engine": sq.as_dict()},
+            "coalesce": {"off": rep_off, "on": rep_on,
+                         "round_ratio": float(round_ratio),
+                         "parity": "bitwise"},
             "load": load,
             "quality": quality,
             "parity": "bitwise",

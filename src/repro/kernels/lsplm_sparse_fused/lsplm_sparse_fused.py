@@ -148,6 +148,183 @@ def _kernel(ids_ref, vals_ref, theta_ref, p_ref, z_ref, bufs, sems, *,
     p_ref[...] = jnp.sum(gate * fit, axis=-1, keepdims=True).astype(p_ref.dtype)
 
 
+def _kernel_int8(ids_ref, vals_ref, codes_ref, scales_ref, p_ref, z_ref,
+                 bufs, sbufs, sems, ssems, *,
+                 m: int, block_n: int, block_k: int, nkb: int, skip_id: int):
+    """Int8-native batch tile: same pipeline as :func:`_kernel`, but the
+    row DMAs move int8 CODE rows (4x fewer bytes than fp32) plus their
+    (1,) fp32 scales; the scale is applied in VMEM right before the
+    contraction — ``rows = codes.astype(f32) * scale`` — so fp32 rows
+    never exist anywhere, HBM or VMEM, only the (block_k, 2m) working
+    set of the current pipeline step."""
+    pid = pl.program_id(0)
+    T = block_n * nkb
+
+    @pl.when(pid == 0)
+    def _zero_buffers():  # never read uninitialised VMEM on skipped slots
+        bufs[...] = jnp.zeros_like(bufs)
+        sbufs[...] = jnp.zeros_like(sbufs)
+
+    def row_dmas(t, slot, j):
+        n = pid * block_n + t // nkb
+        k = jax.lax.rem(t, nkb) * block_k + j
+        rid = ids_ref[n, k]
+        return (pltpu.make_async_copy(
+                    codes_ref.at[rid], bufs.at[slot, j], sems.at[slot, j]),
+                pltpu.make_async_copy(
+                    scales_ref.at[rid], sbufs.at[slot, j], ssems.at[slot, j]))
+
+    def start(t, slot):
+        for j in range(block_k):
+            n = pid * block_n + t // nkb
+            k = jax.lax.rem(t, nkb) * block_k + j
+
+            @pl.when(ids_ref[n, k] != skip_id)
+            def _():
+                for dma in row_dmas(t, slot, j):
+                    dma.start()
+
+            # a skipped slot must contract like the zero pad row: zero its
+            # SCALE — codes are int8 (always finite), so stale codes times
+            # an exact-0.0 scale contract to exact 0.0
+            @pl.when(ids_ref[n, k] == skip_id)
+            def _():
+                sbufs[slot, j, :] = jnp.zeros_like(sbufs[slot, j, :])
+
+    def wait(t, slot):
+        for j in range(block_k):
+            n = pid * block_n + t // nkb
+            k = jax.lax.rem(t, nkb) * block_k + j
+
+            @pl.when(ids_ref[n, k] != skip_id)
+            def _():
+                for dma in row_dmas(t, slot, j):
+                    dma.wait()
+
+    start(0, 0)
+
+    def pipeline_step(t, carry):
+        slot = jax.lax.rem(t, 2)
+
+        @pl.when(t + 1 < T)
+        def _prefetch_next():  # overlaps the contraction below
+            start(t + 1, jax.lax.rem(t + 1, 2))
+
+        wait(t, slot)
+        n = t // nkb
+        b = jax.lax.rem(t, nkb)
+        vchunk = vals_ref[n, pl.ds(b * block_k, block_k)]
+        # the scale epilogue: int8 codes -> fp32 rows, in VMEM, fused
+        # into this step's contraction (pad slots have scale == 0.0)
+        rows = bufs[slot].astype(jnp.float32) * sbufs[slot]
+        partial = jnp.dot(vchunk.astype(jnp.float32), rows,
+                          preferred_element_type=jnp.float32)
+
+        @pl.when(b == 0)
+        def _():
+            z_ref[n, :] = partial
+
+        @pl.when(b != 0)
+        def _():
+            z_ref[n, :] = z_ref[n, :] + partial
+
+        return carry
+
+    jax.lax.fori_loop(0, T, pipeline_step, 0)
+
+    z = z_ref[...]
+    gate = jax.nn.softmax(z[:, :m], axis=-1)
+    fit = jax.nn.sigmoid(z[:, m:])
+    p_ref[...] = jnp.sum(gate * fit, axis=-1, keepdims=True).astype(p_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_n", "block_k", "interpret"))
+def lsplm_sparse_fused_int8_forward(
+    ids: jax.Array,  # (N, K) int32, pad id == codes.shape[0] - 1
+    vals: jax.Array,  # (N, K)
+    codes: jax.Array,  # (D, 2m) int8; row i fp32 == codes[i] * scales[i]
+    scales: jax.Array,  # (D,) fp32 per-row scales; pad row scale == 0
+    *,
+    block_n: int = 256,
+    block_k: int = 8,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Int8-native pipelined fused sparse forward: serve a quantised
+    model WITHOUT materialising fp32 rows. Returns (p (N,), z (N, 2m)).
+
+    Identical gather/contraction structure to
+    :func:`lsplm_sparse_fused_forward` on the dequantised rows — the
+    row values entering each ``jnp.dot`` are the same fp32 numbers
+    (``codes * scale``), computed in the VMEM epilogue instead of
+    up-front in HBM, so the scores match the dequantise-then-score path
+    while the per-row DMA traffic drops ~4x (int8 codes + one fp32
+    scalar vs a fp32 row). Same VMEM/SMEM sizing rule as the fp32
+    kernel with the double buffers at 1/4 size; (block_n, block_k)
+    resolve from the autotune table under kernel key
+    ``"fused_fwd_int8"``. CI validates in interpret mode (see module
+    docstring).
+    """
+    if ids.shape != vals.shape or ids.ndim != 2:
+        raise ValueError(f"ids/vals must be (N, K), got {ids.shape}/{vals.shape}")
+    if codes.ndim != 2 or codes.shape[1] % 2:
+        raise ValueError(f"codes must be (D, 2m), got {codes.shape}")
+    if codes.dtype != jnp.int8:
+        raise ValueError(f"codes must be int8, got {codes.dtype}")
+    if scales.shape != (codes.shape[0],):
+        raise ValueError(
+            f"scales must be ({codes.shape[0]},), got {scales.shape}")
+    N, K = ids.shape
+    D, m2 = codes.shape
+    m = m2 // 2
+    block_n = max(1, min(block_n, N))
+    block_k = max(1, min(block_k, K))
+    n_pad = pl.cdiv(N, block_n) * block_n
+    k_pad = pl.cdiv(K, block_k) * block_k
+    if n_pad != N:
+        ids = jnp.concatenate(
+            [ids, jnp.full((n_pad - N, K), D - 1, ids.dtype)], axis=0)
+        vals = jnp.concatenate(
+            [vals, jnp.zeros((n_pad - N, K), vals.dtype)], axis=0)
+    if k_pad != K:
+        ids = jnp.concatenate(
+            [ids, jnp.full((n_pad, k_pad - K), D - 1, ids.dtype)], axis=1)
+        vals = jnp.concatenate(
+            [vals, jnp.zeros((n_pad, k_pad - K), vals.dtype)], axis=1)
+    nkb = k_pad // block_k
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n_pad // block_n,),
+        in_specs=[
+            pl.BlockSpec((block_n, k_pad), lambda i, *_: (i, 0)),
+            pl.BlockSpec(memory_space=pltpu.ANY),  # codes stay in HBM
+            pl.BlockSpec(memory_space=pltpu.ANY),  # scales stay in HBM
+        ],
+        out_specs=[
+            pl.BlockSpec((block_n, 1), lambda i, *_: (i, 0)),
+            pl.BlockSpec((block_n, m2), lambda i, *_: (i, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((2, block_k, m2), jnp.int8),
+            pltpu.VMEM((2, block_k, 1), jnp.float32),
+            pltpu.SemaphoreType.DMA((2, block_k)),
+            pltpu.SemaphoreType.DMA((2, block_k)),
+        ],
+    )
+    p, z = pl.pallas_call(
+        functools.partial(_kernel_int8, m=m, block_n=block_n,
+                          block_k=block_k, nkb=nkb, skip_id=D - 1),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((n_pad, 1), jnp.float32),
+            jax.ShapeDtypeStruct((n_pad, m2), jnp.float32),
+        ],
+        interpret=interpret,
+    )(ids, vals, codes, scales.astype(jnp.float32).reshape(D, 1))
+    return p[:N, 0], z[:N]
+
+
 @functools.partial(jax.jit,
                    static_argnames=("block_n", "block_k", "interpret"))
 def lsplm_sparse_fused_forward(

@@ -13,6 +13,14 @@ oracle materialises, which is what makes it win at production sparsity
   * ``lsplm_sparse_forward(ids, vals, theta) -> p (N,)`` — fully fused
     probabilities (softmax-dot-sigmoid in-register on the kernel path).
 
+Plus the INFERENCE-ONLY int8-native pair — ``sparse_gather_matmul_int8``
+and ``lsplm_sparse_forward_int8`` — which score a quantised model
+(int8 ``codes`` + per-row fp32 ``scales``) without ever materialising
+fp32 rows: the kernel DMAs int8 code rows and applies the scale in the
+VMEM epilogue (~4x fewer row-DMA bytes), the jnp fallback fuses the same
+multiply into its gather chunks. No VJP: training stays fp32,
+quantisation is a deploy-time transform (``repro.serve.compress``).
+
 Both VJPs share one backward: the transposed scatter
 
     dTheta[r] = sum_{(n,k): ids[n,k]=r} vals[n,k] * dz[n]     (segment-sum)
@@ -55,6 +63,7 @@ import numpy as np
 
 from repro.kernels.lsplm_sparse_fused.lsplm_sparse_fused import (
     lsplm_sparse_fused_forward,
+    lsplm_sparse_fused_int8_forward,
 )
 from repro.kernels.lsplm_sparse_scatter.ops import (
     TransposePlan,
@@ -393,6 +402,106 @@ def lsplm_sparse_forward(ids, vals, theta, *, mode: str = "auto",
                                              block_k, chunk)
     return _forward_p(mode, block_n, block_k, chunk, dedup, ids, vals, theta,
                       plan)
+
+
+def _resolve_fused_int8(ids, codes, mode, block_n, block_k, chunk):
+    """Knob resolution for the int8-native path: same envelope rule as
+    :func:`_resolve_fused`, but block sizes key on ``"fused_fwd_int8"``
+    (the int8 pipeline's DMA:compute balance differs, so it tunes
+    independently); the jnp fallback chunk shares ``chunk_fwd``."""
+    env = tune.fused_envelope(ids.shape[0], ids.shape[1], codes.shape[-1])
+    if block_n is None or block_k is None:
+        cfg = tune.resolve("fused_fwd_int8", env, mode=mode)
+        block_n = cfg["block_n"] if block_n is None else block_n
+        block_k = cfg["block_k"] if block_k is None else block_k
+    if chunk is None:
+        chunk = tune.resolve("chunk_fwd", env, mode=mode)["chunk"]
+    return block_n, block_k, chunk
+
+
+def _chunked_zmap_int8(ids, vals, codes, scales,
+                       chunk: int | None = None) -> jax.Array:
+    """Int8-native jnp forward: the ``lax.scan`` K-chunk structure of
+    :func:`_chunked_zmap` with the scale epilogue fused into each chunk
+    — gathered int8 code rows become fp32 via one multiply by their
+    per-row scale, so the fp32 row values (and therefore the einsum and
+    the accumulation order) are IDENTICAL to running :func:`_chunked_zmap`
+    on the dequantised ``codes * scales`` Theta; only the gather moves
+    int8 bytes. Pad rows stay exact zero (pad scale == 0)."""
+    N = ids.shape[0]
+    ids_r, vals_r, _, _ = _chunk_blocks(ids, vals, codes.shape[0] - 1, chunk)
+
+    def body(z, xs):
+        i, v = xs
+        rows = (jnp.take(codes, i, axis=0).astype(jnp.float32)
+                * jnp.take(scales, i, axis=0)[..., None])
+        return z + jnp.einsum("nk,nkm->nm", v.astype(rows.dtype), rows), None
+
+    z0 = jnp.zeros((N, codes.shape[1]), jnp.float32)
+    z, _ = jax.lax.scan(body, z0, (ids_r, vals_r))
+    return z
+
+
+def _check_int8_model(codes, scales):
+    if codes.ndim != 2 or codes.shape[1] % 2:
+        raise ValueError(f"codes must be (D, 2m), got {codes.shape}")
+    if codes.dtype != jnp.int8:
+        raise ValueError(f"codes must be int8, got {codes.dtype}")
+    if scales.shape != (codes.shape[0],):
+        raise ValueError(
+            f"scales must be ({codes.shape[0]},), got {scales.shape}")
+
+
+def sparse_gather_matmul_int8(ids, vals, codes, scales, *, mode: str = "auto",
+                              block_n: int | None = None,
+                              block_k: int | None = None,
+                              chunk: int | None = None,
+                              dedup: bool = True) -> jax.Array:
+    """z = x @ (codes * scales) from padded COO WITHOUT materialising the
+    fp32 rows — the int8-native serving path. (N, K) -> (N, 2m).
+
+    ``codes`` is the (D, 2m) int8 matrix with the zero pad row at D-1;
+    ``scales`` the (D,) per-row fp32 scales (pad row scale 0). On the
+    kernel path the row DMAs move int8 + one fp32 scalar per row (~4x
+    fewer bytes than fp32 rows at production K << d) and the scale is
+    applied in the VMEM epilogue; the jnp fallback fuses the same
+    multiply into its gather chunks. INFERENCE-ONLY: no custom VJP —
+    training differentiates the fp32 ops, quantisation is a deploy-time
+    transform. Knobs resolve from the autotune table under
+    ``"fused_fwd_int8"``.
+    """
+    _check_int8_model(codes, scales)
+    block_n, block_k, chunk = _resolve_fused_int8(ids, codes, mode, block_n,
+                                                  block_k, chunk)
+    if _use_kernel(mode):
+        if dedup:
+            ids, vals = dedup_tile_ids(ids, vals, codes.shape[0] - 1)
+        _, z = lsplm_sparse_fused_int8_forward(
+            ids, vals, codes, scales, block_n=block_n, block_k=block_k,
+            interpret=mode == "interpret")
+        return z
+    return _chunked_zmap_int8(ids, vals, codes, scales, chunk)
+
+
+def lsplm_sparse_forward_int8(ids, vals, codes, scales, *, mode: str = "auto",
+                              block_n: int | None = None,
+                              block_k: int | None = None,
+                              chunk: int | None = None,
+                              dedup: bool = True) -> jax.Array:
+    """p(y=1|x) per Eq. 2 from padded COO on int8 codes, fully fused
+    (softmax-dot-sigmoid in-register on the kernel path). Returns (N,).
+    Inference-only; see :func:`sparse_gather_matmul_int8`."""
+    _check_int8_model(codes, scales)
+    block_n, block_k, chunk = _resolve_fused_int8(ids, codes, mode, block_n,
+                                                  block_k, chunk)
+    if _use_kernel(mode):
+        if dedup:
+            ids, vals = dedup_tile_ids(ids, vals, codes.shape[0] - 1)
+        p, _ = lsplm_sparse_fused_int8_forward(
+            ids, vals, codes, scales, block_n=block_n, block_k=block_k,
+            interpret=mode == "interpret")
+        return p
+    return finalize_p(_chunked_zmap_int8(ids, vals, codes, scales, chunk))
 
 
 def lsplm_sparse_logps(ids, vals, theta, *, mode: str = "auto",

@@ -20,8 +20,10 @@ asserting the steady state (everything after the warmup pass) triggered
 ZERO recompiles.
 
 ``--int8`` additionally quantises the artifact (int8 rows + per-row
-fp32 scale), round-trips it through save/load, and serves THAT —
-printing the size win and the bounded probability drift vs fp32.
+fp32 scale), round-trips it through save/load, and serves THAT
+INT8-NATIVE — the engine compiles its own dtype-keyed executables over
+the scale-fused int8 gather (fp32 rows never materialise) — printing
+the size win and the bounded probability drift vs fp32.
 
 ``--load-qps`` switches on the traffic mode: open-loop Poisson arrivals
 at the given rate(s) through the micro-batching queue (deadline-aware
@@ -30,6 +32,14 @@ and candidates/sec per offered rate:
   PYTHONPATH=src python -m repro.launch.serve --train-iters 4 \
       --sparse-features 5000 --sessions 96 --regions 2 --requests 128 \
       --int8 --load-qps 500,2000 --max-batch 8 --max-delay-us 3000
+
+``--coalesce`` merges several due per-envelope groups into single
+dispatches (bitwise-identical scores, fewer device rounds — the flush
+mix line shows how many rounds coalesced); ``--real-clock`` additionally
+replays each rate through the wall-clock :class:`RealClockPump` front
+door — Poisson-paced REAL sleeps, the pump's timer thread firing the
+deadline flushes — and asserts the deterministic drain served every
+accepted request.
 """
 import argparse
 import time
@@ -45,11 +55,14 @@ from repro.launch.tuning import (
     tune_job_shapes,
 )
 from repro.serve import (
+    MicroBatchQueue,
     QueueConfig,
+    RealClockPump,
     ScoringEngine,
     as_model,
     compress,
     load_artifact,
+    poisson_arrivals,
     quantize,
     replay_open_loop,
     save_artifact,
@@ -119,6 +132,14 @@ def main() -> int:
                     help="queue deadline: max micro-batching delay")
     ap.add_argument("--max-pending", type=int, default=256,
                     help="admission control: shed load past this backlog")
+    ap.add_argument("--coalesce", action="store_true",
+                    help="merge several due per-envelope groups into one "
+                         "dispatch at the widest due envelope (bitwise-"
+                         "identical scores, fewer device rounds)")
+    ap.add_argument("--real-clock", action="store_true",
+                    help="also replay each --load-qps rate through the "
+                         "wall-clock RealClockPump front door (real "
+                         "Poisson-paced sleeps, timer-thread flushes)")
     ap.add_argument("--seed", type=int, default=0)
     add_tuning_flags(ap)
     obs.add_flags(ap)
@@ -128,12 +149,48 @@ def main() -> int:
         raise SystemExit(
             "--drift-ref arms the health monitor's drift detectors; "
             "combine it with --monitor")
+    if args.real_clock and not args.load_qps:
+        raise SystemExit(
+            "--real-clock paces the queue with wall-time Poisson arrivals; "
+            "combine it with --load-qps")
 
     session = obs.configure_from_args(args, driver="repro.launch.serve")
     try:
         return _serve(args)
     finally:
         session.close()
+
+
+def _real_clock_smoke(engine, requests, *, qps: float, config: QueueConfig,
+                      seed: int) -> None:
+    """Wall-clock front door: Poisson-paced REAL sleeps feed a
+    :class:`RealClockPump`, whose timer thread fires the deadline
+    flushes; ``stop()`` joins then drains, so afterwards every accepted
+    request must have a completion (the determinism being smoked)."""
+    queue = MicroBatchQueue(engine, config)
+    arrivals = poisson_arrivals(len(requests), qps, seed)
+    gaps = np.diff(np.concatenate([[0.0], arrivals]))
+    before = engine.stats.compiles
+    t0 = time.perf_counter()
+    accepted = 0
+    with RealClockPump(queue) as pump:
+        for gap, req in zip(gaps, requests):
+            time.sleep(gap)
+            if pump.submit(req) is not None:
+                accepted += 1
+    wall = time.perf_counter() - t0
+    comps = queue.completions
+    assert len(comps) == accepted, \
+        f"pump drained {len(comps)} of {accepted} accepted requests"
+    assert engine.stats.compiles == before, "real-clock replay recompiled"
+    lat = np.array([c.latency_us for c in comps]) if comps else np.zeros(1)
+    fl = queue.stats.flushes
+    obs.log(f"real-clock {qps:,.0f} qps: {accepted}/{len(requests)} accepted,"
+            f" all drained in {wall:.2f}s wall; "
+            f"p50 {np.percentile(lat, 50):,.0f} us, "
+            f"p99 {np.percentile(lat, 99):,.0f} us "
+            f"({fl['full']} full / {fl['deadline']} deadline / "
+            f"{fl['drain']} drain / {fl['coalesced']} coalesced)")
 
 
 def _serve(args) -> int:
@@ -169,10 +226,13 @@ def _serve(args) -> int:
             np.asarray(score_sparse(model, ids, vals))
             - np.asarray(score_sparse(art, ids, vals))).max())
         assert dp <= 1e-2, f"int8 moved p by {dp:.2e} (> 1e-2)"
-        obs.log(f"int8: rows payload {q.codes.size + q.scales.size * 4:,} B "
+        obs.log(f"int8-native: rows payload "
+                f"{q.codes.size + q.scales.size * 4:,} B "
                 f"vs {art.theta.size * 4:,} B fp32 "
                 f"({art.theta.size * 4 / (q.codes.size + q.scales.size * 4):.1f}x"
-                f" smaller); round-tripped save/load; max |dp| = {dp:.1e}")
+                f" smaller rows AND row-gather DMA bytes); round-tripped "
+                f"save/load; serving the codes directly (scale fused into "
+                f"the gather); max |dp| = {dp:.1e} vs fp32")
 
     engine = ScoringEngine(model)
     mon = obs.get_monitor()
@@ -200,6 +260,12 @@ def _serve(args) -> int:
              for g in (1, engine.max_batch)}
             | {(g, ku, d, m) for ku, _ka, _n in envelopes
                for g in (1, engine.max_batch)})
+    if args.coalesce:
+        # coalesced flushes dispatch at the elementwise max of merged
+        # envelopes: warm the closure so they stay recompile-free too
+        from repro.serve import envelope_closure
+
+        envelopes = envelope_closure(envelopes)
     engine.warm(envelopes, batch_sizes=engine.g_buckets)
     warm_compiles = engine.stats.compiles
     single = engine.score_many(requests)
@@ -219,7 +285,8 @@ def _serve(args) -> int:
     if args.load_qps:
         cfg = QueueConfig(max_batch=args.max_batch,
                           max_delay_us=args.max_delay_us,
-                          max_pending=args.max_pending)
+                          max_pending=args.max_pending,
+                          coalesce=args.coalesce)
         for qps in (float(x) for x in args.load_qps.split(",") if x.strip()):
             before = engine.stats.compiles
             rep = replay_open_loop(engine, requests, qps=qps, config=cfg,
@@ -235,8 +302,14 @@ def _serve(args) -> int:
                     f"{rep['dispatches']} dispatches "
                     f"({rep['flushes']['full']} full / "
                     f"{rep['flushes']['deadline']} deadline / "
-                    f"{rep['flushes']['drain']} drain), "
-                    f"rejected {rep['rejected']}")
+                    f"{rep['flushes']['drain']} drain / "
+                    f"{rep['flushes']['coalesced']} coalesced"
+                    + (f" merging {rep['coalesced_groups']} groups"
+                       if rep["flushes"]["coalesced"] else "")
+                    + f"), rejected {rep['rejected']}")
+            if args.real_clock:
+                _real_clock_smoke(engine, requests, qps=qps, config=cfg,
+                                  seed=args.seed + 3)
 
     if mon.enabled:
         mon.evaluate()  # settle the last partial eval_every window

@@ -8,9 +8,12 @@ production side).
 prediction layer every caller (training-eval, examples, the engine)
 goes through; ``engine`` serves ragged request traffic with bucketed
 shape padding, same-envelope G>1 batching and per-bucket cached
-executables (steady state: zero recompiles); ``traffic`` adds the
-micro-batching queue (deadline-aware flushing, admission control) and
-the open-loop Poisson load generator behind the p50/p99 benchmark.
+executables (steady state: zero recompiles; int8-native models compile
+their own dtype-keyed executables); ``traffic`` adds the micro-batching
+queue (deadline-aware flushing, admission control, cross-envelope flush
+coalescing), the wall-clock :class:`RealClockPump` front door, the
+queue-measured :func:`derive_g_buckets` autoscaler and the open-loop
+Poisson load generator behind the p50/p99 benchmark.
 """
 from repro.serve.compress import (  # noqa: F401
     QuantizedArtifact,
@@ -25,6 +28,7 @@ from repro.serve.engine import (  # noqa: F401
     BundleRequest,
     EngineStats,
     ScoringEngine,
+    envelope_closure,
     synthetic_requests,
 )
 from repro.serve.traffic import (  # noqa: F401
@@ -32,6 +36,8 @@ from repro.serve.traffic import (  # noqa: F401
     MicroBatchQueue,
     QueueConfig,
     QueueStats,
+    RealClockPump,
+    derive_g_buckets,
     poisson_arrivals,
     replay_open_loop,
 )

@@ -16,8 +16,11 @@ ROADMAP "bucketed shape padding" idea on the serving side:
     executable launch, device sync — amortises over G page views. This
     is the traffic-shaped fast path the micro-batching queue
     (``repro.serve.traffic``) flushes into;
-  * per (G, K_user, K_ad, N) envelope the scoring executable is
-    AOT-compiled ONCE (``jit(...).lower(...).compile()``) and cached;
+  * per (G, K_user, K_ad, N, dtype) envelope the scoring executable is
+    AOT-compiled ONCE (``jit(...).lower(...).compile()``) and cached
+    (dtype is "fp32" or "int8" — an int8-native engine's executables
+    run the scale-fused int8 gather path and never collide with fp32
+    ones on the same shapes);
     envelope keys are the ONLY source of compilation, so once the bucket
     set is warm a request replay of any mix/order/grouping triggers ZERO
     recompiles (asserted in ``tests/test_serve_engine.py``). An AOT
@@ -29,9 +32,10 @@ Eq. 13): each request's user contraction happens once and broadcasts
 over its padded candidate block; a batched call carries G independent
 user rows and G*N candidates. The model (full Theta, a pruned
 :class:`~repro.serve.compress.ServingArtifact`, or an int8
-:class:`~repro.serve.compress.QuantizedArtifact`) is normalised and
-placed on device once at engine construction; requests stay in the
-original id space either way.
+:class:`~repro.serve.compress.QuantizedArtifact` — served INT8-NATIVE:
+the executables run the scale-fused int8 gather, fp32 rows are never
+materialised) is normalised and placed on device once at engine
+construction; requests stay in the original id space either way.
 
 :class:`EngineStats` keeps the latency/throughput ledger: request and
 candidate counts, dispatch (AOT call) and padded-slot counts with the
@@ -94,7 +98,7 @@ class EngineStats:
         self._score_s = reg.counter("serve_score_seconds", **labels)
         self._wall_hist = reg.histogram("serve_dispatch_wall_seconds",
                                         **labels)
-        self._hits: dict[tuple[int, int, int, int], obs.Counter] = {}
+        self._hits: dict[tuple, obs.Counter] = {}
         self._first_t: float | None = None
         self._last_t: float | None = None
 
@@ -103,7 +107,7 @@ class EngineStats:
         self._compiles.inc(1.0)
         self._compile_s.inc(seconds)
 
-    def note_dispatch(self, key: tuple[int, int, int, int], requests: int,
+    def note_dispatch(self, key: tuple, requests: int,
                       candidates: int, wall_s: float) -> None:
         """Book one AOT executable call: its padded envelope, the real
         requests/candidates it carried, and its wall time."""
@@ -159,7 +163,7 @@ class EngineStats:
         return self._score_s.value
 
     @property
-    def bucket_hits(self) -> dict[tuple[int, int, int, int], int]:
+    def bucket_hits(self) -> dict[tuple, int]:
         return {k: int(c.value) for k, c in self._hits.items()}
 
     @property
@@ -224,7 +228,12 @@ class ScoringEngine:
         self._n_buckets = tuple(sorted(n_buckets))
         self._g_buckets = tuple(sorted(g_buckets))
         self._pad_id = self._model.num_features  # original-space pad id
-        self._compiled: dict[tuple[int, int, int, int], jax.stages.Compiled] = {}
+        # executables key on the model dtype too: an int8-native engine
+        # and an fp32 engine never share (or clobber) a cache entry even
+        # when their envelopes coincide, and the dtype rides the stats/
+        # ledger envelope labels
+        self._dtype = "int8" if self._model.is_int8 else "fp32"
+        self._compiled: dict[tuple, jax.stages.Compiled] = {}
         self.stats = EngineStats()
         self._dispatch_ctx = ("direct", 0.0)  # (flush reason, queue delay us)
 
@@ -247,10 +256,10 @@ class ScoringEngine:
         n = _round_up(request.ad_ids.shape[0], self._n_buckets)
         return ku, ka, n
 
-    def _executable(self, key: tuple[int, int, int, int]):
+    def _executable(self, key: tuple):
         comp = self._compiled.get(key)
         if comp is None:
-            g, ku, ka, n = key
+            g, ku, ka, n = key[:4]
             model, mode, dedup = self._model, self._mode, self._dedup
 
             def fn(ui, uv, ai, av):
@@ -296,16 +305,16 @@ class ScoringEngine:
         """
         for ku, ka, n in envelopes:
             for g in batch_sizes:
-                self._executable((_round_up(g, self._g_buckets), ku, ka, n))
+                self._executable((_round_up(g, self._g_buckets), ku, ka, n,
+                                  self._dtype))
 
     # -------------------------------------------------------------- scoring
-    def _pad_batch(self, requests: Sequence[BundleRequest],
-                   key: tuple[int, int, int, int]):
+    def _pad_batch(self, requests: Sequence[BundleRequest], key: tuple):
         """Stack same-envelope requests into the padded batch layout:
         request s owns user row s and candidate rows [s*n, (s+1)*n); pad
         candidate rows and pad bundle slots are all-pad-id (their scores
         come out 0.5 and are sliced off)."""
-        g, ku, ka, n = key
+        g, ku, ka, n = key[:4]
         ui = np.full((g, ku), self._pad_id, np.int32)
         uv = np.zeros((g, ku), np.float32)
         ai = np.full((g * n, ka), self._pad_id, np.int32)
@@ -320,9 +329,10 @@ class ScoringEngine:
 
     def _score_chunk(self, requests: Sequence[BundleRequest],
                      env: tuple[int, int, int]) -> list[np.ndarray]:
-        """One dispatch: same-envelope requests, len <= max_batch."""
+        """One dispatch: requests fitting ``env``, len <= max_batch."""
         ku, ka, n = env
-        key = (_round_up(len(requests), self._g_buckets), ku, ka, n)
+        key = (_round_up(len(requests), self._g_buckets), ku, ka, n,
+               self._dtype)
         comp = self._executable(key)  # compile time books separately
         t0 = time.perf_counter()
         with obs.get_tracer().span("serve/dispatch", g=key[0],
@@ -374,10 +384,53 @@ class ScoringEngine:
                     results[i] = p
         return results  # type: ignore[return-value]
 
+    def score_batch_at(self, requests: Sequence[BundleRequest],
+                       env: tuple[int, int, int]) -> list[np.ndarray]:
+        """Score a wavefront at ONE caller-chosen envelope every request
+        must fit — the micro-batching queue's cross-envelope COALESCED
+        flush path: several small same-deadline groups ride one device
+        round at the widest due envelope instead of one round each.
+
+        Scores are bitwise what per-envelope dispatch returns: widening
+        a request's envelope only adds pad-id slots, which alias the
+        zero pad row and contribute exact zeros to its per-sample
+        contraction (pad candidate rows are sliced off). Wavefronts
+        bigger than ``max_batch`` split in input order.
+        """
+        ku, ka, n = env
+        for r in requests:
+            if (r.user_ids.shape[-1] > ku or r.ad_ids.shape[-1] > ka
+                    or r.ad_ids.shape[0] > n):
+                raise ValueError(
+                    f"request (Ku={r.user_ids.shape[-1]}, "
+                    f"Ka={r.ad_ids.shape[-1]}, N={r.ad_ids.shape[0]}) "
+                    f"does not fit envelope {env}")
+        out: list[np.ndarray] = []
+        for s in range(0, len(requests), self.max_batch):
+            out += self._score_chunk(requests[s:s + self.max_batch], env)
+        return out
+
     def score_many(self, requests: Sequence[BundleRequest]) -> list[np.ndarray]:
         """One-request-at-a-time replay (the un-batched baseline;
         ``score_batch`` is the traffic-shaped path)."""
         return [self.score(r) for r in requests]
+
+
+def envelope_closure(
+        envelopes: Sequence[tuple[int, int, int]]
+) -> set[tuple[int, int, int]]:
+    """Close an envelope set under elementwise max: the cross product of
+    observed component values. A coalesced flush dispatches at the
+    elementwise max of its member envelopes, which always lands in this
+    closure — warm it (with ``batch_sizes=g_buckets``) and coalesced
+    traffic keeps the zero-steady-state-recompile guarantee."""
+    envs = list(envelopes)
+    if not envs:
+        return set()
+    kus = {e[0] for e in envs}
+    kas = {e[1] for e in envs}
+    ns = {e[2] for e in envs}
+    return {(ku, ka, n) for ku in kus for ka in kas for n in ns}
 
 
 def synthetic_requests(num: int, *, num_features: int,

@@ -10,9 +10,17 @@ model argument is polymorphic:
   * a raw UNPADDED Theta ``(d, 2m)`` array,
   * ``repro.core.lsplm.LSPLMParams``,
   * a pruned :class:`~repro.serve.compress.ServingArtifact`,
-  * an int8 :class:`~repro.serve.compress.QuantizedArtifact` (dequantised
-    once at normalisation time; scoring then runs the fp32 paths on the
-    reconstructed rows — bounded-error vs fp32, see ``serve.compress``).
+  * an int8 :class:`~repro.serve.compress.QuantizedArtifact` — served
+    INT8-NATIVE: the codes/scales are kept as-is and the sparse paths
+    run the int8 gather ops (``lsplm_sparse_forward_int8`` /
+    ``sparse_gather_matmul_int8``), which DMA int8 code rows and apply
+    the per-row fp32 scale in the gather epilogue — fp32 rows are never
+    materialised, the row gather moves ~4x fewer bytes, and the scores
+    are the dequantise-then-score numbers exactly (same fp32 row values
+    enter the same contraction; bounded-error vs the unquantised fp32
+    model, see ``serve.compress``). The one exception is the DENSE path,
+    which has no gather to fuse into: it dequantises on the fly (a
+    (R, 2m) multiply per call — fine off the hot path, wasteful on it).
 
 Request formats:
 
@@ -48,10 +56,12 @@ from repro.kernels.lsplm_sparse_fused.ops import (
     finalize_p,
     logps_from_z,
     lsplm_sparse_forward,
+    lsplm_sparse_forward_int8,
     pad_theta,
     sparse_gather_matmul,
+    sparse_gather_matmul_int8,
 )
-from repro.serve.compress import QuantizedArtifact, ServingArtifact, dequantize
+from repro.serve.compress import QuantizedArtifact, ServingArtifact
 
 
 class ScoreBundle(NamedTuple):
@@ -69,12 +79,30 @@ class ScoreBundle(NamedTuple):
 
 
 class ServingModel(NamedTuple):
-    """Normalised model: kernel-ready padded Theta + optional id remap."""
+    """Normalised model: kernel-ready rows + optional id remap.
 
-    theta: jax.Array  # (D, 2m) with the trailing zero pad row
+    Exactly one of ``theta`` (fp32 models) or ``codes``/``scales``
+    (int8-native models) is set; :attr:`is_int8` is the dispatch bit the
+    scoring paths branch on."""
+
+    theta: jax.Array | None  # (D, 2m) with the trailing zero pad row
     remap: jax.Array | None  # (d+1,) int32, None for full models
     alive_ids: jax.Array | None  # (R,) int32, None for full models
     num_features: int  # original d
+    codes: jax.Array | None = None  # (D, 2m) int8, int8-native models only
+    scales: jax.Array | None = None  # (D,) fp32 row scales (pad row == 0)
+
+    @property
+    def is_int8(self) -> bool:
+        return self.codes is not None
+
+    def dense_theta(self) -> jax.Array:
+        """The padded fp32 row matrix — int8 models dequantise ON THE
+        FLY here (the dense path's documented carve-out; the sparse
+        paths never call this)."""
+        if self.codes is not None:
+            return self.codes.astype(jnp.float32) * self.scales[:, None]
+        return self.theta
 
 
 def as_model(model) -> ServingModel:
@@ -82,7 +110,12 @@ def as_model(model) -> ServingModel:
     if isinstance(model, ServingModel):
         return model
     if isinstance(model, QuantizedArtifact):
-        model = dequantize(model)
+        # int8-native: keep the codes/scales — the sparse scorers fuse
+        # the scale into the gather instead of rebuilding fp32 rows
+        return ServingModel(theta=None, remap=model.remap,
+                            alive_ids=model.alive_ids,
+                            num_features=model.num_features,
+                            codes=model.codes, scales=model.scales)
     if isinstance(model, ServingArtifact):
         return ServingModel(theta=model.theta, remap=model.remap,
                             alive_ids=model.alive_ids,
@@ -103,13 +136,28 @@ def _request_ids(model: ServingModel, ids: jax.Array) -> jax.Array:
     return jnp.take(model.remap, ids, axis=-1)
 
 
+def _z_sparse(model: ServingModel, ids, vals, *, mode, dedup, plan):
+    """Region logits for flat padded-COO rows, routed by model dtype:
+    int8-native models run the scale-fused int8 gather (plans never
+    apply — quantised models are always remapped artifacts, and plans
+    are rejected on those before this is reached)."""
+    if model.is_int8:
+        return sparse_gather_matmul_int8(ids, vals, model.codes,
+                                         model.scales, mode=mode,
+                                         dedup=dedup)
+    return sparse_gather_matmul(ids, vals, model.theta, mode=mode,
+                                dedup=dedup, plan=plan)
+
+
 def score_dense(model, x: jax.Array) -> jax.Array:
     """p(y=1|x) for dense rows x (..., d). Pruned models contract over
-    the alive columns only (<= 1e-6 vs full — see module docstring)."""
+    the alive columns only (<= 1e-6 vs full — see module docstring);
+    int8 models dequantise on the fly (no gather to fuse the scale
+    into — the dense path's carve-out)."""
     model = as_model(model)
     if model.alive_ids is not None:
         x = jnp.take(x, model.alive_ids, axis=-1)
-    return finalize_p(x @ model.theta[:-1])
+    return finalize_p(x @ model.dense_theta()[:-1])
 
 
 def score_sparse(model, ids: jax.Array, vals: jax.Array, *,
@@ -125,6 +173,10 @@ def score_sparse(model, ids: jax.Array, vals: jax.Array, *,
         raise ValueError("transpose plans address the full Theta layout; "
                          "rebuild the plan in compact space or score the "
                          "full model")
+    if model.is_int8:
+        return lsplm_sparse_forward_int8(_request_ids(model, ids), vals,
+                                         model.codes, model.scales,
+                                         mode=mode, dedup=dedup)
     return lsplm_sparse_forward(_request_ids(model, ids), vals, model.theta,
                                 mode=mode, dedup=dedup, plan=plan)
 
@@ -137,8 +189,8 @@ def score_sparse_logps(model, ids: jax.Array, vals: jax.Array, *,
     model = as_model(model)
     if plan is not None and model.remap is not None:
         raise ValueError("transpose plans address the full Theta layout")
-    z = sparse_gather_matmul(_request_ids(model, ids), vals, model.theta,
-                             mode=mode, dedup=dedup, plan=plan)
+    z = _z_sparse(model, _request_ids(model, ids), vals, mode=mode,
+                  dedup=dedup, plan=plan)
     return logps_from_z(z)
 
 
@@ -156,12 +208,11 @@ def bundle_logits(model, bundle: ScoreBundle, *, mode: str = "auto",
             and model.remap is not None:
         raise ValueError("transpose plans address the full Theta layout; "
                          "they cannot be combined with a pruned artifact")
-    z_user = sparse_gather_matmul(
-        _request_ids(model, bundle.user_ids), bundle.user_vals, model.theta,
-        mode=mode, dedup=dedup, plan=user_plan)
-    z_ad = sparse_gather_matmul(
-        _request_ids(model, bundle.ad_ids), bundle.ad_vals, model.theta,
-        mode=mode, dedup=dedup, plan=ad_plan)
+    z_user = _z_sparse(model, _request_ids(model, bundle.user_ids),
+                       bundle.user_vals, mode=mode, dedup=dedup,
+                       plan=user_plan)
+    z_ad = _z_sparse(model, _request_ids(model, bundle.ad_ids),
+                     bundle.ad_vals, mode=mode, dedup=dedup, plan=ad_plan)
     return z_user[bundle.session_id] + z_ad
 
 

@@ -14,11 +14,12 @@ What gets swept depends on the backend (``repro.tune.table.backend_key``):
   * ``cpu`` (mode auto/jnp off-TPU): ``chunk_fwd``/``chunk_bwd`` — the
     K-chunk of the ``lax.scan`` fallbacks, forward and backward
     independently (their optima differ; see ``benchmarks/bench_tune.py``).
-  * ``interpret`` (mode=interpret): ``fused_fwd`` (block_n, block_k) and
-    ``scatter`` (block_e). Interpret timings exercise the machinery and
-    pick sane pipeline shapes for CI; they are not TPU performance.
-  * ``tpu`` (mode auto/kernel on TPU): ``fused_fwd`` and ``scatter`` at
-    the production shapes.
+  * ``interpret`` (mode=interpret): ``fused_fwd`` / ``fused_fwd_int8``
+    (block_n, block_k) and ``scatter`` (block_e). Interpret timings
+    exercise the machinery and pick sane pipeline shapes for CI; they
+    are not TPU performance.
+  * ``tpu`` (mode auto/kernel on TPU): ``fused_fwd``, ``fused_fwd_int8``
+    and ``scatter`` at the production shapes.
 
 CLI (regeneration flow — see README "Autotuning"):
 
@@ -47,6 +48,7 @@ import numpy as np
 from repro import obs
 from repro.kernels.lsplm_sparse_fused.lsplm_sparse_fused import (
     lsplm_sparse_fused_forward,
+    lsplm_sparse_fused_int8_forward,
 )
 from repro.kernels.lsplm_sparse_fused.ops import (
     _chunked_zmap,
@@ -169,6 +171,45 @@ def sweep_fused(n, k, d, m, *, mode: str, reps: int = REPS,
     return rows
 
 
+def sweep_fused_int8(n, k, d, m, *, mode: str, reps: int = REPS,
+                     extra: tuple = ()) -> list[dict]:
+    """(block_n, block_k) grid for the int8-native fused forward.
+
+    The sweep model is the symmetric per-row quantisation of the fp32
+    sweep Theta (``repro.serve.compress.quantize``'s rule, inlined on a
+    plain padded Theta); the parity oracle is the ref matmul on the
+    DEQUANTISED rows, so a block size only enters the table if the
+    int8 pipeline reproduces the dequantise-then-score numbers."""
+    ids, vals, tp, _ = _make(n, k, d, m)
+    th = np.asarray(tp)
+    amax = np.abs(th).max(axis=1)
+    scales = (amax / 127.0).astype(np.float32)  # pad row stays scale 0
+    safe = np.where(scales > 0, scales, 1.0)
+    codes = np.rint(th / safe[:, None]).astype(np.int8)
+    ref = sparse_matmul_ref(
+        ids, vals, jnp.asarray(codes.astype(np.float32) * scales[:, None]))
+    codes, scales = jnp.asarray(codes), jnp.asarray(scales)
+    grid = [(bn, bk) for bn in BLOCK_N_GRID if bn <= n
+            for bk in BLOCK_K_GRID if bk <= k]
+    grid = sorted(set(grid) | {e for e in extra if e[0] <= n and e[1] <= k})
+
+    def make_fn(cfg):
+        bn, bk = cfg
+
+        def fn(i, v, c, s):
+            _, z = lsplm_sparse_fused_int8_forward(
+                i, v, c, s, block_n=bn, block_k=bk,
+                interpret=mode == "interpret")
+            return z
+
+        return fn, (ids, vals, codes, scales)
+
+    rows = _sweep_rows(grid, make_fn, ref, reps=reps)
+    for r in rows:
+        r["config"] = {"block_n": r["config"][0], "block_k": r["config"][1]}
+    return rows
+
+
 def sweep_scatter(n, k, d, m, *, mode: str, reps: int = REPS,
                   extra: tuple = ()) -> tuple[list[dict], int]:
     """block_e grid for the Pallas run-length scatter; returns
@@ -240,7 +281,7 @@ def kernels_for_backend(backend: str) -> tuple[str, ...]:
     """Which table kernels matter on a backend: Pallas block sizes where
     the kernels actually compile/interpret, scan chunks elsewhere."""
     if backend in ("interpret", "tpu"):
-        return ("fused_fwd", "scatter")
+        return ("fused_fwd", "fused_fwd_int8", "scatter")
     return ("chunk_fwd", "chunk_bwd")
 
 
@@ -256,6 +297,8 @@ def sweep_shapes(shapes, *, mode: str = "auto", reps: int = REPS,
         for kernel in kernels_for_backend(backend):
             if kernel == "fused_fwd":
                 rows = sweep_fused(n, k, d, m, mode=mode, reps=reps)
+            elif kernel == "fused_fwd_int8":
+                rows = sweep_fused_int8(n, k, d, m, mode=mode, reps=reps)
             elif kernel == "scatter":
                 rows, kept = sweep_scatter(n, k, d, m, mode=mode, reps=reps)
                 env_k = tabmod.scatter_envelope(kept, m2)
@@ -296,11 +339,14 @@ def check_table(shapes, committed: tabmod.AutotuneTable, *,
                 failures.append(f"{backend}/{kernel}/{env}: no committed entry")
                 continue
             extra = (tuple(cfg[p] for p in ("block_n", "block_k"))
-                     if kernel == "fused_fwd"
+                     if kernel in ("fused_fwd", "fused_fwd_int8")
                      else tuple(cfg.values()))
             if kernel == "fused_fwd":
                 rows = sweep_fused(n, k, d, m, mode=mode, reps=reps,
                                    extra=(extra,))
+            elif kernel == "fused_fwd_int8":
+                rows = sweep_fused_int8(n, k, d, m, mode=mode, reps=reps,
+                                        extra=(extra,))
             elif kernel == "scatter":
                 rows, _ = sweep_scatter(n, k, d, m, mode=mode, reps=reps,
                                         extra=extra)

@@ -8,10 +8,12 @@ keyed on ``(backend, kernel, shape envelope)``:
   * **backend** — ``"interpret"`` for interpret-mode Pallas runs, else
     ``jax.default_backend()`` (``"cpu"``, ``"tpu"``, ...). A config swept
     on one backend never leaks onto another.
-  * **kernel** — one of :data:`KERNEL_PARAMS`: ``"fused_fwd"``
-    (block_n, block_k), ``"scatter"`` (block_e), ``"chunk_fwd"`` /
-    ``"chunk_bwd"`` (chunk — forward and backward scans tune
-    independently; their optimal chunks differ, see
+  * **kernel** — one of :data:`KERNEL_PARAMS`: ``"fused_fwd"`` /
+    ``"fused_fwd_int8"`` (block_n, block_k — the int8-native gather
+    variant tunes independently: its row DMAs move 4x fewer bytes, so
+    its pipeline optimum need not match fp32), ``"scatter"`` (block_e),
+    ``"chunk_fwd"`` / ``"chunk_bwd"`` (chunk — forward and backward
+    scans tune independently; their optimal chunks differ, see
     ``benchmarks/bench_tune.py``).
   * **envelope** — the shape bucket, rounded with the same
     :func:`round_up` rule the serving engine uses for its executable
@@ -52,6 +54,7 @@ E_BUCKETS = (4096, 16384, 65536, 262144, 1048576, 4194304)
 # kernel name -> the config keys a table entry for it must carry
 KERNEL_PARAMS: dict[str, tuple[str, ...]] = {
     "fused_fwd": ("block_n", "block_k"),
+    "fused_fwd_int8": ("block_n", "block_k"),
     "scatter": ("block_e",),
     "chunk_fwd": ("chunk",),
     "chunk_bwd": ("chunk",),
@@ -62,6 +65,7 @@ KERNEL_PARAMS: dict[str, tuple[str, ...]] = {
 # every tuned config is benched against
 BUILTIN_DEFAULTS: dict[str, dict[str, int]] = {
     "fused_fwd": {"block_n": 256, "block_k": 8},
+    "fused_fwd_int8": {"block_n": 256, "block_k": 8},
     "scatter": {"block_e": 1024},
     "chunk_fwd": {"chunk": 8},
     "chunk_bwd": {"chunk": 8},
@@ -69,8 +73,8 @@ BUILTIN_DEFAULTS: dict[str, dict[str, int]] = {
 
 # every overridable knob, with the kernels it applies to
 _PARAM_KERNELS = {
-    "block_n": ("fused_fwd",),
-    "block_k": ("fused_fwd",),
+    "block_n": ("fused_fwd", "fused_fwd_int8"),
+    "block_k": ("fused_fwd", "fused_fwd_int8"),
     "block_e": ("scatter",),
     "chunk": ("chunk_fwd", "chunk_bwd"),
 }

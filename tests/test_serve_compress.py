@@ -287,6 +287,118 @@ def test_quantize_dropped_ids_still_hit_pad_row():
         np.asarray(score_sparse(q, ids, vals)))
 
 
+def test_int8_native_matches_dequantized_scoring():
+    """The int8-NATIVE path (codes/scales straight into the scale-fused
+    gather) reproduces dequantize-then-score to <= 1e-6 on every sparse
+    path and mode — the same fp32 row values enter the contraction, the
+    only daylight is reassociation inside the kernel."""
+    d = 700
+    theta = _sparsified_theta(d, 4, nnz=0.15, seed=31)
+    q = quantize(compress(theta))
+    deq = dequantize(q)  # fp32 rows, scored on the fp32 kernels
+    native = as_model(q)
+    assert native.is_int8 and native.theta is None
+    ids, vals = _requests(d, n=48, k=7, seed=32)
+    for mode in ("auto", "interpret"):
+        np.testing.assert_allclose(
+            np.asarray(score_sparse(deq, ids, vals, mode=mode)),
+            np.asarray(score_sparse(native, ids, vals, mode=mode)),
+            rtol=1e-6, atol=1e-6)
+    batch = generate_sparse(num_features=d,
+                            num_user_features_range=(d // 2, d),
+                            sessions=10, seed=33, with_plans=False)
+    bundle = ScoreBundle(batch.user_ids, batch.user_vals,
+                         batch.ad_ids, batch.ad_vals, batch.session_id)
+    np.testing.assert_allclose(
+        np.asarray(score_bundles(deq, bundle)),
+        np.asarray(score_bundles(native, bundle)),
+        rtol=1e-6, atol=1e-6)
+    # dense carve-out: on-the-fly dequantise is the same rows too
+    x = jnp.asarray(to_dense(batch))
+    np.testing.assert_allclose(
+        np.asarray(score_dense(deq, x)), np.asarray(score_dense(native, x)),
+        rtol=1e-6, atol=1e-6)
+
+
+def test_quantize_m1_single_region_pair():
+    """Smallest model shape: m=1 (one softmax/sigmoid column pair per
+    row). Quantise/dequantise keeps the error bound and int8-native
+    scoring still matches."""
+    d = 120
+    theta = _sparsified_theta(d, 1, nnz=0.4, seed=34)
+    art = compress(theta)
+    q = quantize(art)
+    assert q.codes.shape == (art.theta.shape[0], 2)
+    th = np.asarray(art.theta)
+    rec = np.asarray(dequantize(q).theta)
+    bound = np.abs(th).max(axis=1, keepdims=True) / 254.0
+    assert (np.abs(rec - th) <= bound + 1e-12).all()
+    ids, vals = _requests(d, n=16, k=5, seed=35)
+    np.testing.assert_allclose(
+        np.asarray(score_sparse(dequantize(q), ids, vals)),
+        np.asarray(score_sparse(q, ids, vals)), rtol=1e-6, atol=1e-6)
+
+
+def test_quantize_subnormal_and_huge_rows():
+    """Extreme row magnitudes: a subnormal-max row must not divide by a
+    zero-flushed scale (codes stay finite, the row reconstructs to ~0),
+    and a huge-magnitude row must keep codes in [-127, 127] with the
+    max-|entry| column hitting +-127 exactly."""
+    m = 2
+    theta = np.zeros((6, 2 * m), np.float32)
+    theta[0] = 1e-38  # subnormal-ish max: scale underflows toward 0
+    theta[1, 0] = 3e38  # near-fp32-max magnitude
+    theta[1, 1] = -3e38
+    theta[2] = 1.0
+    q = quantize(compress(jnp.asarray(theta), threshold=0.0))
+    codes = np.asarray(q.codes)
+    scales = np.asarray(q.scales)
+    assert np.isfinite(scales).all()
+    assert (np.abs(codes) <= 127).all()
+    # the extreme row's max-magnitude entries quantise to exactly +-127
+    alive = np.asarray(q.alive_ids)
+    huge = int(np.flatnonzero(alive == 1)[0])
+    assert codes[huge].max() == 127 and codes[huge].min() == -127
+    rec = np.asarray(dequantize(q).theta)
+    assert np.isfinite(rec).all()
+    # reconstruction error bound holds even at the extremes
+    th = np.asarray(compress(jnp.asarray(theta), threshold=0.0).theta)
+    bound = np.abs(th).max(axis=1, keepdims=True) / 254.0 + 1e-12
+    assert (np.abs(rec - th) <= bound).all()
+
+
+def test_quantized_artifact_embedded_drift_ref_roundtrip(tmp_path):
+    """One deploy file carries the int8 artifact AND the training-time
+    drift reference: load_artifact auto-detects the quantised form
+    untouched, load_drift_reference reads the same file."""
+    from repro import obs
+
+    d = 300
+    theta = _sparsified_theta(d, 2, nnz=0.2, seed=36)
+    q = quantize(compress(theta))
+    rng = np.random.default_rng(37)
+    scores = rng.random(256)
+    labels = (rng.random(256) < scores).astype(np.float32)
+    ids = rng.integers(0, d, 2048)
+    ref = obs.capture_reference(scores, labels, ids, num_features=d)
+    path = save_artifact(str(tmp_path / "deploy_int8"), q, drift_ref=ref)
+    loaded = load_artifact(path)
+    assert isinstance(loaded, QuantizedArtifact)
+    np.testing.assert_array_equal(np.asarray(loaded.codes),
+                                  np.asarray(q.codes))
+    np.testing.assert_array_equal(np.asarray(loaded.scales),
+                                  np.asarray(q.scales))
+    back = obs.load_drift_reference(path)
+    np.testing.assert_array_equal(back.score_edges, ref.score_edges)
+    np.testing.assert_array_equal(back.score_counts, ref.score_counts)
+    assert back.num_features == d
+    # and the embedded reference didn't leak into the served scores
+    ids_r, vals_r = _requests(d, n=12, k=5, seed=38)
+    np.testing.assert_array_equal(np.asarray(score_sparse(q, ids_r, vals_r)),
+                                  np.asarray(score_sparse(loaded, ids_r,
+                                                          vals_r)))
+
+
 def test_quantize_size_accounting():
     """deployed_bytes counts int8 codes + fp32 scales/remap/alive_ids;
     the ROWS payload shrinks ~4x at production region counts."""

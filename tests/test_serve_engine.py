@@ -208,3 +208,83 @@ def test_batched_envelope_compiles_key_on_g(theta):
     eng.score_batch(reqs[:2])  # cached
     eng.score(reqs[3])  # cached
     assert eng.stats.compiles == 3
+
+
+# ------------------------------------------------- forced envelopes
+def test_score_batch_at_bitwise_matches_natural_envelopes(theta):
+    """Forcing a mixed wavefront onto one wide envelope (the coalesced
+    dispatch primitive) returns the SAME numbers as per-envelope
+    dispatch: widening only adds pad slots, which alias the zero pad
+    row."""
+    small = synthetic_requests(3, num_features=D, k_user=(4, 4), k_ad=(3, 3),
+                               n_ads=(2, 2), seed=15)
+    big = synthetic_requests(2, num_features=D, k_user=(20, 20), k_ad=(9, 9),
+                             n_ads=(12, 12), seed=16)
+    mixed = [small[0], big[0], small[1], big[1], small[2]]
+    eng = ScoringEngine(theta)
+    widest = tuple(max(eng.envelope(r)[i] for r in mixed) for i in range(3))
+    got = eng.score_batch_at(mixed, widest)
+    assert eng.stats.dispatches == 1  # the whole wavefront in one round
+    for r, p in zip(mixed, got):
+        assert p.shape == (r.ad_ids.shape[0],)
+        np.testing.assert_array_equal(p, ScoringEngine(theta).score(r))
+
+
+def test_score_batch_at_rejects_overflowing_requests(theta):
+    reqs = synthetic_requests(2, num_features=D, k_user=(12, 12), k_ad=(6, 6),
+                              n_ads=(8, 8), seed=17)
+    eng = ScoringEngine(theta)
+    with pytest.raises(ValueError):
+        eng.score_batch_at(reqs, (8, 8, 8))  # Ku 12 > forced Ku 8
+
+
+# ------------------------------------------------------- int8-native
+def test_int8_engine_parity_and_dtype_keyed_cache(theta):
+    """An engine built straight on a QuantizedArtifact serves int8-
+    native: scores match the dequantized fp32 engine to <= 1e-6 and stay
+    within |dp| <= 1e-2 of the unquantised model, while the executable
+    cache keys on dtype (no sharing, no clobbering)."""
+    from repro.serve import dequantize, quantize
+
+    q = quantize(compress(theta))
+    reqs = synthetic_requests(12, num_features=D, seed=18)
+    eng_i8 = ScoringEngine(q)
+    eng_deq = ScoringEngine(dequantize(q))
+    eng_fp = ScoringEngine(theta)
+    assert eng_i8._dtype == "int8" and eng_deq._dtype == "fp32"
+    for r in reqs:
+        p_i8 = eng_i8.score(r)
+        np.testing.assert_allclose(p_i8, eng_deq.score(r),
+                                   rtol=1e-6, atol=1e-6)
+        assert np.abs(p_i8 - eng_fp.score(r)).max() <= 1e-2
+    # batched path too
+    for a, b in zip(eng_i8.score_batch(reqs), eng_deq.score_batch(reqs)):
+        np.testing.assert_allclose(a, b, rtol=1e-6, atol=1e-6)
+    # dtype rides the cache key and the stats labels
+    assert all(k[-1] == "int8" for k in eng_i8._compiled)
+    assert all(k[-1] == "fp32" for k in eng_deq._compiled)
+    assert all(k[-1] == "int8" for k in eng_i8.stats.bucket_hits)
+
+
+def test_int8_engine_zero_recompiles_on_randomized_replay(theta):
+    """The steady-state guarantee holds unchanged for int8-native
+    engines: warm the (envelope x g_bucket) grid once, then shuffled
+    replays never recompile."""
+    from repro.serve import quantize
+
+    rng = np.random.default_rng(19)
+    eng = ScoringEngine(quantize(compress(theta)))
+    reqs = synthetic_requests(30, num_features=D, seed=20)
+    eng.warm({eng.envelope(r) for r in reqs}, batch_sizes=eng.g_buckets)
+    warm = eng.stats.compiles
+    first = {}
+    for _ in range(3):
+        order = rng.permutation(len(reqs))
+        eng.score_batch([reqs[i] for i in order])
+        for i in order:
+            p = eng.score(reqs[i])
+            if i in first:
+                np.testing.assert_array_equal(p, first[i])
+            else:
+                first[i] = p
+    assert eng.stats.compiles == warm, "int8 steady state recompiled"

@@ -1,8 +1,12 @@
 """Micro-batching queue + open-loop load generator: flush triggers
-(full / deadline / drain), admission control, the virtual-clock server
-model (sealed batches, serial service, monotonic completions), score
-parity with direct engine calls, Poisson arrival statistics, and the
-replay report's steady-state zero-recompile guarantee."""
+(full / deadline / drain / coalesced), admission control, the
+virtual-clock server model (sealed batches, serial service, monotonic
+completions), score parity with direct engine calls (coalesced rounds
+bitwise vs per-envelope), the wall-clock pump, queue-derived g_buckets,
+Poisson arrival statistics, and the replay report's steady-state
+zero-recompile guarantee."""
+import time
+
 import numpy as np
 import jax.numpy as jnp
 import pytest
@@ -10,8 +14,10 @@ import pytest
 from repro.serve import (
     MicroBatchQueue,
     QueueConfig,
+    RealClockPump,
     ScoringEngine,
     compress,
+    derive_g_buckets,
     poisson_arrivals,
     replay_open_loop,
     synthetic_requests,
@@ -45,7 +51,9 @@ def test_full_flush_at_max_batch(engine):
     assert q.pending == 0
     assert len(q.completions) == 3
     assert all(c.reason == "full" for c in q.completions)
-    assert q.stats.flushes == {"full": 1, "deadline": 0, "drain": 0}
+    assert q.stats.flushes == {"full": 1, "deadline": 0, "drain": 0,
+                               "coalesced": 0}
+    assert q.stats.flush_sizes == {3: 1}
 
 
 def test_deadline_flush(engine):
@@ -120,6 +128,151 @@ def test_queue_scores_match_direct_engine(engine):
         np.testing.assert_array_equal(c.scores, fresh.score(r))
         assert c.completed >= c.started >= c.arrival
         assert c.latency_us > 0
+
+
+# ------------------------------------------------------- coalesced flush
+def _mixed_envelope_run(eng, reqs, arrivals, *, coalesce, max_batch=8):
+    q = MicroBatchQueue(eng, QueueConfig(max_batch=max_batch,
+                                         max_delay_us=2000.0,
+                                         coalesce=coalesce))
+    for t, r in zip(arrivals, reqs):
+        q.flush_due(t)
+        q.submit(r, t)
+    q.flush_due(arrivals[-1] + 1.0)
+    q.drain(arrivals[-1] + 1.0)
+    return q
+
+
+def test_coalesced_dispatch_bitwise_matches_per_envelope(engine):
+    """Same arrivals, coalesce on vs off: every ticket's scores are
+    BITWISE identical (widening to the max due envelope only adds pad
+    slots) and coalescing strictly reduces device rounds."""
+    reqs = synthetic_requests(24, num_features=D, seed=11)
+    arrivals = poisson_arrivals(len(reqs), qps=500.0, seed=12)
+    q_off = _mixed_envelope_run(ScoringEngine(engine._model), reqs,
+                                arrivals, coalesce=False)
+    q_on = _mixed_envelope_run(ScoringEngine(engine._model), reqs,
+                               arrivals, coalesce=True)
+    off = {c.ticket: c.scores for c in q_off.completions}
+    on = {c.ticket: c.scores for c in q_on.completions}
+    assert off.keys() == on.keys() and len(off) == len(reqs)
+    for t in off:
+        np.testing.assert_array_equal(off[t], on[t])
+    assert q_on.stats.flushes["coalesced"] > 0
+    assert sum(q_on.stats.flushes.values()) < sum(q_off.stats.flushes.values())
+    # every coalesced round merged >= 2 groups
+    assert q_on.stats.coalesced_groups >= 2 * q_on.stats.flushes["coalesced"]
+    assert all(c.reason in ("full", "deadline", "drain", "coalesced")
+               for c in q_on.completions)
+
+
+def test_coalesced_flush_respects_max_batch(engine):
+    """Groups merge only while the combined round fits max_batch; the
+    overflow group flushes on its own deadline instead."""
+    q = MicroBatchQueue(engine, QueueConfig(max_batch=3, max_delay_us=1000.0,
+                                            coalesce=True))
+    for r in _uniform_requests(2, ku=4, seed=21):
+        q.submit(r, 0.0)
+    for r in _uniform_requests(2, ku=20, seed=22):
+        q.submit(r, 0.0)
+    done = q.flush_due(1.0)
+    assert len(done) == 4 and q.pending == 0
+    sizes = [len({c.started for c in done if c.reason == r})
+             for r in ("coalesced", "deadline")]
+    # one coalesced round couldn't fit both 2-request groups (2+2 > 3):
+    # the first group went out alone as a deadline flush, leaving one
+    # group -> also a plain deadline flush (coalescing needs >= 2 due)
+    assert q.stats.flushes["coalesced"] == 0 and sizes[1] == 2
+    # with room for both, one round serves all four
+    q2 = MicroBatchQueue(engine, QueueConfig(max_batch=4, max_delay_us=1000.0,
+                                             coalesce=True))
+    for r in _uniform_requests(2, ku=4, seed=21):
+        q2.submit(r, 0.0)
+    for r in _uniform_requests(2, ku=20, seed=22):
+        q2.submit(r, 0.0)
+    done2 = q2.flush_due(1.0)
+    assert len(done2) == 4
+    assert q2.stats.flushes["coalesced"] == 1
+    assert q2.stats.coalesced_groups == 2
+    assert len({c.started for c in done2}) == 1  # one device round
+
+
+def test_coalesce_off_by_default(engine):
+    assert QueueConfig().coalesce is False
+
+
+# ----------------------------------------------------------- wall clock
+def test_real_clock_pump_serves_and_drains_deterministically(engine):
+    """The pump's timer thread fires deadline flushes on wall time and
+    stop() joins-then-drains: afterwards every accepted request has a
+    completion with direct-engine scores, whatever the thread timing."""
+    reqs = synthetic_requests(10, num_features=D, seed=31)
+    eng = ScoringEngine(engine._model)
+    eng.warm({eng.envelope(r) for r in reqs}, batch_sizes=eng.g_buckets)
+    q = MicroBatchQueue(eng, QueueConfig(max_batch=4, max_delay_us=3000.0))
+    with RealClockPump(q) as pump:
+        tickets = [pump.submit(r) for r in reqs]
+    assert all(t is not None for t in tickets)
+    comps = {c.ticket: c for c in q.completions}
+    assert sorted(comps) == sorted(tickets)
+    fresh = ScoringEngine(engine._model)
+    for t, r in zip(tickets, reqs):
+        np.testing.assert_array_equal(comps[t].scores, fresh.score(r))
+    assert pump._thread is None  # joined
+    assert pump.stop() == []  # idempotent, nothing left to drain
+
+
+def test_real_clock_pump_deadline_fires_without_further_submits(engine):
+    """A lone queued request must flush from the timer thread alone."""
+    req = _uniform_requests(1, seed=41)[0]
+    eng = ScoringEngine(engine._model)
+    eng.warm({eng.envelope(req)}, batch_sizes=eng.g_buckets)
+    q = MicroBatchQueue(eng, QueueConfig(max_batch=8, max_delay_us=2000.0))
+    pump = RealClockPump(q).start()
+    try:
+        pump.submit(req)
+        deadline = 2e-3
+        for _ in range(200):  # ~2s budget for the 2ms deadline
+            if pump.completions():
+                break
+            time.sleep(0.01)
+        comps = pump.completions()
+        assert len(comps) == 1 and comps[0].reason == "deadline"
+        assert comps[0].completed - comps[0].arrival >= deadline
+    finally:
+        pump.stop()
+    with pytest.raises(RuntimeError):
+        RealClockPump(q).start().start()
+
+
+# ------------------------------------------------- g_buckets autoscaling
+def test_derive_g_buckets_from_flush_mix():
+    # pow2 rounding, {1} always present, top edge covers the max size
+    assert derive_g_buckets({1: 3, 3: 5, 7: 50}) == (1, 4, 8)
+    assert derive_g_buckets({2: 10}) == (1, 2)
+    # cap keeps the most frequent edges + the top
+    got = derive_g_buckets({1: 9, 2: 8, 3: 7, 5: 6, 9: 5, 17: 1},
+                           max_buckets=4)
+    assert got[0] == 1 and got[-1] == 32 and len(got) == 4
+    assert 2 in got  # most frequent non-forced edge survives
+    # no observations -> builtin default
+    from repro.serve.engine import DEFAULT_G_BUCKETS
+    assert derive_g_buckets({}) == DEFAULT_G_BUCKETS
+    with pytest.raises(TypeError):
+        derive_g_buckets([(1, 2)])
+
+
+def test_derive_g_buckets_accepts_queue_stats_and_warns(engine, capsys):
+    q = MicroBatchQueue(engine, QueueConfig(max_batch=3, max_delay_us=1e6))
+    for r in _uniform_requests(6, seed=51):
+        q.submit(r, 0.0)
+    q.drain(0.0)
+    assert q.stats.flush_sizes == {3: 2}
+    assert derive_g_buckets(q.stats) == (1, 4)
+    assert "saturate" in capsys.readouterr().out  # all flushes at the top
+    # an unsaturated mix stays quiet
+    derive_g_buckets({1: 99, 8: 1})
+    assert "saturate" not in capsys.readouterr().out
 
 
 # ------------------------------------------------------------ arrivals
